@@ -1,0 +1,74 @@
+"""Chain-length limit sweep (paper 5.7.3).
+
+The CH limit bounds search read operations per stream.  Sweeping the limit
+shows the trade-off the paper describes: higher limits defer CH→S
+conversions (cheaper construction) at the price of more read ops per
+search, until the limit where "search time is not changed" (the paper
+picked 9).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import World, build_index_set, make_world
+
+
+def run(scale: float = 0.25, world: World = None) -> List[Dict]:
+    # many parts => many in-place updates => chains actually grow (5.7.3)
+    world = world or make_world(scale, n_parts=6)
+    rows: List[Dict] = []
+    for limit in (2, 3, 5, 9, 15):
+        ts = build_index_set(world, "set2", chain_limit=limit)
+        idx = ts.indexes["known"]
+        build_ops = idx.mgr.device.stats.total_ops
+        ch_ops, all_ops = [], []
+        for key, e in idx.dict.entries.items():
+            if e.kind == "em":
+                continue
+            n = idx.lookup_ops(key)
+            all_ops.append(n)
+            if e.kind == "own" and idx.mgr.streams[e.sid].state == "ch":
+                ch_ops.append(n)
+        tagged_ch = [
+            len(s.segments)
+            for s in idx.mgr.streams.values()
+            if s.state == "ch"
+        ]
+        conv = idx.mgr.transitions.get(("ch", "s"), 0)
+        rows.append(
+            {
+                "bench": "chain_sweep",
+                "chain_limit": limit,
+                "build_ops": build_ops,
+                "mean_search_ops": float(np.mean(all_ops)) if all_ops else 0.0,
+                "max_chain_segments": int(np.max(tagged_ch)) if tagged_ch else 0,
+                "ch_to_s_conversions": conv,
+            }
+        )
+    return rows
+
+
+def main(scale: float = 0.25) -> None:
+    rows = run(scale)
+    print(
+        f"{'limit':>5s} {'build_ops':>10s} {'mean_search':>12s} "
+        f"{'max_chain_seg':>14s} {'CH->S':>6s}"
+    )
+    for r in rows:
+        print(
+            f"{r['chain_limit']:>5d} {r['build_ops']:>10,} "
+            f"{r['mean_search_ops']:>12.2f} {r['max_chain_segments']:>14d} "
+            f"{r['ch_to_s_conversions']:>6d}"
+        )
+    # 5.7.3: the number of segments in any chain never exceeds the limit,
+    # and lower limits force more CH->S conversions
+    assert all(r["max_chain_segments"] <= r["chain_limit"] for r in rows), rows
+    assert rows[0]["ch_to_s_conversions"] >= rows[-1]["ch_to_s_conversions"], rows
+    print("PASS  chain length bounded by limit; conversions fall as limit rises")
+
+
+if __name__ == "__main__":
+    main()

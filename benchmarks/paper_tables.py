@@ -1,0 +1,108 @@
+"""Tables 2 and 3 (paper section 6.5): construction I/O per index type,
+for the three strategy sets:
+
+  1. C1+EM+PART+S+FL+TAG
+  2. set 1 + CH + SR
+  3. set 2 + DS
+
+The collection is indexed in two parts (build + in-place update), exactly
+like the paper's experiment.  Reported per measured index: total bytes
+moved and total I/O operations.  The reproduced *claims* (checked by
+``run.py`` and the test suite):
+
+  * set2 bytes   < set1 bytes       (CH+SR cut FL waste and tail re-reads)
+  * set2 ops     < set1 ops         (coalesced chains, full-cluster writes)
+  * set3 write_ops << set2 write_ops (DS packs scattered small writes)
+  * set3 bytes   ~= set2 bytes      (DS barely changes byte volume)
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.common import World, build_index_set, make_world
+from repro.core.text_index import INDEX_NAMES
+
+SETS = ("set1", "set2", "set3")
+
+
+def run(scale: float = 1.0, world: World = None) -> List[Dict]:
+    world = world or make_world(scale)
+    rows: List[Dict] = []
+    per_set = {}
+    for setname in SETS:
+        ts = build_index_set(world, setname)
+        table = ts.table_rows()
+        per_set[setname] = table
+        census = ts.census()
+        for index_name in INDEX_NAMES:
+            r = table[index_name]
+            rows.append(
+                {
+                    "bench": "paper_tables",
+                    "set": setname,
+                    "index": index_name,
+                    "total_bytes": r["total_bytes"],
+                    "total_ops": r["total_ops"],
+                    "read_ops": r["read_ops"],
+                    "write_ops": r["write_ops"],
+                    "states": dict(census[index_name]),
+                }
+            )
+    return rows
+
+
+def check_claims(rows: List[Dict]) -> List[str]:
+    """Assert the paper's qualitative claims; return human-readable verdicts."""
+    agg = {}
+    for r in rows:
+        a = agg.setdefault(r["set"], {"bytes": 0, "ops": 0, "write_ops": 0})
+        a["bytes"] += r["total_bytes"]
+        a["ops"] += r["total_ops"]
+        a["write_ops"] += r["write_ops"]
+    verdicts = []
+
+    def claim(name, ok):
+        verdicts.append(f"{'PASS' if ok else 'FAIL'}  {name}")
+        return ok
+
+    claim(
+        f"Table2: set2 bytes < set1 bytes "
+        f"({agg['set2']['bytes']:,} < {agg['set1']['bytes']:,})",
+        agg["set2"]["bytes"] < agg["set1"]["bytes"],
+    )
+    claim(
+        f"Table3: set2 ops < set1 ops "
+        f"({agg['set2']['ops']:,} < {agg['set1']['ops']:,})",
+        agg["set2"]["ops"] < agg["set1"]["ops"],
+    )
+    claim(
+        f"Table3: set3 write_ops < set2 write_ops "
+        f"({agg['set3']['write_ops']:,} < {agg['set2']['write_ops']:,})",
+        agg["set3"]["write_ops"] < agg["set2"]["write_ops"],
+    )
+    ratio = agg["set3"]["bytes"] / max(1, agg["set2"]["bytes"])
+    claim(
+        f"Table2: set3 bytes ~= set2 bytes (ratio {ratio:.3f})",
+        0.9 < ratio < 1.15,
+    )
+    return verdicts
+
+
+def main(scale: float = 1.0) -> None:
+    rows = run(scale)
+    hdr = f"{'set':6s} {'index':9s} {'bytes':>14s} {'ops':>10s} {'r_ops':>8s} {'w_ops':>8s}"
+    print(hdr)
+    for r in rows:
+        print(
+            f"{r['set']:6s} {r['index']:9s} {r['total_bytes']:>14,} "
+            f"{r['total_ops']:>10,} {r['read_ops']:>8,} {r['write_ops']:>8,}"
+        )
+    for v in check_claims(rows):
+        print(v)
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(float(sys.argv[1]) if len(sys.argv) > 1 else 1.0)

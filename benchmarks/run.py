@@ -1,0 +1,134 @@
+"""Benchmark harness: one bench per paper table/figure + system benches.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.run [--scale S] [--only name,...]
+
+Benches:
+    paper_tables  — Tables 2 and 3 (I/O bytes and ops, 3 strategy sets)
+    chain_sweep   — section 5.7.3 chain-limit trade-off
+    lifecycle     — Fig. 8 stream state distribution
+    search_speed  — section 6.1 additional-index speedups
+    paged_kv      — TPU adaptation: paged KV allocator behaviour
+    kernels       — Pallas kernel microbenches (interpret mode) vs refs
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+
+def _bench_paper_tables(scale):
+    from benchmarks import paper_tables
+
+    rows = paper_tables.run(scale)
+    verdicts = paper_tables.check_claims(rows)
+    return rows, verdicts
+
+
+def _bench_chain_sweep(scale):
+    from benchmarks import chain_sweep
+
+    rows = chain_sweep.run(min(scale, 0.5))
+    ok = all(r["max_chain_segments"] <= r["chain_limit"] for r in rows)
+    return rows, [f"{'PASS' if ok else 'FAIL'}  chain length bounded by limit"]
+
+
+def _bench_lifecycle(scale):
+    from benchmarks import lifecycle
+
+    rows = lifecycle.run(min(scale, 0.5))
+    ok1 = all(r.get("state_sr0", 0) == 0 for r in rows if r["set"] == "set1")
+    ok2 = all(r.get("state_part", 0) == 0 for r in rows if r["set"] == "set2")
+    return rows, [f"{'PASS' if (ok1 and ok2) else 'FAIL'}  Fig. 8 lifecycle paths"]
+
+
+def _bench_search_speed(scale):
+    from benchmarks import search_speed
+
+    rows = search_speed.run(min(scale, 0.5))
+    ok = all(r["agree"] for r in rows)
+    fast = [
+        r["scan_speedup"]
+        for r in rows
+        if r["class"] in ("stop_pair", "stop_triple", "freq_other", "freq_freq")
+    ]
+    ok &= min(fast) > 3
+    return rows, [
+        f"{'PASS' if ok else 'FAIL'}  additional-index speedup "
+        f"(min {min(fast):.0f}x, max {max(fast):.0f}x)"
+    ]
+
+
+def _bench_paged_kv(scale):
+    from benchmarks import paged_kv_bench
+
+    return paged_kv_bench.run(scale)
+
+
+def _bench_kernels(scale):
+    from benchmarks import kernel_bench
+
+    return kernel_bench.run(scale)
+
+
+BENCHES = {
+    "paper_tables": _bench_paper_tables,
+    "chain_sweep": _bench_chain_sweep,
+    "lifecycle": _bench_lifecycle,
+    "search_speed": _bench_search_speed,
+    "paged_kv": _bench_paged_kv,
+    "kernels": _bench_kernels,
+}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=1.0)
+    ap.add_argument("--only", type=str, default="")
+    ap.add_argument("--json", type=str, default="")
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(BENCHES)
+
+    all_rows = []
+    verdicts = []
+    failed = []
+    for name in names:
+        fn = BENCHES[name]
+        print(f"\n=== bench: {name} (scale={args.scale}) " + "=" * 30)
+        t0 = time.time()
+        try:
+            rows, vds = fn(args.scale)
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+            continue
+        dt = time.time() - t0
+        for r in rows:
+            all_rows.append(r)
+            compact = {
+                k: v for k, v in r.items() if not isinstance(v, dict)
+            }
+            print("  " + json.dumps(compact, default=str))
+        for v in vds:
+            print("  " + v)
+            verdicts.append((name, v))
+        print(f"  [{dt:.1f}s]")
+
+    print("\n=== summary " + "=" * 40)
+    for name, v in verdicts:
+        print(f"{name:14s} {v}")
+    n_fail = len(failed) + sum(1 for _, v in verdicts if v.startswith("FAIL"))
+    print(f"\n{len(verdicts)} claims checked, {n_fail} failures"
+          + (f" (errored: {failed})" if failed else ""))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(all_rows, f, default=str, indent=1)
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,98 @@
+"""Search speed: additional indexes vs ordinary index (paper 6.1).
+
+The paper's motivating claim: proximity queries containing frequently used
+words are orders of magnitude cheaper through the (w,v) and stop-sequence
+indexes than through the ordinary inverted index.  We measure postings
+scanned, search I/O ops, and wall time per query class.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import World, build_index_set, make_world
+from repro.core.lexicon import FREQUENT, OTHER, STOP
+from repro.core.proximity import ProximityEngine
+
+
+def _words_of_class(lex, cls, n, rng):
+    ids = [
+        int(w)
+        for w in range(lex.n_words)
+        if lex.lemma1[w] >= 0 and lex.lemma_class[lex.lemma1[w]] == cls
+    ]
+    rng.shuffle(ids)
+    return ids[:n]
+
+
+def run(scale: float = 0.5, world: World = None) -> List[Dict]:
+    world = world or make_world(scale)
+    ts = build_index_set(world, "set2", build_ordinary_all=True)
+    eng = ProximityEngine(ts, window=3)
+    lex = world.lexicon
+    rng = np.random.RandomState(7)
+    stop = _words_of_class(lex, STOP, 12, rng)
+    freq = _words_of_class(lex, FREQUENT, 12, rng)
+    other = _words_of_class(lex, OTHER, 12, rng)
+
+    classes = {
+        "stop_pair": [[stop[i], stop[i + 1]] for i in range(0, 10, 2)],
+        "stop_triple": [[stop[i], stop[i + 1], stop[i + 2]] for i in range(0, 9, 3)],
+        "freq_other": [[freq[i], other[i]] for i in range(5)],
+        "freq_freq": [[freq[i], freq[i + 1]] for i in range(0, 10, 2)],
+        "other_other": [[other[i], other[i + 1]] for i in range(0, 10, 2)],
+    }
+    rows: List[Dict] = []
+    for cname, queries in classes.items():
+        scan_add = scan_ord = t_add = t_ord = 0.0
+        agree = True
+        for q in queries:
+            t0 = time.perf_counter()
+            r1 = eng.search(q)
+            t_add += time.perf_counter() - t0
+            t0 = time.perf_counter()
+            r2 = eng.search_ordinary(q)
+            t_ord += time.perf_counter() - t0
+            scan_add += r1.postings_scanned
+            scan_ord += r2.postings_scanned
+            agree &= set(r1.docs.tolist()) == set(r2.docs.tolist())
+        n = len(queries)
+        rows.append(
+            {
+                "bench": "search_speed",
+                "class": cname,
+                "queries": n,
+                "add_scanned": int(scan_add / n),
+                "ord_scanned": int(scan_ord / n),
+                "scan_speedup": scan_ord / max(1.0, scan_add),
+                "add_us": t_add / n * 1e6,
+                "ord_us": t_ord / n * 1e6,
+                "agree": agree,
+            }
+        )
+    return rows
+
+
+def main(scale: float = 0.5) -> None:
+    rows = run(scale)
+    print(
+        f"{'class':12s} {'add_scan':>9s} {'ord_scan':>9s} {'speedup':>8s} "
+        f"{'add_us':>9s} {'ord_us':>9s} {'agree':>6s}"
+    )
+    for r in rows:
+        print(
+            f"{r['class']:12s} {r['add_scanned']:>9,} {r['ord_scanned']:>9,} "
+            f"{r['scan_speedup']:>8.1f} {r['add_us']:>9.0f} {r['ord_us']:>9.0f} "
+            f"{str(r['agree']):>6s}"
+        )
+    assert all(r["agree"] for r in rows)
+    fast = [r for r in rows if r["class"] in ("stop_pair", "stop_triple", "freq_other", "freq_freq")]
+    assert min(r["scan_speedup"] for r in fast) > 3
+    print("PASS  additional indexes agree with, and scan far less than, ordinary")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Retrieval example: train a (reduced) two-tower model with in-batch
+softmax, then score one query against a candidate store laid out as
+contiguous S-strategy segments (one blocked matmul, no loop).
+
+    PYTHONPATH=src python examples/recsys_retrieval.py
+"""
+
+import dataclasses
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_bundle
+from repro.models import recsys as RS
+from repro.train.optim import OptConfig, adamw_init, adamw_update
+
+
+def main():
+    bundle = get_bundle("two-tower-retrieval", reduced=True)
+    # warmer softmax for from-scratch training (0.05 saturates at init)
+    cfg = dataclasses.replace(bundle.config, temperature=0.2)
+    params = bundle.init(jax.random.PRNGKey(0))
+
+    def batch(seed):
+        r = np.random.RandomState(seed)
+        items = r.choice(cfg.n_items, 64, replace=False)
+        return {
+            "user_id": jnp.asarray(items % cfg.n_users),  # paired user<->item
+            "user_ctx": jnp.asarray(items % cfg.n_context),
+            "item_id": jnp.asarray(items),
+            "item_cat": jnp.asarray(items % cfg.n_context),
+        }
+
+    loss_fn = lambda p, b: RS.twotower_loss(cfg, p, b)
+    oc = OptConfig(lr=3e-3, schedule="const", warmup_steps=1, weight_decay=0.0)
+    state = adamw_init(params)
+
+    @jax.jit
+    def step(p, s, b):
+        loss, g = jax.value_and_grad(loss_fn)(p, b)
+        p2, s2, _ = adamw_update(oc, g, s, p)
+        return loss, p2, s2
+
+    l0 = None
+    for i in range(300):
+        loss, params, state = step(params, state, batch(i))
+        l0 = l0 or float(loss)
+    print(f"two-tower in-batch softmax: loss {l0:.3f} -> {float(loss):.3f}")
+
+    # candidate store: item-tower embeddings in one contiguous array
+    # (the S-segment layout: sequential scan, no indirection)
+    ids = jnp.arange(cfg.n_items)
+    cands = RS.item_embed(cfg, params, ids, ids % cfg.n_context)
+    q = {"user_id": jnp.asarray([17]),
+         "user_ctx": jnp.asarray([17 % cfg.n_context])}
+    scores = jnp.einsum("bd,nd->bn", RS.user_embed(cfg, params, q), cands)[0]
+    rank = int((scores > scores[17]).sum())
+    top = RS.twotower_retrieval(
+        cfg, params, {**q, "candidate_embs": cands.astype(jnp.float32)}
+    )
+    print(f"query user 17 -> top-5 items {np.asarray(top)[:5].tolist()}, "
+          f"paired item rank {rank}/{cfg.n_items}")
+    assert rank < 10, "trained tower should rank the paired item at the top"
+    print("retrieval sanity check passed")
+
+
+if __name__ == "__main__":
+    main()

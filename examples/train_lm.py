@@ -1,0 +1,79 @@
+"""End-to-end driver: train a (reduced) assigned LM for a few hundred
+steps with the full production substrate — WSD schedule, gradient
+accumulation, async checkpointing, crash-safe resume.
+
+    PYTHONPATH=src python examples/train_lm.py [--arch minicpm-2b]
+        [--steps 300] [--resume]
+"""
+
+import argparse
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_bundle
+from repro.models.transformer import lm_loss
+from repro.train.optim import OptConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="minicpm-2b")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--microbatches", type=int, default=2)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    args = ap.parse_args()
+
+    bundle = get_bundle(args.arch, reduced=True)
+    cfg = bundle.config
+    params = bundle.init(jax.random.PRNGKey(0))
+    n = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    print(f"{args.arch} (reduced): {n/1e6:.2f}M params, WSD schedule")
+
+    vocab = cfg.vocab
+
+    def batches(cursor: int):
+        rng = np.random.RandomState(cursor)
+        # skewed synthetic token stream (learnable bigram structure)
+        toks = rng.zipf(1.5, size=(args.batch, args.seq)) % vocab
+        toks = np.sort(toks, axis=1)  # sorted => predictable next token
+        labels = np.roll(toks, -1, axis=1)
+        labels[:, -1] = -1
+        return {
+            "tokens": jnp.asarray(toks, jnp.int32),
+            "labels": jnp.asarray(labels, jnp.int32),
+        }
+
+    trainer = Trainer(
+        lambda p, b: lm_loss(cfg, p, b["tokens"], b["labels"])[0],
+        params,
+        TrainerConfig(
+            opt=OptConfig(lr=3e-3, schedule="wsd", warmup_steps=20,
+                          total_steps=args.steps, decay_fraction=0.2),
+            microbatches=args.microbatches,
+            ckpt_dir=args.ckpt_dir,
+            ckpt_every=100,
+            log_every=25,
+        ),
+    )
+    if trainer.try_resume():
+        print(f"resumed from step {trainer.step_num}")
+
+    t0 = time.time()
+    trainer.fit(batches, args.steps)
+    dt = time.time() - t0
+    first = trainer.history[0]["loss"] if trainer.history else float("nan")
+    last = trainer.history[-1]["loss"]
+    print(f"steps {trainer.step_num}, loss {first:.3f} -> {last:.3f} "
+          f"({dt:.1f}s, checkpoints in {args.ckpt_dir})")
+    assert last < first, "training should reduce loss"
+
+
+if __name__ == "__main__":
+    main()

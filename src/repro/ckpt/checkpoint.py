@@ -1,0 +1,207 @@
+"""Distributed checkpoint/restore with elastic resume.
+
+Layout (one directory per step):
+    step_000123/
+      manifest.json   — leaf paths, shapes, dtypes, content hashes, step,
+                        data-cursor, mesh shape at save time
+      <leaf>.npy      — one array per pytree leaf (host-gathered)
+
+Properties required at 1000-node scale and tested here:
+  * atomic publish (write to tmp dir, rename) — a crashed save never
+    corrupts the latest checkpoint,
+  * content hashes verified on load (bit-rot / truncation detection),
+  * elastic restore: arrays are loaded on host and re-sharded through
+    ``jax.device_put`` against the *current* mesh, which may have a
+    different shape than the mesh at save time (N->M reshard),
+  * resume cursor: (step, data_cursor) travel with the checkpoint so a
+    restarted job continues from the exact batch.
+
+In a real multi-host deployment each host writes only its owned shards;
+here host-gather is exact (single process) and the manifest format is the
+same.  Async saving runs the host-gather + write on a worker thread.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import tempfile
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+import jax
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        name = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path
+        )
+        out[name] = np.asarray(leaf)
+    return out
+
+
+def save_checkpoint(
+    directory: str,
+    step: int,
+    params: Any,
+    opt_state: Any = None,
+    data_cursor: int = 0,
+    extra: Optional[Dict] = None,
+) -> str:
+    """Atomic checkpoint write; returns the published path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(prefix=".tmp_ckpt_", dir=directory)
+    manifest = {
+        "step": int(step),
+        "data_cursor": int(data_cursor),
+        "extra": extra or {},
+        "leaves": {},
+    }
+    for prefix, tree in (("params", params), ("opt", opt_state)):
+        if tree is None:
+            continue
+        for name, arr in _flatten(tree).items():
+            fname = f"{prefix}__{name.replace('/', '__')}.npy"
+            np.save(os.path.join(tmp, fname), arr)
+            with open(os.path.join(tmp, fname), "rb") as f:
+                digest = hashlib.sha256(f.read()).hexdigest()[:16]
+            manifest["leaves"][f"{prefix}/{name}"] = {
+                "file": fname,
+                "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+                "sha": digest,
+            }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(d.split("_")[1])
+        for d in os.listdir(directory)
+        if d.startswith("step_")
+    ]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(
+    directory: str,
+    params_template: Any,
+    opt_template: Any = None,
+    step: Optional[int] = None,
+    shardings: Any = None,
+    opt_shardings: Any = None,
+) -> Tuple[Any, Any, int, int]:
+    """Restore (params, opt_state, step, data_cursor).
+
+    ``shardings`` (pytree of NamedSharding matching params) enables elastic
+    restore onto any current mesh.
+    """
+    step = step if step is not None else latest_step(directory)
+    assert step is not None, f"no checkpoint found in {directory}"
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    def restore(prefix, template, shard_tree):
+        if template is None:
+            return None
+        flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+        shards_flat = (
+            jax.tree_util.tree_leaves(shard_tree) if shard_tree is not None
+            else [None] * len(flat)
+        )
+        leaves = []
+        for (pth, leaf), shard in zip(flat, shards_flat):
+            name = "/".join(
+                str(getattr(k, "key", getattr(k, "idx", k))) for k in pth
+            )
+            meta = manifest["leaves"][f"{prefix}/{name}"]
+            fpath = os.path.join(path, meta["file"])
+            with open(fpath, "rb") as f:
+                digest = hashlib.sha256(f.read()).hexdigest()[:16]
+            assert digest == meta["sha"], f"hash mismatch for {name}"
+            arr = np.load(fpath)
+            assert list(arr.shape) == meta["shape"]
+            if shard is not None:
+                leaves.append(jax.device_put(arr, shard))
+            else:
+                leaves.append(jax.numpy.asarray(arr))
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    params = restore("params", params_template, shardings)
+    opt = restore("opt", opt_template, opt_shardings)
+    return params, opt, manifest["step"], manifest["data_cursor"]
+
+
+class CheckpointManager:
+    """Keeps the last N checkpoints; optional async (threaded) saves."""
+
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.directory = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def save(self, step: int, params: Any, opt_state: Any = None,
+             data_cursor: int = 0) -> None:
+        # snapshot to host before handing to the writer thread
+        host_params = jax.tree_util.tree_map(np.asarray, params)
+        host_opt = (
+            jax.tree_util.tree_map(np.asarray, opt_state)
+            if opt_state is not None else None
+        )
+
+        def work():
+            try:
+                save_checkpoint(
+                    self.directory, step, host_params, host_opt, data_cursor
+                )
+                self._gc()
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self.wait()
+        if self.async_save:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        else:
+            work()
+            if self._error:
+                err, self._error = self._error, None
+                raise err
+
+    def _gc(self):
+        steps = sorted(
+            int(d.split("_")[1])
+            for d in os.listdir(self.directory)
+            if d.startswith("step_")
+        )
+        for s in steps[: -self.keep]:
+            shutil.rmtree(
+                os.path.join(self.directory, f"step_{s:08d}"),
+                ignore_errors=True,
+            )

@@ -1,0 +1,3 @@
+"""Assigned-architecture registry: ``--arch <id>`` -> ArchBundle."""
+
+from repro.configs.registry import ARCH_IDS, get_bundle, shape_cells  # noqa: F401

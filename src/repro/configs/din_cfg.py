@@ -1,0 +1,63 @@
+"""din [arXiv:1706.06978]: embed_dim=18, behavior seq_len=100, target
+attention MLP 80-40, head MLP 200-80."""
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.families import ArchBundle, recsys_bundle
+from repro.models import recsys as RS
+
+SDS = jax.ShapeDtypeStruct
+
+CONFIG = RS.DINConfig(n_items=1_000_000, n_cates=10_000)
+REDUCED = RS.DINConfig(n_items=1000, n_cates=50, seq_len=20)
+
+
+def _train_inputs(cfg):
+    def fn(B):
+        return {
+            "hist_items": SDS((B, cfg.seq_len), jnp.int32),
+            "hist_cates": SDS((B, cfg.seq_len), jnp.int32),
+            "hist_mask": SDS((B, cfg.seq_len), jnp.float32),
+            "target_item": SDS((B,), jnp.int32),
+            "target_cate": SDS((B,), jnp.int32),
+            "label": SDS((B,), jnp.float32),
+        }
+    return fn
+
+
+def _serve_inputs(cfg):
+    def fn(B):
+        d = _train_inputs(cfg)(B)
+        d.pop("label")
+        return d
+    return fn
+
+
+def _retrieval_inputs(cfg, n_cand):
+    def fn():
+        return {
+            "hist_items": SDS((1, cfg.seq_len), jnp.int32),
+            "hist_cates": SDS((1, cfg.seq_len), jnp.int32),
+            "hist_mask": SDS((1, cfg.seq_len), jnp.float32),
+            "candidates": SDS((n_cand,), jnp.int32),
+            "candidate_cates": SDS((n_cand,), jnp.int32),
+        }
+    return fn
+
+
+def bundle(reduced: bool = False) -> ArchBundle:
+    cfg = REDUCED if reduced else CONFIG
+    sizes = (
+        {"train_batch": 128, "serve_p99": 32, "serve_bulk": 256}
+        if reduced else None
+    )
+    return recsys_bundle(
+        "din", cfg, RS.din_init,
+        lambda c, p, b: RS.din_loss(c, p, b),
+        lambda c, p, b: RS.din_forward(c, p, b),
+        lambda c, p, b: RS.din_retrieval(c, p, b),
+        _train_inputs(cfg), _serve_inputs(cfg),
+        _retrieval_inputs(cfg, 500 if reduced else 1_000_000),
+        batch_sizes=sizes,
+    )

@@ -1,0 +1,74 @@
+"""dlrm-mlperf [arXiv:1906.00091, MLPerf]: 13 dense + 26 sparse features,
+embed_dim=128, bottom MLP 13-512-256-128, top MLP 1024-1024-512-256-1,
+dot interaction.  Table cardinalities: Criteo-1TB (MLPerf v1 setting)."""
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.families import ArchBundle, recsys_bundle
+from repro.models import recsys as RS
+
+SDS = jax.ShapeDtypeStruct
+
+# Criteo Terabyte per-feature cardinalities (MLPerf DLRM benchmark set)
+CRITEO_1TB_ROWS = (
+    45833138, 36746, 17245, 7413, 20243, 3, 7114, 1441, 62, 29275261,
+    1572176, 345138, 10, 2209, 11267, 128, 4, 974, 14, 48937457,
+    11316796, 40094537, 452104, 12606, 104, 35,
+)
+
+CONFIG = RS.DLRMConfig(table_rows=CRITEO_1TB_ROWS)
+REDUCED = RS.DLRMConfig(
+    table_rows=tuple(min(r, 1000) for r in CRITEO_1TB_ROWS),
+    bot_mlp=(64, 32, 16), top_mlp=(64, 32, 1), embed_dim=16,
+)
+
+
+def _train_inputs(cfg):
+    def fn(B):
+        return {
+            "dense": SDS((B, cfg.n_dense), jnp.float32),
+            "sparse": SDS((B, cfg.n_sparse), jnp.int32),
+            "label": SDS((B,), jnp.float32),
+        }
+    return fn
+
+
+def _serve_inputs(cfg):
+    def fn(B):
+        return {
+            "dense": SDS((B, cfg.n_dense), jnp.float32),
+            "sparse": SDS((B, cfg.n_sparse), jnp.int32),
+        }
+    return fn
+
+
+def _retrieval_inputs(cfg, n_cand=1_000_000):
+    def fn():
+        return {
+            "dense": SDS((1, cfg.n_dense), jnp.float32),
+            "sparse": SDS((1, cfg.n_sparse), jnp.int32),
+            "candidates": SDS((n_cand,), jnp.int32),
+        }
+    return fn
+
+
+def _score(cfg, p, batch):
+    return RS.dlrm_forward(cfg, p, batch)
+
+
+def bundle(reduced: bool = False) -> ArchBundle:
+    cfg = REDUCED if reduced else CONFIG
+    sizes = (
+        {"train_batch": 256, "serve_p99": 64, "serve_bulk": 512}
+        if reduced else None
+    )
+    return recsys_bundle(
+        "dlrm-mlperf", cfg, RS.dlrm_init,
+        lambda c, p, b: RS.dlrm_loss(c, p, b),
+        _score,
+        lambda c, p, b: RS.dlrm_retrieval(c, p, b),
+        _train_inputs(cfg), _serve_inputs(cfg),
+        _retrieval_inputs(cfg, 1000 if reduced else 1_000_000),
+        batch_sizes=sizes,
+    )

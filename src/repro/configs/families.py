@@ -1,0 +1,398 @@
+"""Family bundle builders: LM / GNN / RecSys.
+
+An ``ArchBundle`` carries everything the launcher needs for one --arch:
+
+  * ``init(rng)``                 — parameter init (or eval_shape'able)
+  * ``rules``                     — sharding rules for the params
+  * ``cells[shape] = CellSpec``   — step fn + abstract input specs +
+                                    per-input sharding spec builders
+
+Step functions take ``(params, opt_state, batch)`` for train cells and
+``(params, batch)`` for serve cells; they are pure and jit-able.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding as shd
+from repro.models import mace as M
+from repro.models import recsys as RS
+from repro.models import transformer as TF
+from repro.models.gnn_common import NeighborSampler
+from repro.train.optim import OptConfig, adamw_init, adamw_update
+from repro.train.trainer import TrainerConfig, build_train_step
+
+F32 = jnp.float32
+I32 = jnp.int32
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass
+class CellSpec:
+    kind: str                                  # train | serve
+    fn: Callable                               # the step function
+    inputs: Dict[str, Any]                     # name -> ShapeDtypeStruct tree
+    input_sharding: Callable[[Mesh], Dict]     # name -> sharding tree
+    static_note: str = ""
+
+
+@dataclasses.dataclass
+class ArchBundle:
+    name: str
+    family: str
+    config: Any
+    init: Callable
+    rules: list
+    cells: Dict[str, CellSpec]
+
+    def param_shardings(self, mesh: Mesh):
+        shapes = jax.eval_shape(self.init, jax.random.PRNGKey(0))
+        return shd.shard_by_rules(shapes, mesh, self.rules)
+
+    def opt_shardings(self, mesh: Mesh):
+        pshapes = jax.eval_shape(self.init, jax.random.PRNGKey(0))
+        oshapes = jax.eval_shape(adamw_init, pshapes)
+        pshard = shd.shard_by_rules(pshapes, mesh, self.rules)
+        return {
+            "mu": pshard,
+            "nu": jax.tree_util.tree_map(lambda s: s, pshard),
+            "step": NamedSharding(mesh, P()),
+        }
+
+    def abstract_params(self):
+        return jax.eval_shape(self.init, jax.random.PRNGKey(0))
+
+    def abstract_opt(self):
+        return jax.eval_shape(adamw_init, self.abstract_params())
+
+
+def _train_fn(loss_fn, opt: OptConfig, microbatches: int = 1):
+    tc = TrainerConfig(opt=opt, microbatches=microbatches)
+    return build_train_step(loss_fn, tc)
+
+
+# ================================================================== LM =====
+MODEL_AXIS_SIZE = 16  # production mesh model-axis width
+
+
+def lm_bundle(name: str, cfg: TF.TransformerConfig,
+              shapes: Optional[Dict[str, Tuple[int, int]]] = None,
+              opt: Optional[OptConfig] = None,
+              microbatches: int = 1) -> ArchBundle:
+    shapes = shapes or {
+        "train_4k": (256, 4096),
+        "prefill_32k": (32, 32768),
+        "decode_32k": (128, 32768),
+        "long_500k": (1, 524288),
+    }
+    opt = opt or OptConfig()
+    # padded head sharding everywhere: GSPMD pads uneven head counts
+    # (36 -> 3/chip, 20 -> 2/chip); see EXPERIMENTS.md Perf train iter 1
+    cfg = dataclasses.replace(cfg, att_shard="heads")
+
+    def init(rng):
+        return TF.init_params(cfg, rng)
+
+    def loss_fn(params, batch):
+        return TF.lm_loss(cfg, params, batch["tokens"], batch["labels"])[0]
+
+    train_step = _train_fn(loss_fn, opt, microbatches)
+
+    def prefill_step(params, batch):
+        logits, cache = TF.prefill(cfg, params, batch["tokens"])
+        return logits, cache["len"]
+
+    def decode_step(params, batch):
+        logits, cache = TF.decode_step(cfg, params, batch["token"], batch["cache"])
+        return logits, cache
+
+    cells: Dict[str, CellSpec] = {}
+
+    B, S = shapes["train_4k"]
+    cells["train_4k"] = CellSpec(
+        kind="train",
+        fn=train_step,
+        inputs={
+            "batch": {
+                "tokens": SDS((B, S), I32),
+                "labels": SDS((B, S), I32),
+            }
+        },
+        input_sharding=lambda mesh: {
+            "batch": {
+                k: NamedSharding(mesh, P(shd.batch_spec(mesh)[0], None))
+                for k in ("tokens", "labels")
+            }
+        },
+    )
+
+    B, S = shapes["prefill_32k"]
+    cells["prefill_32k"] = CellSpec(
+        kind="serve",
+        fn=prefill_step,
+        inputs={"batch": {"tokens": SDS((B, S), I32)}},
+        input_sharding=lambda mesh: {
+            "batch": {"tokens": NamedSharding(
+                mesh, P(shd.batch_spec(mesh)[0], None))}
+        },
+    )
+
+    def decode_cell(B, S_max):
+        L, n_kv, D = cfg.n_layers, cfg.n_kv_heads, cfg.d_head
+
+        def shard(mesh):
+            b = shd.batch_spec(mesh)[0]
+            kv_spec = P(None, b, "model", None, None)  # S sharded on model
+            return {
+                "batch": {
+                    "token": NamedSharding(mesh, P(b)),
+                    "cache": {
+                        "k": NamedSharding(mesh, kv_spec),
+                        "v": NamedSharding(mesh, kv_spec),
+                        "len": NamedSharding(mesh, P(b)),
+                    },
+                }
+            }
+
+        return CellSpec(
+            kind="serve",
+            fn=decode_step,
+            inputs={
+                "batch": {
+                    "token": SDS((B,), I32),
+                    "cache": {
+                        "k": SDS((L, B, S_max, n_kv, D), cfg.dtype),
+                        "v": SDS((L, B, S_max, n_kv, D), cfg.dtype),
+                        "len": SDS((B,), I32),
+                    },
+                }
+            },
+            input_sharding=shard,
+            static_note="decode: one token against a paged KV cache",
+        )
+
+    cells["decode_32k"] = decode_cell(*shapes["decode_32k"])
+    cells["long_500k"] = decode_cell(*shapes["long_500k"])
+
+    return ArchBundle(
+        name=name, family="lm", config=cfg, init=init,
+        rules=shd.LM_RULES, cells=cells,
+    )
+
+
+# ================================================================= GNN =====
+def gnn_bundle(name: str, base: M.MACEConfig, reduced: bool = False) -> ArchBundle:
+    opt = OptConfig(lr=1e-3, weight_decay=0.0, schedule="cosine",
+                    warmup_steps=10, total_steps=1000)
+
+    # one config per cell (d_feat / n_out vary per dataset shape)
+    cfg_cora = dataclasses.replace(base, d_feat=1433, n_out=7)
+    cfg_reddit = dataclasses.replace(base, d_feat=602, n_out=41)
+    cfg_products = dataclasses.replace(base, d_feat=100, n_out=47)
+    cfg_mol = dataclasses.replace(base, d_feat=0, n_species=32, n_out=1)
+
+    if reduced:
+        sizes = {
+            "cora": (128, 512), "products": (256, 1024),
+            "mb_seeds": (8, [3, 2]), "mol": (4, 10, 16),
+        }
+    else:
+        sizes = {
+            "cora": (2708, 10556), "products": (2_449_029, 61_859_140),
+            "mb_seeds": (1024, [15, 10]), "mol": (128, 30, 64),
+        }
+
+    def make_node_cell(cfg, N, E, masked=False):
+        def init(rng):
+            return M.mace_init(cfg, rng)
+
+        def loss_fn(params, batch):
+            return M.mace_node_xent(cfg, params, batch)
+
+        step = _train_fn(loss_fn, opt)
+        inputs = {
+            "batch": {
+                "feat": SDS((N, cfg.d_feat), F32),
+                "pos": SDS((N, 3), F32),
+                "edges_src": SDS((E,), I32),
+                "edges_dst": SDS((E,), I32),
+                "labels": SDS((N,), I32),
+            }
+        }
+        if masked:
+            inputs["batch"]["edge_mask"] = SDS((E,), F32)
+            inputs["batch"]["label_mask"] = SDS((N,), F32)
+
+        def shard(mesh):
+            b = shd.batch_spec(mesh)[0]
+            out = {
+                "feat": NamedSharding(mesh, P(b, None)),
+                "pos": NamedSharding(mesh, P(b, None)),
+                "edges_src": NamedSharding(mesh, P(b)),
+                "edges_dst": NamedSharding(mesh, P(b)),
+                "labels": NamedSharding(mesh, P(b)),
+            }
+            if masked:
+                out["edge_mask"] = NamedSharding(mesh, P(b))
+                out["label_mask"] = NamedSharding(mesh, P(b))
+            return {"batch": out}
+
+        return init, CellSpec(
+            kind="train", fn=step, inputs=inputs, input_sharding=shard
+        )
+
+    init_fn, cell_cora = make_node_cell(cfg_cora, *sizes["cora"])
+    n_max, e_max = NeighborSampler.padded_sizes(*sizes["mb_seeds"])
+    _, cell_mb = make_node_cell(cfg_reddit, n_max, e_max, masked=True)
+    _, cell_prod = make_node_cell(cfg_products, *sizes["products"])
+
+    # molecule: batched small graphs, energy regression
+    n_g, n_n, n_e = sizes["mol"]
+
+    def init_mol(rng):
+        return M.mace_init(cfg_mol, rng)
+
+    def loss_mol(params, batch):
+        return M.mace_energy_mse(cfg_mol, params, batch)
+
+    cell_mol = CellSpec(
+        kind="train",
+        fn=_train_fn(loss_mol, opt),
+        inputs={
+            "batch": {
+                "species": SDS((n_g * n_n,), I32),
+                "pos": SDS((n_g * n_n, 3), F32),
+                "edges_src": SDS((n_g * n_e,), I32),
+                "edges_dst": SDS((n_g * n_e,), I32),
+                "graph_of": SDS((n_g * n_n,), I32),
+                "energy": SDS((n_g,), F32),
+            }
+        },
+        input_sharding=lambda mesh: {
+            "batch": {
+                k: NamedSharding(
+                    mesh, P(shd.batch_spec(mesh)[0], *([None] * (ndim - 1)))
+                )
+                for k, ndim in (
+                    ("species", 1), ("pos", 2), ("edges_src", 1),
+                    ("edges_dst", 1), ("graph_of", 1), ("energy", 1),
+                )
+            }
+        },
+    )
+
+    # NOTE: node-cell archs share MACE weights modulo head/input dims; the
+    # bundle's init is the Cora variant; each cell keeps its own init via
+    # closure when lowered by the dry-run (see dryrun._cell_init).
+    bundle = ArchBundle(
+        name=name, family="gnn", config=base, init=init_fn,
+        rules=shd.GNN_RULES,
+        cells={
+            "full_graph_sm": cell_cora,
+            "minibatch_lg": cell_mb,
+            "ogb_products": cell_prod,
+            "molecule": cell_mol,
+        },
+    )
+    bundle.cell_inits = {
+        "full_graph_sm": lambda rng: M.mace_init(cfg_cora, rng),
+        "minibatch_lg": lambda rng: M.mace_init(cfg_reddit, rng),
+        "ogb_products": lambda rng: M.mace_init(cfg_products, rng),
+        "molecule": init_mol,
+    }
+    bundle.cell_configs = {
+        "full_graph_sm": cfg_cora,
+        "minibatch_lg": cfg_reddit,
+        "ogb_products": cfg_products,
+        "molecule": cfg_mol,
+    }
+    return bundle
+
+
+# ============================================================== RecSys =====
+def recsys_bundle(
+    name: str,
+    cfg: Any,
+    init_fn: Callable,
+    loss_fn: Callable,
+    score_fn: Callable,
+    retrieval_fn: Callable,
+    train_inputs: Callable[[int], Dict],
+    serve_inputs: Callable[[int], Dict],
+    retrieval_inputs: Callable[[], Dict],
+    batch_sizes: Optional[Dict[str, int]] = None,
+) -> ArchBundle:
+    bs = batch_sizes or {
+        "train_batch": 65_536, "serve_p99": 512, "serve_bulk": 262_144
+    }
+    opt = OptConfig(lr=1e-3, weight_decay=1e-5, schedule="const",
+                    warmup_steps=100, total_steps=100_000)
+    train_step = _train_fn(lambda p, b: loss_fn(cfg, p, b), opt)
+
+    def serve_step(params, batch):
+        return score_fn(cfg, params, batch)
+
+    def retrieval_step(params, batch):
+        return retrieval_fn(cfg, params, batch)
+
+    def mk_shard(inputs_fn):
+        def shard(mesh):
+            b = shd.batch_spec(mesh)[0]
+
+            def one(leaf):
+                nd = len(leaf.shape)
+                if nd == 0:
+                    return NamedSharding(mesh, P())
+                return NamedSharding(mesh, P(b, *([None] * (nd - 1))))
+
+            return {"batch": jax.tree_util.tree_map(one, inputs_fn)}
+
+        return shard
+
+    cells = {}
+    cells["train_batch"] = CellSpec(
+        kind="train", fn=train_step,
+        inputs={"batch": train_inputs(bs["train_batch"])},
+        input_sharding=mk_shard(train_inputs(bs["train_batch"])),
+    )
+    cells["serve_p99"] = CellSpec(
+        kind="serve", fn=serve_step,
+        inputs={"batch": serve_inputs(bs["serve_p99"])},
+        input_sharding=mk_shard(serve_inputs(bs["serve_p99"])),
+    )
+    cells["serve_bulk"] = CellSpec(
+        kind="serve", fn=serve_step,
+        inputs={"batch": serve_inputs(bs["serve_bulk"])},
+        input_sharding=mk_shard(serve_inputs(bs["serve_bulk"])),
+    )
+    ret_in = retrieval_inputs()
+    cells["retrieval_cand"] = CellSpec(
+        kind="serve", fn=retrieval_step,
+        inputs={"batch": ret_in},
+        input_sharding=lambda mesh: {
+            "batch": jax.tree_util.tree_map(
+                lambda leaf: NamedSharding(
+                    mesh,
+                    P(shd.batch_spec(mesh)[0],
+                      *([None] * (len(leaf.shape) - 1)))
+                    if leaf.shape and leaf.shape[0] >= 1_000_000
+                    else P(*([None] * len(leaf.shape))),
+                ),
+                ret_in,
+            )
+        },
+    )
+    return ArchBundle(
+        name=name, family="recsys", config=cfg,
+        init=lambda rng: init_fn(cfg, rng),
+        rules=shd.RECSYS_RULES, cells=cells,
+    )

@@ -1,0 +1,40 @@
+"""minicpm-2b [arXiv:2404.06395; hf]: 40L d_model=2304 36H (MHA kv=36)
+d_ff=5760 vocab=122753, WSD schedule, tied embeddings (MiniCPM ties)."""
+
+from repro.configs.families import ArchBundle, lm_bundle
+from repro.models.transformer import TransformerConfig
+from repro.train.optim import OptConfig
+
+CONFIG = TransformerConfig(
+    name="minicpm-2b",
+    n_layers=40,
+    d_model=2304,
+    n_heads=36,
+    n_kv_heads=36,
+    d_head=64,
+    d_ff=5760,
+    vocab=122_753,
+    qkv_bias=False,
+    rope_theta=10_000.0,
+    tie_embeddings=True,
+)
+
+REDUCED = TransformerConfig(
+    name="minicpm-2b-smoke",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_head=16,
+    d_ff=160, vocab=512, tie_embeddings=True, loss_chunk=32, flash_chunk=16,
+)
+
+# the WSD (warmup-stable-decay) schedule is the arch's signature trainer
+OPT = OptConfig(lr=1e-2 / 4, schedule="wsd", warmup_steps=500,
+                total_steps=50_000, decay_fraction=0.1)
+
+
+def bundle(reduced: bool = False) -> ArchBundle:
+    if reduced:
+        return lm_bundle(
+            "minicpm-2b", REDUCED, opt=OPT,
+            shapes={"train_4k": (4, 64), "prefill_32k": (2, 64),
+                    "decode_32k": (4, 64), "long_500k": (1, 128)},
+        )
+    return lm_bundle("minicpm-2b", CONFIG, opt=OPT, microbatches=4)

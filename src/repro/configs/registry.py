@@ -1,0 +1,57 @@
+"""Architecture registry: maps --arch ids to bundles of
+(config, init, sharding rules, per-shape step functions + input specs).
+
+Shape cells per family (the assignment):
+  LM:     train_4k, prefill_32k, decode_32k, long_500k
+  GNN:    full_graph_sm, minibatch_lg, ogb_products, molecule
+  RecSys: train_batch, serve_p99, serve_bulk, retrieval_cand
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+ARCH_IDS = [
+    "minicpm-2b",
+    "granite-3-2b",
+    "qwen1.5-4b",
+    "moonshot-v1-16b-a3b",
+    "qwen3-moe-235b-a22b",
+    "mace",
+    "dlrm-mlperf",
+    "din",
+    "sasrec",
+    "two-tower-retrieval",
+]
+
+_MODULES = {
+    "minicpm-2b": "repro.configs.minicpm_2b",
+    "granite-3-2b": "repro.configs.granite_3_2b",
+    "qwen1.5-4b": "repro.configs.qwen1_5_4b",
+    "moonshot-v1-16b-a3b": "repro.configs.moonshot_v1_16b_a3b",
+    "qwen3-moe-235b-a22b": "repro.configs.qwen3_moe_235b_a22b",
+    "mace": "repro.configs.mace_cfg",
+    "dlrm-mlperf": "repro.configs.dlrm_mlperf",
+    "din": "repro.configs.din_cfg",
+    "sasrec": "repro.configs.sasrec_cfg",
+    "two-tower-retrieval": "repro.configs.two_tower_retrieval",
+}
+
+LM_SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+GNN_SHAPES = ["full_graph_sm", "minibatch_lg", "ogb_products", "molecule"]
+RECSYS_SHAPES = ["train_batch", "serve_p99", "serve_bulk", "retrieval_cand"]
+
+
+def shape_cells(arch: str) -> List[str]:
+    fam = get_bundle(arch).family
+    return {"lm": LM_SHAPES, "gnn": GNN_SHAPES, "recsys": RECSYS_SHAPES}[fam]
+
+
+def get_bundle(arch: str, reduced: bool = False):
+    mod = importlib.import_module(_MODULES[arch])
+    return mod.bundle(reduced=reduced)
+
+
+def all_cells() -> List:
+    return [(a, s) for a in ARCH_IDS for s in shape_cells(a)]

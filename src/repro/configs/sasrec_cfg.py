@@ -1,0 +1,57 @@
+"""sasrec [arXiv:1808.09781]: embed_dim=50, 2 blocks, 1 head, seq_len=50,
+causal self-attention over the behavior sequence."""
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.families import ArchBundle, recsys_bundle
+from repro.models import recsys as RS
+
+SDS = jax.ShapeDtypeStruct
+
+CONFIG = RS.SASRecConfig(n_items=60_000)
+REDUCED = RS.SASRecConfig(n_items=500, seq_len=16)
+
+
+def _train_inputs(cfg):
+    def fn(B):
+        return {
+            "seq": SDS((B, cfg.seq_len), jnp.int32),
+            "labels": SDS((B, cfg.seq_len), jnp.int32),
+        }
+    return fn
+
+
+def _serve_inputs(cfg, n_cand=200):
+    def fn(B):
+        return {
+            "seq": SDS((B, cfg.seq_len), jnp.int32),
+            "candidates": SDS((B, n_cand), jnp.int32),
+        }
+    return fn
+
+
+def _retrieval_inputs(cfg, n_cand):
+    def fn():
+        return {
+            "seq": SDS((1, cfg.seq_len), jnp.int32),
+            "candidates": SDS((n_cand,), jnp.int32),
+        }
+    return fn
+
+
+def bundle(reduced: bool = False) -> ArchBundle:
+    cfg = REDUCED if reduced else CONFIG
+    sizes = (
+        {"train_batch": 128, "serve_p99": 32, "serve_bulk": 256}
+        if reduced else None
+    )
+    return recsys_bundle(
+        "sasrec", cfg, RS.sasrec_init,
+        lambda c, p, b: RS.sasrec_loss(c, p, b),
+        lambda c, p, b: RS.sasrec_score(c, p, b),
+        lambda c, p, b: RS.sasrec_retrieval(c, p, b),
+        _train_inputs(cfg), _serve_inputs(cfg),
+        _retrieval_inputs(cfg, 500 if reduced else 1_000_000),
+        batch_sizes=sizes,
+    )

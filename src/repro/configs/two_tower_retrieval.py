@@ -1,0 +1,54 @@
+"""two-tower-retrieval [RecSys'19 YouTube-style]: embed_dim=256, tower MLP
+1024-512-256, dot interaction, in-batch sampled softmax."""
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.families import ArchBundle, recsys_bundle
+from repro.models import recsys as RS
+
+SDS = jax.ShapeDtypeStruct
+
+CONFIG = RS.TwoTowerConfig()
+REDUCED = RS.TwoTowerConfig(
+    n_users=2000, n_items=1000, n_context=100, embed_dim=32,
+    tower_mlp=(64, 32),
+)
+
+
+def _train_inputs(cfg):
+    def fn(B):
+        return {
+            "user_id": SDS((B,), jnp.int32),
+            "user_ctx": SDS((B,), jnp.int32),
+            "item_id": SDS((B,), jnp.int32),
+            "item_cat": SDS((B,), jnp.int32),
+        }
+    return fn
+
+
+def _retrieval_inputs(cfg, n_cand):
+    def fn():
+        return {
+            "user_id": SDS((1,), jnp.int32),
+            "user_ctx": SDS((1,), jnp.int32),
+            "candidate_embs": SDS((n_cand, cfg.tower_mlp[-1]), jnp.float32),
+        }
+    return fn
+
+
+def bundle(reduced: bool = False) -> ArchBundle:
+    cfg = REDUCED if reduced else CONFIG
+    sizes = (
+        {"train_batch": 128, "serve_p99": 32, "serve_bulk": 256}
+        if reduced else None
+    )
+    return recsys_bundle(
+        "two-tower-retrieval", cfg, RS.twotower_init,
+        lambda c, p, b: RS.twotower_loss(c, p, b),
+        lambda c, p, b: RS.twotower_score(c, p, b),
+        lambda c, p, b: RS.twotower_retrieval(c, p, b),
+        _train_inputs(cfg), _train_inputs(cfg),
+        _retrieval_inputs(cfg, 1000 if reduced else 1_000_000),
+        batch_sizes=sizes,
+    )

@@ -1,0 +1,298 @@
+"""The easily updatable associative array (paper sections 2.2-5).
+
+``InvertedIndex`` is the user-facing structure: an associative array in
+external memory mapping keys to posting lists, updatable in place (Method 2)
+— no sort-and-merge pass.  It composes:
+
+  * :class:`~repro.core.dictionary.Dictionary` — key → entry (EM/TAG/OWN),
+  * :class:`~repro.core.stream.StreamManager` — stream-of-clusters lifecycle,
+  * :class:`~repro.core.io_sim.BlockDevice` — exact I/O accounting
+    (optionally :class:`PackedWriteDevice` for strategy DS).
+
+Construction/update protocol (paper 2.2, 5.1): the caller hands one *part*
+of the collection at a time as ``{key: (N,2) postings}``; the index runs a
+C1 phase per key group, appending each key's batch into its stream.  TAG
+buckets receive one merged, tag-prefixed batch per phase; a member whose
+share outgrows ``tag_extract_bytes`` is extracted to a dedicated stream
+(5.6).  Doc ids must be globally increasing across parts — the natural
+consequence of indexing a growing collection.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Dict, Hashable, Iterable, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.dictionary import (
+    ENTRY_FIXED_BYTES,
+    Dictionary,
+    Entry,
+    K_EM,
+    K_OWN,
+    K_TAG,
+    key_bytes,
+    stable_hash,
+)
+from repro.core.io_sim import BlockDevice, IOStats
+from repro.core.postings import decode_postings, encode_postings
+from repro.core.strategies import StrategyConfig
+from repro.core.stream import StreamManager
+
+_EMPTY = np.zeros((0, 2), dtype=np.int64)
+
+
+class InvertedIndex:
+    def __init__(
+        self,
+        cfg: StrategyConfig,
+        device: BlockDevice,
+        n_groups: int = 16,
+        name: str = "index",
+        fl_area_clusters: int = 8192,
+        seed: int = 0,
+        dict_device: Optional[BlockDevice] = None,
+    ):
+        self.cfg = cfg
+        self.name = name
+        self.mgr = StreamManager(
+            cfg, device, n_groups, name=name,
+            fl_area_clusters=fl_area_clusters, seed=seed,
+        )
+        # dictionary partition traffic is identical across strategy sets and
+        # is accounted separately (the paper's tables measure the index data
+        # file); defaults to the main device when not supplied.
+        self.dict_dev = dict_device if dict_device is not None else device
+        self.dict = Dictionary(n_groups)
+        self._group_dict_bytes: Dict[int, int] = defaultdict(int)
+        # TAG bucket assignment: per group, the currently-open bucket stream
+        self._open_bucket: Dict[int, int] = {}
+        self.n_extractions = 0
+        self.n_parts = 0
+
+    # ------------------------------------------------------------ updating --
+    def add_part(self, postings_by_key: Dict[Hashable, np.ndarray]) -> None:
+        """Index one part of the collection (build or in-place update)."""
+        by_group: Dict[int, List[Tuple[Hashable, np.ndarray]]] = defaultdict(list)
+        for key, posts in postings_by_key.items():
+            arr = np.asarray(posts, dtype=np.int64)
+            if arr.size == 0:
+                continue
+            by_group[self.dict.group_of(key)].append((key, arr))
+        for group in sorted(by_group):
+            self._run_phase(group, by_group[group])
+        self.n_parts += 1
+
+    def _run_phase(self, group: int, items: List[Tuple[Hashable, np.ndarray]]) -> None:
+        dev = self.dict_dev
+        dev.read_sequential(self._group_dict_bytes[group])
+        self.mgr.begin_phase(group)
+        bucket_batches: Dict[int, List[Tuple[int, Optional[np.ndarray], np.ndarray]]] = (
+            defaultdict(list)
+        )
+        for key, posts in items:
+            self._append_key(group, key, posts, bucket_batches)
+        extract_candidates: List[Hashable] = []
+        for sid, batch in bucket_batches.items():
+            extract_candidates.extend(self._flush_bucket(group, sid, batch))
+        for key in extract_candidates:
+            self._extract_key(group, key)
+        self.mgr.end_phase()
+        dev.write_sequential(self._group_dict_bytes[group])
+        dev.flush()
+
+    def _append_key(
+        self,
+        group: int,
+        key: Hashable,
+        posts: np.ndarray,
+        bucket_batches: Dict[int, List],
+    ) -> None:
+        cfg = self.cfg
+        e = self.dict.get(key)
+        if e is None:
+            e = self.dict.get_or_create(key)
+            self._group_dict_bytes[group] += ENTRY_FIXED_BYTES + len(key_bytes(key))
+
+        if e.kind == K_EM:
+            chunk = encode_postings(posts, prev_doc=e.last_doc)
+            if cfg.use_em and e.nbytes + len(chunk) <= cfg.em_limit:
+                e.data += chunk
+                self._group_dict_bytes[group] += len(chunk)
+                self._bump(e, posts, len(chunk))
+                return
+            # leaving EM: the inline bytes move out of the dictionary
+            old_em = bytes(e.data)
+            old_posts = None
+            if old_em:
+                old_posts, _ = decode_postings(old_em)
+                self._group_dict_bytes[group] -= len(old_em)
+                e.data = bytearray()
+            if cfg.use_tag and e.nbytes + len(chunk) <= cfg.tag_extract_bytes:
+                sid, tag = self._join_bucket(group, key)
+                e.kind, e.sid, e.tag = K_TAG, sid, tag
+                bucket_batches[sid].append((tag, old_posts, posts))
+                # nbytes re-accounted by _flush_bucket's tagged encoding
+                e.nbytes = 0
+                e.npostings += posts.shape[0]
+                e.last_doc = int(posts[-1, 0])
+                return
+            # dedicated stream
+            sid = self.mgr.new_stream(group)
+            e.kind, e.sid = K_OWN, sid
+            payload = old_em + chunk
+            self.mgr.append_stream(sid, payload)
+            self.mgr.streams[sid].last_doc = int(posts[-1, 0])
+            self._bump(e, posts, len(chunk))
+            return
+
+        if e.kind == K_TAG:
+            bucket_batches[e.sid].append((e.tag, None, posts))
+            # nbytes updated in _flush_bucket (needs the merged encoding)
+            e.npostings += posts.shape[0]
+            e.last_doc = int(posts[-1, 0])
+            return
+
+        # K_OWN
+        chunk = encode_postings(posts, prev_doc=e.last_doc)
+        self.mgr.append_stream(e.sid, chunk)
+        self.mgr.streams[e.sid].last_doc = int(posts[-1, 0])
+        self._bump(e, posts, len(chunk))
+
+    @staticmethod
+    def _bump(e: Entry, posts: np.ndarray, nbytes: int) -> None:
+        e.nbytes += nbytes
+        e.npostings += posts.shape[0]
+        e.last_doc = int(posts[-1, 0])
+
+    # --------------------------------------------------------- TAG buckets --
+    def _join_bucket(self, group: int, key: Hashable) -> Tuple[int, int]:
+        sid = self._open_bucket.get(group, -1)
+        members = self.dict.bucket_members.get(sid)
+        if sid < 0 or members is None or len(members) >= self.cfg.tag_bucket_keys:
+            sid = self.mgr.new_stream(group, tagged=True)
+            self.dict.bucket_members[sid] = []
+            self._open_bucket[group] = sid
+            members = self.dict.bucket_members[sid]
+        tag = len(members)
+        members.append(key)
+        return sid, tag
+
+    def _flush_bucket(
+        self, group: int, sid: int,
+        batch: List[Tuple[int, Optional[np.ndarray], np.ndarray]],
+    ) -> List[Hashable]:
+        """Append one merged tag-prefixed batch; return extraction candidates."""
+        stream = self.mgr.streams[sid]
+        # old EM remnants of joining keys come first (older doc ranges)
+        groups: List[Tuple[np.ndarray, np.ndarray]] = []
+        for which in (1, 2):  # 1: old EM posts, 2: this part's posts
+            posts_list, tags_list = [], []
+            for tag, old_posts, new_posts in batch:
+                arr = old_posts if which == 1 else new_posts
+                if arr is None or arr.size == 0:
+                    continue
+                posts_list.append(arr)
+                tags_list.append(np.full(arr.shape[0], tag, dtype=np.int64))
+            if not posts_list:
+                continue
+            posts = np.concatenate(posts_list, axis=0)
+            tags = np.concatenate(tags_list, axis=0)
+            order = np.lexsort((tags, posts[:, 1], posts[:, 0]))
+            groups.append((posts[order], tags[order]))
+        total_chunk = bytearray()
+        prev_doc = stream.last_doc
+        counts: Dict[int, int] = defaultdict(int)
+        for posts, tags in groups:
+            chunk = encode_postings(posts, tags=tags, prev_doc=prev_doc, zigzag=True)
+            total_chunk += chunk
+            prev_doc = int(posts[-1, 0])
+            for t in tags:
+                counts[int(t)] += 1
+        if not total_chunk:
+            return []
+        self.mgr.append_stream(sid, bytes(total_chunk))
+        stream.last_doc = prev_doc
+        # apportion bytes to members by posting share (untagged-equivalent)
+        n_total = sum(counts.values())
+        per_posting = len(total_chunk) / max(1, n_total)
+        members = self.dict.bucket_members[sid]
+        out: List[Hashable] = []
+        for tag, cnt in counts.items():
+            key = members[tag]
+            if key is None:
+                continue
+            e = self.dict.entries[key]
+            e.nbytes += int(per_posting * cnt)
+            if e.nbytes > self.cfg.tag_extract_bytes:
+                out.append(key)
+        return out
+
+    def _extract_key(self, group: int, key: Hashable) -> None:
+        """TAG extraction (5.6): pull one key out into a dedicated stream."""
+        e = self.dict.entries[key]
+        assert e.kind == K_TAG
+        sid, tag = e.sid, e.tag
+        data = self.mgr.read_stream(sid)  # charged: extraction is build I/O
+        posts, tags = decode_postings(data, tagged=True, zigzag=True)
+        mine = posts[tags == tag]
+        order = np.lexsort((mine[:, 1], mine[:, 0]))
+        mine = mine[order]
+        keep = tags != tag
+        rest_posts, rest_tags = posts[keep], tags[keep]
+        rest_bytes = encode_postings(
+            rest_posts, tags=rest_tags, prev_doc=0, zigzag=True
+        ) if rest_posts.size else b""
+        rest_last = int(rest_posts[-1, 0]) if rest_posts.size else 0
+        self.mgr.rewrite_stream(sid, rest_bytes, rest_last)
+        members = self.dict.bucket_members[sid]
+        members[tag] = None  # tag slot retired
+        new_sid = self.mgr.new_stream(group)
+        chunk = encode_postings(mine, prev_doc=0)
+        self.mgr.append_stream(new_sid, chunk)
+        self.mgr.streams[new_sid].last_doc = int(mine[-1, 0]) if mine.size else 0
+        e.kind, e.sid, e.tag = K_OWN, new_sid, -1
+        e.nbytes = len(chunk)
+        e.last_doc = int(mine[-1, 0]) if mine.size else 0
+        self.n_extractions += 1
+
+    # ------------------------------------------------------------- queries --
+    def lookup(self, key: Hashable) -> np.ndarray:
+        """Return the (N, 2) posting list for a key, charging search I/O."""
+        e = self.dict.get(key)
+        dev = self.mgr.device
+        if e is None:
+            dev.read_small(ENTRY_FIXED_BYTES)
+            return _EMPTY
+        dev.read_small(ENTRY_FIXED_BYTES + len(key_bytes(key)) + len(e.data))
+        if e.kind == K_EM:
+            posts, _ = decode_postings(bytes(e.data))
+            return posts
+        data = self.mgr.read_stream(e.sid)
+        if e.kind == K_TAG:
+            posts, tags = decode_postings(data, tagged=True, zigzag=True)
+            mine = posts[tags == e.tag]
+            order = np.lexsort((mine[:, 1], mine[:, 0]))
+            return mine[order]
+        posts, _ = decode_postings(data)
+        return posts
+
+    def lookup_ops(self, key: Hashable) -> int:
+        """Device ops one search of this key costs (paper 5.7.3 criterion)."""
+        e = self.dict.get(key)
+        if e is None or e.kind == K_EM:
+            return 1  # dictionary access
+        return 1 + self.mgr.read_ops_estimate(e.sid)
+
+    # ------------------------------------------------------------- reports --
+    def stats(self) -> Dict[str, object]:
+        return {
+            "keys": len(self.dict.entries),
+            "streams": len(self.mgr.streams),
+            "extractions": self.n_extractions,
+            "census": self.mgr.state_census(),
+            "io": self.mgr.device.stats.as_dict(),
+            "clusters": self.mgr.storage_clusters(),
+        }

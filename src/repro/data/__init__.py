@@ -1,0 +1,5 @@
+from repro.data.corpus import (  # noqa: F401
+    generate_part,
+    extract_postings,
+    group_by_key,
+)

@@ -1,0 +1,61 @@
+"""Gradient compression for cross-pod reduction.
+
+On a multi-pod mesh the ``pod`` axis crosses the slow DCI links; the
+standard trick is to reduce-scatter in full precision inside a pod (fast
+ICI) and compress the cross-pod all-reduce.  Two pieces:
+
+  * ``quantize_int8`` / ``dequantize_int8`` — per-tensor symmetric int8
+    with an f32 scale (4x on-the-wire reduction),
+  * ``compressed_psum`` — a shard_map-compatible psum that quantizes
+    before and dequantizes after the collective on a named axis,
+  * ``compress_tree`` — applied to a full gradient pytree inside the
+    train step (simulates the wire format end to end and exposes the
+    quantization error to tests).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray,
+                    dtype=jnp.float32) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def compress_tree(grads: Any) -> Any:
+    """Quantize+dequantize every leaf (wire-format simulation)."""
+
+    def one(g):
+        q, s = quantize_int8(g)
+        return dequantize_int8(q, s, g.dtype)
+
+    return jax.tree_util.tree_map(one, grads)
+
+
+def compressed_psum(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """int8-compressed all-reduce over a named axis (use under shard_map).
+
+    Quantizes the local shard, all-reduces the int32-widened payload, and
+    rescales by the max participating scale — the classic compressed
+    ring-reduce approximation.
+    """
+    q, scale = quantize_int8(x)
+    scale_max = jax.lax.pmax(scale, axis_name)
+    # re-quantize against the common scale so the sum is well-defined
+    q_common = jnp.clip(
+        jnp.round(x.astype(jnp.float32) / scale_max), -127, 127
+    ).astype(jnp.int32)
+    total = jax.lax.psum(q_common, axis_name)
+    return (total.astype(jnp.float32) * scale_max).astype(x.dtype)

@@ -1,0 +1,62 @@
+"""Activation sharding constraints that adapt to the ambient mesh.
+
+Model code calls ``constrain(x, "batch", None, "model", ...)`` with logical
+entries; the hook resolves them against the mesh active at trace time:
+
+  * "batch" -> the tuple of batch axes present (("pod","data") / ("data",))
+  * an axis name -> itself if the mesh has it, else replicated
+  * None -> replicated
+
+Outside any mesh (CPU smoke tests) the hook is a no-op, so the same model
+code runs everywhere.  Dimensions that an axis does not divide are LEFT
+constrained — GSPMD pads intermediates, which is exactly what we want to
+force (e.g. shard 36 heads over 16 as 3-per-shard with padding rather
+than replicate the whole attention).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+BATCH_AXES = ("pod", "data")
+
+
+def _ambient_axis_names() -> Optional[Tuple[str, ...]]:
+    try:
+        from jax.interpreters import pxla
+
+        mesh = pxla.thread_resources.env.physical_mesh
+        if not mesh.empty:
+            return tuple(mesh.axis_names)
+    except Exception:
+        pass
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        if am is not None and am.axis_names:
+            return tuple(am.axis_names)
+    except Exception:
+        pass
+    return None
+
+
+def constrain(x, *entries):
+    names = _ambient_axis_names()
+    if names is None:
+        return x
+    spec = []
+    for e in entries:
+        if e == "batch":
+            batch = tuple(n for n in BATCH_AXES if n in names)
+            spec.append(
+                None if not batch else (batch[0] if len(batch) == 1 else batch)
+            )
+        elif e is None:
+            spec.append(None)
+        elif isinstance(e, str) and e in names:
+            spec.append(e)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(x, P(*spec))

@@ -1,0 +1,188 @@
+"""Sharding policy engine: param-path rules -> PartitionSpecs.
+
+Design (DESIGN.md section 4): the mesh has a tensor axis (``model``) and
+batch axes (``data``, plus ``pod`` in the multi-pod mesh).  Rules map
+parameter path regexes to *logical* specs written in axis names; the
+engine drops axis names that the target mesh does not have (so the same
+rules drive the (16,16) single-pod and (2,16,16) multi-pod meshes) and
+falls back to replication for dimensions that would not divide.
+
+Weights are sharded both ways (tensor axis on the contraction-output dim,
+batch axes on the other dim) — the GSPMD rendering of Megatron-TP x FSDP.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Rules = List[Tuple[str, Tuple]]
+
+BATCH = ("pod", "data")  # logical batch axes, in mesh order
+
+
+def _mesh_axis_size(mesh: Mesh, names) -> int:
+    if names is None:
+        return 1
+    if isinstance(names, str):
+        names = (names,)
+    size = 1
+    for n in names:
+        if n in mesh.axis_names:
+            size *= mesh.shape[n]
+    return size
+
+
+def _fit_axes(mesh: Mesh, names: Tuple[str, ...], dim: int):
+    """Largest usable subset of axis names whose product divides dim:
+    try the full tuple, then prefixes, then each single axis."""
+    names = tuple(n for n in names if n in mesh.axis_names)
+    candidates = [names[:k] for k in range(len(names), 0, -1)]
+    candidates += [(n,) for n in names]
+    for cand in candidates:
+        if not cand:
+            continue
+        if dim % _mesh_axis_size(mesh, cand) == 0:
+            return cand[0] if len(cand) == 1 else cand
+    return None
+
+
+def resolve_spec(mesh: Mesh, spec: Sequence, shape: Tuple[int, ...]) -> P:
+    """Filter a logical spec against a mesh: drop unknown axes; pjit input
+    shardings require exact divisibility, so degrade tuple -> prefix ->
+    single axis -> replicated per dimension."""
+    out = []
+    for dim, entry in zip(shape, spec):
+        if entry is None:
+            out.append(None)
+            continue
+        names = (entry,) if isinstance(entry, str) else tuple(entry)
+        out.append(_fit_axes(mesh, names, dim))
+    return P(*out)
+
+
+def sanitize_shardings(shard_tree, abstract_tree, mesh: Mesh):
+    """Re-validate a NamedSharding pytree against abstract shapes: any
+    dimension whose assigned axes do not divide it exactly is degraded
+    (prefix / single axis / replicated).  Keeps every launcher sharding
+    legal for pjit regardless of batch size or mesh."""
+
+    def one(shard, leaf):
+        if not isinstance(shard, NamedSharding):
+            return shard
+        shape = np.shape(leaf) if not hasattr(leaf, "shape") else leaf.shape
+        spec = tuple(shard.spec) + (None,) * (len(shape) - len(tuple(shard.spec)))
+        return NamedSharding(mesh, resolve_spec(mesh, spec, shape))
+
+    return jax.tree_util.tree_map(
+        one, shard_tree, abstract_tree,
+        is_leaf=lambda x: isinstance(x, NamedSharding),
+    )
+
+
+def shard_by_rules(
+    params: Any, mesh: Mesh, rules: Rules, default: Tuple = ()
+) -> Any:
+    """Build a NamedSharding pytree matching ``params`` from path rules."""
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        name = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path
+        )
+        shape = np.shape(leaf)
+        chosen: Optional[P] = None
+        for pattern, spec in rules:
+            if re.search(pattern, name):
+                spec = tuple(spec)
+                if len(spec) < len(shape):  # right-align (leading stack dims)
+                    spec = (None,) * (len(shape) - len(spec)) + spec
+                chosen = resolve_spec(mesh, spec[: len(shape)], shape)
+                break
+        if chosen is None:
+            chosen = resolve_spec(
+                mesh, tuple(default)[: len(shape)] + (None,) * len(shape),
+                shape,
+            )
+        specs.append(NamedSharding(mesh, chosen))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ------------------------------------------------------- family rule sets ---
+# Transformer (dense + MoE).  Stacked layer params have a leading L dim,
+# handled by right-alignment in shard_by_rules.
+LM_RULES: Rules = [
+    (r"embed/table", ("model", "data")),
+    (r"unembed/w", ("data", "model")),
+    (r"block/(wq|wk|wv)/w", ("data", "model")),
+    (r"block/(wq|wk|wv)/b", ("model",)),
+    (r"block/wo/w", ("model", "data")),
+    (r"block/mlp/(wg|wu)/w", ("data", "model")),
+    (r"block/mlp/wd/w", ("model", "data")),
+    (r"block/moe/router", ("data", None)),
+    (r"block/moe/(wg|wu)$", ("model", "data", None)),
+    (r"block/moe/wd$", ("model", None, "data")),
+    (r"block/moe/shared/(wg|wu)", ("data", "model")),
+    (r"block/moe/shared/wd", ("model", "data")),
+    (r"ln", (None,)),
+]
+
+# RecSys: embedding tables row-sharded over every axis (MLPerf-DLRM style
+# table-wise+row-wise parallelism); MLPs tensor-sharded on their wide dim.
+RECSYS_RULES: Rules = [
+    (r"tables/t\d+/table", (BATCH + ("model",), None)),
+    (r"(item|cate|user|ctx|icat)/table", (BATCH + ("model",), None)),
+    (r"(bot|top|head|attn|user_tower|item_tower)/fc\d+/w", (None, "model")),
+    (r"pos/table", (None, None)),
+    (r"blocks/.*", (None, None)),
+]
+
+# GNN: parameters are tiny (channel mixers) -> replicate everything.
+GNN_RULES: Rules = [
+    (r".*", ()),
+]
+
+
+def batch_spec(mesh: Mesh, *, extra: Tuple = ()) -> P:
+    names = tuple(n for n in BATCH if n in mesh.axis_names)
+    lead = names[0] if len(names) == 1 else names
+    return P(lead, *extra)
+
+
+def shard_batch(batch: Any, mesh: Mesh, leading_specs: Dict[str, P] = None
+                ) -> Any:
+    """NamedSharding pytree for a batch dict: shard dim 0 over batch axes."""
+    leading_specs = leading_specs or {}
+
+    def one(path, leaf):
+        name = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path
+        )
+        if name in leading_specs:
+            return NamedSharding(mesh, leading_specs[name])
+        shape = np.shape(leaf)
+        if len(shape) == 0:
+            return NamedSharding(mesh, P())
+        spec = batch_spec(mesh)
+        bsz = _mesh_axis_size(mesh, tuple(n for n in BATCH if n in mesh.axis_names))
+        if shape[0] % bsz != 0:
+            return NamedSharding(mesh, P())
+        return NamedSharding(
+            mesh, P(*spec, *([None] * (len(shape) - 1)))
+        )
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(batch)
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(p, l) for p, l in flat]
+    )
+
+
+def replicated(mesh: Mesh, tree: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda _: NamedSharding(mesh, P()), tree
+    )

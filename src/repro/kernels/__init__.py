@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel directory has:
+  kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd dispatch wrapper (interpret=True on CPU)
+  ref.py    — pure-jnp oracle, used by the models and the tests
+
+Kernels:
+  flash_attention — causal online-softmax attention (train/prefill)
+  paged_attention — decode attention through a block table whose depth is
+                    bounded by the paper's chain-length limit (CH strategy)
+  embedding_bag   — fused gather + segment-reduce (recsys hot path)
+  intersect       — sorted posting-list intersection as dense VPU tiles
+                    (TPU adaptation of merge-intersection: no pointer
+                    chasing, block-parallel compares)
+"""

@@ -1,0 +1,2 @@
+from repro.kernels.embedding_bag.ops import embedding_bag_fixed  # noqa: F401
+from repro.kernels.embedding_bag.ref import embedding_bag_fixed_ref  # noqa: F401

@@ -1,0 +1,24 @@
+"""Dispatch wrapper for the fused EmbeddingBag kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag.kernel import embedding_bag_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@jax.jit
+def embedding_bag_fixed(
+    table: jnp.ndarray,    # (V, D)
+    ids: jnp.ndarray,      # (B, K)
+    weights: jnp.ndarray,  # (B, K)
+) -> jnp.ndarray:
+    return embedding_bag_kernel(
+        table, ids.astype(jnp.int32), weights.astype(jnp.float32),
+        interpret=not _on_tpu(),
+    )

@@ -1,0 +1,20 @@
+"""Oracle: fixed-size multi-hot EmbeddingBag (pure jnp)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def embedding_bag_fixed_ref(
+    table: jnp.ndarray,    # (V, D)
+    ids: jnp.ndarray,      # (B, K)
+    weights: jnp.ndarray,  # (B, K)
+    mode: str = "sum",
+) -> jnp.ndarray:
+    rows = table[ids]                        # (B, K, D)
+    out = (rows * weights[..., None].astype(rows.dtype)).sum(axis=1)
+    if mode == "mean":
+        out = out / jnp.maximum(
+            weights.sum(axis=1), 1e-9
+        )[:, None].astype(out.dtype)
+    return out

@@ -1,0 +1,106 @@
+"""Flash attention Pallas kernel (TPU): causal online-softmax.
+
+Tiling: grid = (B*H, Sq/bq, Sk/bk), kv innermost so the VMEM scratch
+(m, l, acc) carries the online-softmax state across kv blocks for one
+q block.  Block shapes are MXU-aligned (multiples of 128 on the lane
+dim); the q/k/v tiles live in VMEM via BlockSpec index maps.
+
+Causality is exploited at block granularity: kv blocks strictly above
+the diagonal are skipped via @pl.when (their compute contributes
+nothing), which is the 2x triangular saving.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            bq: int, bk: int, causal: bool, scale: float):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    run = True
+    if causal:
+        # skip blocks entirely above the diagonal
+        run = (kj * bk) <= (qi * bq + bq - 1)
+
+    @pl.when(run)
+    def _block():
+        q = q_ref[0].astype(jnp.float32)          # (bq, D)
+        k = k_ref[0].astype(jnp.float32)          # (bk, D)
+        v = v_ref[0].astype(jnp.float32)          # (bk, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                  # (bq, bk)
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = m_new
+
+    @pl.when(kj == nk - 1)
+    def _final():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(
+    q: jnp.ndarray,  # (BH, S, D)
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    bq: int = 128,
+    bk: int = 128,
+    causal: bool = True,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    BH, S, D = q.shape
+    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    scale = 1.0 / math.sqrt(D)
+    grid = (BH, S // bq, S // bk)
+    kern = functools.partial(
+        _kernel, bq=bq, bk=bk, causal=causal, scale=scale
+    )
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # running max m
+            pltpu.VMEM((bq, 1), jnp.float32),   # running denom l
+            pltpu.VMEM((bq, D), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

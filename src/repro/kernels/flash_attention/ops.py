@@ -1,0 +1,43 @@
+"""Dispatch wrapper: (B, H, S, D) attention through the Pallas kernel.
+
+On CPU (this container) the kernel body runs in interpret mode; on TPU the
+same call compiles to Mosaic.  ``flash_attention`` folds (B, H) into the
+grid's batch dimension and picks MXU-aligned block sizes.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "bq", "bk"))
+def flash_attention(
+    q: jnp.ndarray,  # (B, H, S, D)
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    causal: bool = True,
+    bq: int = 128,
+    bk: int = 128,
+) -> jnp.ndarray:
+    B, H, S, D = q.shape
+    bq = min(bq, S)
+    bk = min(bk, S)
+    out = flash_attention_kernel(
+        q.reshape(B * H, S, D),
+        k.reshape(B * H, S, D),
+        v.reshape(B * H, S, D),
+        bq=bq,
+        bk=bk,
+        causal=causal,
+        interpret=not _on_tpu(),
+    )
+    return out.reshape(B, H, S, D)

@@ -1,0 +1,25 @@
+"""Oracle: causal attention with exact softmax (pure jnp)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(
+    q: jnp.ndarray,  # (B, H, S, D)
+    k: jnp.ndarray,  # (B, H, S, D)
+    v: jnp.ndarray,  # (B, H, S, D)
+    causal: bool = True,
+) -> jnp.ndarray:
+    S = q.shape[2]
+    scores = jnp.einsum(
+        "bhsd,bhtd->bhst", q, k, preferred_element_type=jnp.float32
+    ) / math.sqrt(q.shape[-1])
+    if causal:
+        mask = jnp.arange(S)[:, None] >= jnp.arange(S)[None, :]
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", w.astype(v.dtype), v)

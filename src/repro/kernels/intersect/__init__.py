@@ -1,0 +1,2 @@
+from repro.kernels.intersect.ops import intersect_sorted  # noqa: F401
+from repro.kernels.intersect.ref import intersect_sorted_ref  # noqa: F401

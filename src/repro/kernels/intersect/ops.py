@@ -1,0 +1,32 @@
+"""Dispatch wrapper: pad to block multiples, run the intersect kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.intersect.kernel import intersect_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def intersect_sorted(a, b, bn: int = 1024, bm: int = 1024):
+    """mask[i] = a[i] in b for sorted int32 arrays (host-callable; pads to
+    block multiples with sentinels that can never match)."""
+    a = jnp.asarray(a, jnp.int32)
+    b = jnp.asarray(b, jnp.int32)
+    N, M = a.shape[0], b.shape[0]
+    bn = min(bn, max(8, 1 << int(np.ceil(np.log2(max(N, 1))))))
+    bm = min(bm, max(8, 1 << int(np.ceil(np.log2(max(M, 1))))))
+    pn = (-N) % bn
+    pm = (-M) % bm
+    big = jnp.iinfo(jnp.int32).max
+    ap = jnp.concatenate([a, jnp.full((pn,), big - 1, a.dtype)])
+    bp = jnp.concatenate([b, jnp.full((pm,), big, b.dtype)])
+    mask = intersect_kernel(
+        ap, bp, bn=bn, bm=bm, interpret=not _on_tpu()
+    )
+    return mask[:N]

@@ -1,0 +1,11 @@
+"""Oracle: sorted posting intersection membership (pure jnp)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def intersect_sorted_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """mask[i] = a[i] in b, for sorted int arrays (searchsorted oracle)."""
+    idx = jnp.clip(jnp.searchsorted(b, a), 0, b.shape[0] - 1)
+    return b[idx] == a

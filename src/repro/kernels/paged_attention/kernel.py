@@ -1,0 +1,109 @@
+"""Paged decode attention Pallas kernel (TPU).
+
+The page table is the device rendering of the paper's stream-of-clusters:
+a sequence's KV lives in pages scattered through a global pool, located
+through a bounded indirection structure (the CH chain-length limit bounds
+``max_pages`` indirections per read — paper 5.7.3).
+
+Mechanics: ``block_table`` and ``lengths`` ride in scalar-prefetch SMEM
+(PrefetchScalarGridSpec) so the k/v BlockSpec index maps can pick the
+page: block (1, page, D) of the pool at row ``table[b, p]``.  The grid is
+(B, max_pages) with the online-softmax state in VMEM scratch, exactly the
+flash pattern but with gathered pages.  Invalid tail pages are masked via
+``lengths``.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(table_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+            m_scr, l_scr, acc_scr, *, page: int, scale: float):
+    b = pl.program_id(0)
+    p = pl.program_id(1)
+    n_p = pl.num_programs(1)
+
+    @pl.when(p == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[b]
+    page_start = p * page
+
+    @pl.when(page_start < length)
+    def _block():
+        q = q_ref[0].astype(jnp.float32)              # (H, D)
+        k = k_ref[0].astype(jnp.float32)              # (page, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                      # (H, page)
+        pos = page_start + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1
+        )
+        s = jnp.where(pos < length, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        pexp = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + pexp.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            pexp, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = m_new
+
+    @pl.when(p == n_p - 1)
+    def _final():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(
+            o_ref.dtype
+        )
+
+
+def paged_attention_kernel(
+    q: jnp.ndarray,            # (B, H, D)
+    k_pool: jnp.ndarray,       # (n_pages, page, D)
+    v_pool: jnp.ndarray,       # (n_pages, page, D)
+    block_table: jnp.ndarray,  # (B, max_pages)
+    lengths: jnp.ndarray,      # (B,)
+    *,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    B, H, D = q.shape
+    n_pages, page, _ = k_pool.shape
+    max_pages = block_table.shape[1]
+    scale = 1.0 / math.sqrt(D)
+    kern = functools.partial(_kernel, page=page, scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # block_table, lengths
+        grid=(B, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, H, D), lambda b, p, tbl, ln: (b, 0, 0)),
+            pl.BlockSpec((1, page, D), lambda b, p, tbl, ln: (tbl[b, p], 0, 0)),
+            pl.BlockSpec((1, page, D), lambda b, p, tbl, ln: (tbl[b, p], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, D), lambda b, p, tbl, ln: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((H, 1), jnp.float32),
+            pltpu.VMEM((H, 1), jnp.float32),
+            pltpu.VMEM((H, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        interpret=interpret,
+    )(block_table, lengths, q, k_pool, v_pool)

@@ -1,0 +1,28 @@
+"""Dispatch wrapper for paged decode attention."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention.kernel import paged_attention_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@jax.jit
+def paged_attention(
+    q: jnp.ndarray,            # (B, H, D)
+    k_pool: jnp.ndarray,       # (n_pages, page, D)
+    v_pool: jnp.ndarray,
+    block_table: jnp.ndarray,  # (B, max_pages)
+    lengths: jnp.ndarray,      # (B,)
+) -> jnp.ndarray:
+    return paged_attention_kernel(
+        q, k_pool, v_pool, block_table, lengths,
+        interpret=not _on_tpu(),
+    )

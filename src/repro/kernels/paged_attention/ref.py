@@ -1,0 +1,31 @@
+"""Oracle: decode attention through a page table (pure jnp)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_attention_ref(
+    q: jnp.ndarray,            # (B, H, D) one query token per sequence
+    k_pool: jnp.ndarray,       # (n_pages, page, D) global page pool
+    v_pool: jnp.ndarray,       # (n_pages, page, D)
+    block_table: jnp.ndarray,  # (B, max_pages) int32 page ids
+    lengths: jnp.ndarray,      # (B,) valid tokens per sequence
+) -> jnp.ndarray:
+    B, H, D = q.shape
+    n_pages, page, _ = k_pool.shape
+    max_pages = block_table.shape[1]
+    k = k_pool[block_table]        # (B, max_pages, page, D)
+    v = v_pool[block_table]
+    k = k.reshape(B, max_pages * page, D)
+    v = v.reshape(B, max_pages * page, D)
+    scores = jnp.einsum(
+        "bhd,btd->bht", q, k, preferred_element_type=jnp.float32
+    ) / math.sqrt(D)
+    valid = jnp.arange(max_pages * page)[None] < lengths[:, None]
+    scores = jnp.where(valid[:, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bht,btd->bhd", w.astype(v.dtype), v)

@@ -1,0 +1,211 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# The two lines above MUST run before any other import (jax locks the
+# device count at first initialization).
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell:
+    with mesh:
+        lowered  = jax.jit(step, in_shardings=...).lower(*abstract_args)
+        compiled = lowered.compile()
+        memory_analysis / cost_analysis / collective parse
+
+Results are cached as JSON under experiments/dryrun/ so the roofline
+report (launch/roofline.py) and EXPERIMENTS.md tables read from disk.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch minicpm-2b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+
+from repro.configs.registry import ARCH_IDS, get_bundle, shape_cells
+from repro.launch import hlo_stats
+from repro.launch.mesh import HW, make_production_mesh
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "../../../experiments/dryrun")
+
+
+def cell_path(arch: str, shape: str, mesh_name: str) -> str:
+    return os.path.abspath(
+        os.path.join(OUT_DIR, f"{arch}__{shape}__{mesh_name}.json")
+    )
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             save: bool = True) -> Dict:
+    mesh_name = "multi" if multi_pod else "single"
+    bundle = get_bundle(arch)
+    cell = bundle.cells[shape]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+
+    t0 = time.time()
+    with mesh:
+        pshard = bundle.param_shardings(mesh)
+        in_shardings = [pshard]
+        abstract = [bundle.abstract_params()]
+        if hasattr(bundle, "cell_inits"):  # per-cell param variants (GNN)
+            abstract = [jax.eval_shape(bundle.cell_inits[shape],
+                                       jax.random.PRNGKey(0))]
+            from repro.distributed.sharding import shard_by_rules
+
+            in_shardings = [shard_by_rules(abstract[0], mesh, bundle.rules)]
+        if cell.kind == "train":
+            oshard = jax.tree_util.tree_map(
+                lambda s: s, in_shardings[0]
+            )
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            from repro.train.optim import adamw_init
+
+            opt_abstract = jax.eval_shape(adamw_init, abstract[0])
+            opt_shard = {
+                "mu": in_shardings[0],
+                "nu": jax.tree_util.tree_map(lambda s: s, in_shardings[0]),
+                "step": NamedSharding(mesh, P()),
+            }
+            abstract.append(opt_abstract)
+            in_shardings.append(opt_shard)
+        ishard = cell.input_sharding(mesh)
+        abstract.append(cell.inputs["batch"])
+        in_shardings.append(ishard["batch"])
+
+        from repro.distributed.sharding import sanitize_shardings
+
+        in_shardings = [
+            sanitize_shardings(s, a, mesh)
+            for s, a in zip(in_shardings, abstract)
+        ]
+        jitted = jax.jit(cell.fn, in_shardings=tuple(in_shardings))
+        lowered = jitted.lower(*abstract)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+
+    from repro.launch import hlo_graph
+
+    xla_flops = float((cost or {}).get("flops", 0.0))
+    xla_bytes = float((cost or {}).get("bytes accessed", 0.0))
+    n_per_pod = n_chips // 2 if multi_pod else n_chips
+    graph = hlo_graph.analyze(hlo, n_chips, n_per_pod=n_per_pod)
+    # per-pod DCI provision: dci_bw per chip x chips per pod; cross-pod
+    # exchange moves ~2(P-1)/P of the payload across the pod boundary
+    cross_pod_chip_bytes = (
+        graph["cross_pod_bytes"] * 1.0 / n_per_pod if multi_pod else 0.0
+    )
+    terms = hlo_stats.roofline_terms(
+        graph["dot_flops"], graph["hbm_bytes"],
+        graph["collectives"]["total_wire_bytes"], n_chips, HW,
+        cross_pod_bytes=cross_pod_chip_bytes,
+    )
+
+    def _mem(name):
+        try:
+            return int(getattr(mem, name))
+        except Exception:
+            return None
+
+    result = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": mesh_name,
+        "n_chips": int(n_chips),
+        "kind": cell.kind,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "flops": graph["dot_flops"],
+        "bytes_accessed": graph["hbm_bytes"],
+        "xla_cost_flops": xla_flops,
+        "xla_cost_bytes": xla_bytes,
+        "cross_pod_bytes": graph["cross_pod_bytes"],
+        "collectives": graph["collectives"],
+        "memory": {
+            "argument_size": _mem("argument_size_in_bytes"),
+            "output_size": _mem("output_size_in_bytes"),
+            "temp_size": _mem("temp_size_in_bytes"),
+            "generated_code_size": _mem("generated_code_size_in_bytes"),
+        },
+        "roofline": terms,
+        "ok": True,
+    }
+    if save:
+        os.makedirs(OUT_DIR, exist_ok=True)
+        with open(cell_path(arch, shape, mesh_name), "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default="")
+    ap.add_argument("--shape", type=str, default="")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-cached", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    for a in archs:
+        shapes = shape_cells(a) if (args.all or not args.shape) else [args.shape]
+        for s in shapes:
+            cells.append((a, s))
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = []
+    for a, s in cells:
+        for mp in meshes:
+            mesh_name = "multi" if mp else "single"
+            path = cell_path(a, s, mesh_name)
+            if args.skip_cached and os.path.exists(path):
+                with open(path) as f:
+                    if json.load(f).get("ok"):
+                        print(f"[cached] {a} x {s} x {mesh_name}")
+                        continue
+            try:
+                r = run_cell(a, s, mp)
+                tm = r["roofline"]
+                print(
+                    f"[ok] {a} x {s} x {mesh_name}: "
+                    f"compile={r['compile_s']}s flops={r['flops']:.3e} "
+                    f"bytes={r['bytes_accessed']:.3e} "
+                    f"wire={r['collectives']['total_wire_bytes']:.3e} "
+                    f"dominant={tm['dominant']}"
+                )
+            except Exception as e:
+                failures.append((a, s, mesh_name, repr(e)))
+                traceback.print_exc()
+                os.makedirs(OUT_DIR, exist_ok=True)
+                with open(cell_path(a, s, mesh_name), "w") as f:
+                    json.dump(
+                        {"arch": a, "shape": s, "mesh": mesh_name,
+                         "ok": False, "error": repr(e)}, f, indent=1,
+                    )
+    print(f"\n{len(cells) * len(meshes) - len(failures)} ok, "
+          f"{len(failures)} failed")
+    for f_ in failures:
+        print("FAIL:", f_)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

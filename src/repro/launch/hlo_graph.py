@@ -1,0 +1,427 @@
+"""HLO call-graph cost analysis with loop trip-count multiplication.
+
+XLA's built-in ``compiled.cost_analysis()`` counts each ``while`` body
+ONCE — a transformer lowered as ``lax.scan`` over 40 layers under-reports
+FLOPs, bytes and collectives by ~40x (and gradient-accumulation scans
+compound it).  This analyzer parses the optimized HLO text into a call
+graph and evaluates:
+
+  * dot_flops          — 2 * prod(result dims) * prod(contracted dims),
+  * hbm_bytes          — per top-level instruction: result + operand
+                         bytes (fusions are one kernel: internals skipped),
+  * collectives        — result bytes and ring wire bytes per op kind,
+                         with replica-group sizes,
+
+with fusion/call/while/conditional edges resolved and while bodies
+multiplied by their trip count (parsed from the loop condition's constant
+bound).  Validated in tests against hand-computed matmul/scan programs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+COLLECTIVE_KINDS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# ops that move no real data / are control only
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+
+def _parse_shape_dims(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype in _DTYPE_BYTES:
+            out.append(
+                (dtype, [int(d) for d in dims.split(",")] if dims else [])
+            )
+    return out
+
+
+def type_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _parse_shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    operands: List[str]
+    raw: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    by_name: Dict[str, Instr]
+
+
+_COMP_NAME = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)")
+# type (lazy) followed by an op name directly attached to '('
+_INSTR = re.compile(
+    r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([a-z][a-z0-9\-]*)\((.*)$"
+)
+_OPERAND = re.compile(r"%([\w.\-]+)")
+
+
+def parse_module(hlo: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry = ""
+    for line in hlo.splitlines():
+        s = line.strip()
+        if not s:
+            continue
+        if s.endswith("{") and " = " not in s:
+            m = _COMP_NAME.match(s)
+            if m and not s.startswith("{"):
+                cur = Computation(m.group(1), [], {})
+                comps[cur.name] = cur
+                if s.startswith("ENTRY"):
+                    entry = cur.name
+                continue
+        if s == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR.match(s)
+        if not m:
+            continue
+        name, type_str, op, rest = m.groups()
+        # operand names: only those before any attribute list (calls=,
+        # body=, condition= reference computations — captured separately)
+        args_part = rest.split("), ")[0] if "), " in rest else rest
+        operands = _OPERAND.findall(args_part.split(")")[0])
+        inst = Instr(name, type_str, op, operands, s)
+        cur.instrs.append(inst)
+        cur.by_name[name] = inst
+    return comps, entry
+
+
+def _attr_comp(raw: str, attr: str) -> Optional[str]:
+    m = re.search(attr + r"=%?([\w.\-]+)", raw)
+    return m.group(1) if m else None
+
+
+def _trip_count(while_raw: str, cond: Optional[Computation]) -> int:
+    """Loop bound: prefer XLA's known_trip_count backend_config on the
+    while op; fall back to the largest positive constant in the loop
+    condition (the bound the induction variable is compared against)."""
+    m = re.search(r'known_trip_count["\s:{]+n["\s:]+"?(\d+)', while_raw)
+    if m:
+        return int(m.group(1))
+    if cond is None:
+        return 1
+    best = 1
+    for i in cond.instrs:
+        if i.op == "constant":
+            mm = re.search(r"constant\((\d+)\)", i.raw)
+            if mm:
+                best = max(best, int(mm.group(1)))
+    return best
+
+
+def _group_size(raw: str, default: int) -> int:
+    m = re.search(r"replica_groups=\{\{([0-9,]+)\}", raw)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", raw)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+@dataclasses.dataclass
+class Costs:
+    dot_flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_counts: Dict[str, float] = dataclasses.field(default_factory=dict)
+    coll_result_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+    coll_wire_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+    cross_pod_bytes: float = 0.0  # collective result bytes spanning pods
+
+    def add(self, other: "Costs", mult: float = 1.0) -> None:
+        self.dot_flops += other.dot_flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        self.cross_pod_bytes += other.cross_pod_bytes * mult
+        for d_self, d_other in (
+            (self.coll_counts, other.coll_counts),
+            (self.coll_result_bytes, other.coll_result_bytes),
+            (self.coll_wire_bytes, other.coll_wire_bytes),
+        ):
+            for k, v in d_other.items():
+                d_self[k] = d_self.get(k, 0.0) + v * mult
+
+
+def _spans_pods(raw: str, n_per_pod: int) -> bool:
+    """True if any replica group mixes device ids from different pods."""
+    m = re.search(r"replica_groups=\{(.+?)\}\}", raw)
+    if not m:
+        # iota form [groups,size]<...> — conservatively assume spanning
+        return "replica_groups=[" in raw
+    for grp in re.findall(r"\{([0-9,]+)", "{" + m.group(1) + "}"):
+        ids = [int(x) for x in grp.split(",") if x]
+        pods = {i // n_per_pod for i in ids}
+        if len(pods) > 1:
+            return True
+    return False
+
+
+class HloAnalyzer:
+    def __init__(self, hlo_text: str, n_devices: int,
+                 n_per_pod: Optional[int] = None):
+        self.comps, self.entry = parse_module(hlo_text)
+        self.n_devices = n_devices
+        self.n_per_pod = n_per_pod or n_devices
+        self._memo: Dict[Tuple[str, bool], Costs] = {}
+
+    # -- per-instruction costs -------------------------------------------------
+    def _dot_flops(self, comp: Computation, inst: Instr) -> float:
+        result_elems = 0
+        for _, dims in _parse_shape_dims(inst.type_str):
+            n = 1
+            for d in dims:
+                n *= d
+            result_elems += n
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", inst.raw)
+        contract = 1
+        if m and inst.operands:
+            lhs = comp.by_name.get(inst.operands[0])
+            if lhs is not None:
+                shapes = _parse_shape_dims(lhs.type_str)
+                if shapes:
+                    dims = shapes[0][1]
+                    for ci in m.group(1).split(","):
+                        if ci != "" and int(ci) < len(dims):
+                            contract *= dims[int(ci)]
+        return 2.0 * result_elems * contract
+
+    def _operand_bytes(self, comp: Computation, inst: Instr) -> int:
+        total = 0
+        for o in inst.operands:
+            src = comp.by_name.get(o)
+            if src is not None:
+                total += type_bytes(src.type_str)
+        return total
+
+    # slicing ops read only their result-sized window, not the operand
+    _SLICING = {"dynamic-slice", "slice", "gather"}
+
+    def _inst_hbm_bytes(self, comp: Computation, inst: Instr) -> float:
+        """HBM traffic of one top-level (unfused) instruction."""
+        op = inst.op
+        res = type_bytes(inst.type_str)
+        if op in self._SLICING or op in ("broadcast", "iota", "reshape",
+                                         "transpose", "copy", "reverse"):
+            return 2.0 * res  # read window + write result
+        if op in ("dynamic-update-slice", "scatter"):
+            # read+write the updated window (operand 1 is the update)
+            upd = 0
+            if len(inst.operands) > 1:
+                src = comp.by_name.get(inst.operands[1])
+                if src is not None:
+                    upd = type_bytes(src.type_str)
+            return res * 0.0 + 2.0 * max(upd, 1)
+        if op == "fusion":
+            dus = self._dus_root_update_bytes(inst)
+            if dus is not None:
+                # scan-output / in-place update fusion: on TPU the carried
+                # buffer is aliased and only the update window moves.  (The
+                # CPU backend wraps these in full-buffer bf16<->f32 convert
+                # sandwiches — a backend artifact we must not count.)
+                return 2.0 * dus
+            return res + self._fusion_read_bytes(comp, inst)
+        return res + self._operand_bytes(comp, inst)
+
+    def _dus_root_update_bytes(self, inst: Instr) -> Optional[float]:
+        """If a fusion's root is dynamic-update-slice (possibly behind
+        converts), return the update-window byte count, else None."""
+        callee_name = _attr_comp(inst.raw, "calls")
+        callee = self.comps.get(callee_name) if callee_name else None
+        if callee is None or not callee.instrs:
+            return None
+        root = callee.instrs[-1]
+        for i in callee.instrs:
+            if i.raw.startswith("ROOT"):
+                root = i
+                break
+        seen = set()
+        while root.op == "convert" and root.operands:
+            if root.name in seen:
+                return None
+            seen.add(root.name)
+            nxt = callee.by_name.get(root.operands[0])
+            if nxt is None:
+                return None
+            root = nxt
+        if root.op != "dynamic-update-slice" or len(root.operands) < 2:
+            return None
+        upd = callee.by_name.get(root.operands[1])
+        return float(type_bytes(upd.type_str)) if upd is not None else None
+
+    def _fusion_read_bytes(self, comp: Computation, inst: Instr) -> float:
+        """Bytes read by a fusion: parameters that are only sliced inside
+        the fused computation contribute their slice windows, not their
+        full extent (the scan-over-stacked-weights pattern)."""
+        callee_name = _attr_comp(inst.raw, "calls")
+        callee = self.comps.get(callee_name) if callee_name else None
+        total = 0.0
+        for pos, o in enumerate(inst.operands):
+            src = comp.by_name.get(o)
+            if src is None:
+                continue
+            full = type_bytes(src.type_str)
+            if callee is None:
+                total += full
+                continue
+            # find the callee's parameter(pos) and its consumers
+            pname = None
+            for ci in callee.instrs:
+                if ci.op == "parameter" and re.search(
+                    rf"parameter\({pos}\)", ci.raw
+                ):
+                    pname = ci.name
+                    break
+            if pname is None:
+                total += full
+                continue
+            consumers = [
+                ci for ci in callee.instrs if pname in ci.operands
+            ]
+            if consumers and all(
+                c.op in self._SLICING for c in consumers
+            ):
+                total += sum(type_bytes(c.type_str) for c in consumers)
+            else:
+                total += full
+        return total
+
+    # -- computation evaluation ---------------------------------------------------
+    def costs_of(self, comp_name: str, fused: bool = False) -> Costs:
+        key = (comp_name, fused)
+        if key in self._memo:
+            return self._memo[key]
+        comp = self.comps.get(comp_name)
+        out = Costs()
+        self._memo[key] = out
+        if comp is None:
+            return out
+        for inst in comp.instrs:
+            op = inst.op
+            if op == "fusion":
+                callee = _attr_comp(inst.raw, "calls")
+                if callee:
+                    out.add(self.costs_of(callee, fused=True))
+                out.hbm_bytes += self._inst_hbm_bytes(comp, inst)
+                continue
+            if op in ("call", "custom-call"):
+                callee = _attr_comp(inst.raw, "calls") or _attr_comp(
+                    inst.raw, "to_apply"
+                )
+                if callee:
+                    out.add(self.costs_of(callee, fused=fused))
+                if not fused:
+                    out.hbm_bytes += type_bytes(inst.type_str)
+                continue
+            if op == "while":
+                body = _attr_comp(inst.raw, "body")
+                cond = _attr_comp(inst.raw, "condition")
+                trips = _trip_count(inst.raw, self.comps.get(cond))
+                if body:
+                    out.add(self.costs_of(body, fused=False), mult=max(1, trips))
+                continue
+            if op == "conditional":
+                for m_ in re.finditer(r"(?:branch_computations=\{|true_computation=|false_computation=)%?([\w.\-]+)", inst.raw):
+                    out.add(self.costs_of(m_.group(1), fused=False))
+                continue
+            if op == "dot" or op == "convolution":
+                out.dot_flops += self._dot_flops(comp, inst)
+                if not fused:
+                    out.hbm_bytes += type_bytes(inst.type_str) + \
+                        self._operand_bytes(comp, inst)
+                continue
+            if op == "dynamic-slice" and fused:
+                continue
+            base = None
+            for c in COLLECTIVE_KINDS:
+                if op == c or op.startswith(c + "-start"):
+                    base = c
+                    break
+            if base is not None:
+                nbytes = type_bytes(inst.type_str)
+                n = max(2, _group_size(inst.raw, self.n_devices))
+                if base == "all-reduce":
+                    wire = 2.0 * (n - 1) / n * nbytes
+                elif base == "all-gather":
+                    wire = (n - 1) / n * nbytes
+                elif base == "reduce-scatter":
+                    wire = (n - 1.0) * nbytes
+                elif base == "all-to-all":
+                    wire = (n - 1) / n * nbytes
+                else:
+                    wire = float(nbytes)
+                out.coll_counts[base] = out.coll_counts.get(base, 0) + 1
+                out.coll_result_bytes[base] = (
+                    out.coll_result_bytes.get(base, 0) + nbytes
+                )
+                out.coll_wire_bytes[base] = (
+                    out.coll_wire_bytes.get(base, 0) + wire
+                )
+                out.hbm_bytes += nbytes
+                if self.n_per_pod < self.n_devices and _spans_pods(
+                    inst.raw, self.n_per_pod
+                ):
+                    out.cross_pod_bytes += nbytes
+                continue
+            if op in _FREE_OPS or op.endswith("-done"):
+                continue
+            if not fused:
+                # top-level unfused op: one kernel reading operands,
+                # writing result
+                out.hbm_bytes += self._inst_hbm_bytes(comp, inst)
+        return out
+
+    def entry_costs(self) -> Costs:
+        return self.costs_of(self.entry, fused=False)
+
+
+def analyze(hlo_text: str, n_devices: int, n_per_pod: Optional[int] = None
+            ) -> Dict:
+    a = HloAnalyzer(hlo_text, n_devices, n_per_pod)
+    c = a.entry_costs()
+    return {
+        "dot_flops": c.dot_flops,
+        "hbm_bytes": c.hbm_bytes,
+        "cross_pod_bytes": c.cross_pod_bytes,
+        "collectives": {
+            "counts": {k: int(v) for k, v in c.coll_counts.items()},
+            "result_bytes": {k: int(v) for k, v in c.coll_result_bytes.items()},
+            "wire_bytes": {k: int(v) for k, v in c.coll_wire_bytes.items()},
+            "total_wire_bytes": int(sum(c.coll_wire_bytes.values())),
+        },
+    }

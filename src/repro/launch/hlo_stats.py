@@ -1,0 +1,153 @@
+"""HLO analysis: collective byte counting + roofline terms.
+
+``cost_analysis()`` gives HLO FLOPs and bytes accessed but NOT collective
+traffic; we parse the optimized HLO text and sum the result-shape bytes of
+every collective op, converting to on-the-wire bytes with the standard
+ring-algorithm factors:
+
+  op                  wire bytes per participating shard (ring, n shards)
+  all-reduce          2 (n-1)/n x result
+  all-gather          (n-1)/n x result          (result = gathered size)
+  reduce-scatter      (n-1)/n x operand ~ result x (n-1)
+  all-to-all          (n-1)/n x result
+  collective-permute  1 x result
+
+n is read from the op's replica_groups when present (else the mesh size).
+Terms are reported per-chip per the brief's formulas.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def shape_bytes(type_str: str) -> int:
+    """Total bytes of all array shapes in an HLO type string (handles
+    tuples by summing every embedded shape)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = re.search(r"replica_groups=\{\{([0-9,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:  # [groups, group_size] form
+        return int(m.group(2))
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    result_bytes: Dict[str, int]
+    wire_bytes: Dict[str, float]
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(self.wire_bytes.values())
+
+    def as_dict(self) -> Dict:
+        return {
+            "counts": self.counts,
+            "result_bytes": self.result_bytes,
+            "wire_bytes": {k: int(v) for k, v in self.wire_bytes.items()},
+            "total_wire_bytes": int(self.total_wire_bytes),
+        }
+
+
+def collective_stats(hlo_text: str, n_devices: int) -> CollectiveStats:
+    counts: Dict[str, int] = {}
+    result_bytes: Dict[str, int] = {}
+    wire: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # opname appears as `= <type> opname(` — match the instruction
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*([a-z0-9\-]+)\(", s)
+        if not m:
+            continue
+        type_str, op = m.group(1), m.group(2)
+        base = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-start") or op == c + "-done":
+                base = c
+                break
+        if base is None:
+            continue
+        if op.endswith("-done"):
+            continue  # counted at -start
+        nbytes = shape_bytes(type_str)
+        n = max(2, _group_size(s, n_devices))
+        if base == "all-reduce":
+            w = 2.0 * (n - 1) / n * nbytes
+        elif base == "all-gather":
+            w = (n - 1) / n * nbytes
+        elif base == "reduce-scatter":
+            w = (n - 1.0) * nbytes  # result is the scattered shard
+        elif base == "all-to-all":
+            w = (n - 1) / n * nbytes
+        else:  # collective-permute
+            w = float(nbytes)
+        counts[base] = counts.get(base, 0) + 1
+        result_bytes[base] = result_bytes.get(base, 0) + nbytes
+        wire[base] = wire.get(base, 0.0) + w
+    return CollectiveStats(counts, result_bytes, wire)
+
+
+def roofline_terms(
+    hlo_flops: float,
+    hlo_bytes: float,
+    wire_bytes: float,
+    n_chips: int,
+    hw: Dict,
+    cross_pod_bytes: float = 0.0,
+) -> Dict[str, float]:
+    """The three roofline terms in seconds (per the brief's formulas).
+
+    FLOPs/bytes from cost_analysis are already per-partition (SPMD lowers
+    one program per device), so terms are per-chip directly.
+    """
+    compute_s = hlo_flops / hw["peak_bf16_flops"]
+    memory_s = hlo_bytes / hw["hbm_bw"]
+    # ICI: each chip drives ~4 usable links on a 2D torus
+    ici_s = wire_bytes / (4 * hw["ici_bw"])
+    dci_s = cross_pod_bytes / hw["dci_bw"]
+    collective_s = ici_s + dci_s
+    dominant = max(
+        ("compute", compute_s), ("memory", memory_s),
+        ("collective", collective_s), key=lambda kv: kv[1],
+    )[0]
+    total = max(compute_s, memory_s, collective_s)
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "bound_s": total,
+        "compute_fraction": compute_s / total if total else 0.0,
+    }

@@ -1,0 +1,35 @@
+"""Production meshes.
+
+Single pod:  (16, 16)      axes (data, model)  = 256 chips (one v5e pod)
+Multi pod:   (2, 16, 16)   axes (pod, data, model) = 512 chips
+
+``make_production_mesh`` is a FUNCTION so importing this module never
+touches jax device state (the dry-run must set XLA_FLAGS before any jax
+initialization).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1-device mesh for smoke tests on CPU."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+# TPU v5e hardware model for the roofline (single chip)
+HW = {
+    "name": "tpu-v5e",
+    "peak_bf16_flops": 197e12,   # FLOP/s
+    "hbm_bw": 819e9,             # B/s
+    "ici_bw": 50e9,              # B/s per link (~4 links usable per chip)
+    "dci_bw": 6.25e9,            # B/s per chip cross-pod (data-center links)
+    "hbm_bytes": 16 * 2**30,
+}

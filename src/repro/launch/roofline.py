@@ -1,0 +1,163 @@
+"""Roofline report: reads experiments/dryrun/*.json, adds analytic
+MODEL_FLOPS, emits the EXPERIMENTS.md tables.
+
+Per (arch x shape x mesh):
+  compute_s    = HLO dot FLOPs / peak bf16
+  memory_s     = HLO bytes / HBM bw
+  collective_s = wire bytes / (4 links x ICI bw) + DCI term (multi-pod)
+  MODEL_FLOPS  = analytic useful compute (6*N*D train / 2*N*D serve for
+                 LM; op-count models for GNN/recsys)
+  ratio        = HLO FLOPs / MODEL_FLOPS  (remat + padding + dispatch waste)
+
+Usage: PYTHONPATH=src python -m repro.launch.roofline [--write-md]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, Optional
+
+from repro.launch.mesh import HW
+
+DRYRUN_DIR = os.path.join(
+    os.path.dirname(__file__), "../../../experiments/dryrun"
+)
+
+
+def _lm_model_flops(arch: str, shape: str, n_chips: int) -> float:
+    from repro.configs.registry import get_bundle
+
+    cfg = get_bundle(arch).config
+    n_active = cfg.params_active
+    B, S = {
+        "train_4k": (256, 4096),
+        "prefill_32k": (32, 32768),
+        "decode_32k": (128, 32768),
+        "long_500k": (1, 524288),
+    }[shape]
+    if shape == "train_4k":
+        flops = 6.0 * n_active * B * S
+    elif shape == "prefill_32k":
+        # fwd only + causal attention term
+        att = 2.0 * cfg.n_layers * B * S * S * cfg.n_heads * cfg.d_head
+        flops = 2.0 * n_active * B * S + att
+    else:
+        # decode: one token per sequence reads the whole KV cache
+        att = 4.0 * cfg.n_layers * B * S * cfg.n_kv_heads * cfg.d_head
+        flops = 2.0 * n_active * B + att
+    return flops / n_chips
+
+
+def _gnn_model_flops(shape: str, n_chips: int) -> float:
+    k = 128
+    cells = {
+        "full_graph_sm": (2708, 10556, 1433),
+        "minibatch_lg": (169_984, 168_960, 602),
+        "ogb_products": (2_449_029, 61_859_140, 100),
+        "molecule": (128 * 30, 128 * 64, 0),
+    }
+    N, E, dfeat = cells[shape]
+    L = 2
+    msg = 2.0 * E * k * 9 * 9 * 9          # Gaunt contraction per edge
+    bbasis = 2.0 * N * k * 9 * 9 * 9 * 2   # B2 + B3
+    mix = 2.0 * N * k * k * 9 * 4          # w1,w2,w3,self
+    radial = 2.0 * E * (8 * 32 + 32 * 3 * k)
+    feat = 2.0 * N * dfeat * k
+    fwd = L * (msg + bbasis + mix + radial) + feat
+    return 3.0 * fwd / n_chips  # train step ~ 3x fwd
+
+
+def _recsys_model_flops(arch: str, shape: str, n_chips: int) -> float:
+    B = {"train_batch": 65_536, "serve_p99": 512, "serve_bulk": 262_144,
+         "retrieval_cand": 1_000_000}[shape]
+    per_ex = {
+        # fwd flops per example (dominant MLP/interaction terms)
+        "dlrm-mlperf": 2.0 * (13 * 512 + 512 * 256 + 256 * 128
+                              + 479 * 1024 + 1024 * 1024 + 1024 * 512
+                              + 512 * 256 + 256),
+        "din": 2.0 * (100 * (4 * 36 * 80 + 80 * 40 + 40)
+                      + 3 * 36 * 200 + 200 * 80 + 80),
+        "sasrec": 2.0 * (2 * (4 * 50 * 50 + 2 * 50 * 50 + 2 * 50 * 50) * 50
+                         + 50 * 50 * 60_000),
+        "two-tower-retrieval": 2.0 * 2 * (512 * 1024 + 1024 * 512 + 512 * 256),
+    }[arch]
+    if arch == "two-tower-retrieval" and shape == "retrieval_cand":
+        return (per_ex / 2 + 2.0 * 1_000_000 * 256) / n_chips
+    if arch == "sasrec" and shape != "train_batch":
+        per_ex = per_ex - 2.0 * 50 * 50 * 60_000 + 2.0 * 50 * 200  # no full softmax
+    mult = 3.0 if shape == "train_batch" else 1.0
+    return mult * per_ex * B / n_chips
+
+
+def model_flops(arch: str, shape: str, n_chips: int) -> Optional[float]:
+    try:
+        if shape in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+            return _lm_model_flops(arch, shape, n_chips)
+        if shape in ("full_graph_sm", "minibatch_lg", "ogb_products",
+                     "molecule"):
+            return _gnn_model_flops(shape, n_chips)
+        return _recsys_model_flops(arch, shape, n_chips)
+    except Exception:
+        return None
+
+
+def load_cells(mesh: str = "single") -> Dict:
+    out = {}
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*__{mesh}.json"))):
+        r = json.load(open(f))
+        if r.get("ok"):
+            out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def build_table(mesh: str = "single") -> str:
+    cells = load_cells(mesh)
+    lines = [
+        "| arch | shape | compute | memory | collective | dominant | "
+        "MODEL_TF/chip | HLO/MODEL | note |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape), r in sorted(cells.items()):
+        t = r["roofline"]
+        mf = model_flops(arch, shape, r["n_chips"])
+        ratio = (r["flops"] / mf) if (mf and mf > 0) else float("nan")
+        note = {
+            "compute": "at compute roofline; fuse/quantize to go further",
+            "memory": "cut HBM: fp8/bf16 staging, fusion, smaller remat",
+            "collective": "reshard or overlap collectives with compute",
+        }[t["dominant"]]
+        lines.append(
+            f"| {arch} | {shape} | {fmt_s(t['compute_s'])} | "
+            f"{fmt_s(t['memory_s'])} | {fmt_s(t['collective_s'])} | "
+            f"**{t['dominant']}** | {(mf or 0)/1e12:.3f} | {ratio:.2f} | {note} |"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--write-md", action="store_true")
+    args = ap.parse_args()
+    table = build_table(args.mesh)
+    print(table)
+    if args.write_md:
+        path = os.path.join(DRYRUN_DIR, f"roofline_{args.mesh}.md")
+        with open(path, "w") as f:
+            f.write(table + "\n")
+        print(f"\nwritten: {path}")
+
+
+if __name__ == "__main__":
+    main()

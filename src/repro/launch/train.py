@@ -1,0 +1,107 @@
+"""Training launcher: --arch <id> with the full substrate.
+
+On this CPU container use --reduced (default) for a runnable
+demonstration; on a TPU slice drop --reduced and pass --mesh single to
+shard the full config over the production mesh (params/opt/batch
+shardings come from the same policy engine the dry-run validates).
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b \
+        --steps 200 --ckpt-dir /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ARCH_IDS, get_bundle
+from repro.train.optim import OptConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def synth_lm_batches(vocab: int, batch: int, seq: int):
+    def fn(cursor: int):
+        rng = np.random.RandomState(cursor)
+        toks = np.sort(rng.zipf(1.5, size=(batch, seq)) % vocab, axis=1)
+        labels = np.roll(toks, -1, axis=1)
+        labels[:, -1] = -1
+        return {
+            "tokens": jnp.asarray(toks, jnp.int32),
+            "labels": jnp.asarray(labels, jnp.int32),
+        }
+
+    return fn
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="granite-3-2b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--full", action="store_true",
+                    help="full (assigned) config — needs a real TPU slice")
+    ap.add_argument("--mesh", choices=["host", "single", "multi"],
+                    default="host")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--compress-grads", action="store_true")
+    args = ap.parse_args()
+
+    bundle = get_bundle(args.arch, reduced=not args.full)
+    if bundle.family != "lm":
+        raise SystemExit(
+            f"{args.arch} is a {bundle.family} arch; this launcher drives "
+            "the LM family (see examples/ for the others)"
+        )
+    cfg = bundle.config
+    params = bundle.init(jax.random.PRNGKey(0))
+    n = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    print(f"arch={args.arch} params={n/1e6:.1f}M mesh={args.mesh}")
+
+    jit_kwargs = {}
+    mesh = None
+    if args.mesh != "host":
+        from repro.launch.mesh import make_production_mesh
+
+        mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+        pshard = bundle.param_shardings(mesh)
+        params = jax.device_put(params, pshard)
+
+    from repro.models.transformer import lm_loss
+
+    trainer = Trainer(
+        lambda p, b: lm_loss(cfg, p, b["tokens"], b["labels"])[0],
+        params,
+        TrainerConfig(
+            opt=OptConfig(lr=3e-3, schedule="wsd", warmup_steps=20,
+                          total_steps=args.steps),
+            microbatches=args.microbatches,
+            compress_grads=args.compress_grads,
+            ckpt_dir=args.ckpt_dir or None,
+            ckpt_every=100,
+            log_every=20,
+        ),
+        jit_kwargs=jit_kwargs,
+    )
+    if args.ckpt_dir and trainer.try_resume():
+        print(f"resumed at step {trainer.step_num}")
+
+    batches = synth_lm_batches(cfg.vocab, args.batch, args.seq)
+    t0 = time.time()
+    if mesh is not None:
+        with mesh:
+            last = trainer.fit(batches, args.steps)
+    else:
+        last = trainer.fit(batches, args.steps)
+    dt = time.time() - t0
+    print(f"done: {trainer.step_num} steps in {dt:.1f}s, metrics={last}")
+
+
+if __name__ == "__main__":
+    main()

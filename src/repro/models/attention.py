@@ -1,0 +1,145 @@
+"""Attention in three regimes (pure JAX; the Pallas kernels in
+``repro.kernels`` implement the same contracts for TPU and are validated
+against these functions).
+
+  * ``mha``                — full materialized scores (small S)
+  * ``flash_ref``          — chunked online-softmax causal attention
+                             (O(S) memory; the flash kernel's oracle)
+  * ``decode_attention``   — one query token against a (B, S_max) KV cache
+                             with a valid-length mask (paged-KV scoring:
+                             softmax is permutation-invariant, so per-
+                             sequence page pools need no gather — see
+                             DESIGN.md on the S-segment adaptation)
+
+GQA is handled by grouping query heads over KV heads.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.hooks import constrain
+
+NEG_INF = -1e30
+
+
+def _group_q(q: jnp.ndarray, n_kv: int) -> jnp.ndarray:
+    """(B, S, H, D) -> (B, S, n_kv, H//n_kv, D)."""
+    B, S, H, D = q.shape
+    return q.reshape(B, S, n_kv, H // n_kv, D)
+
+
+def expand_kv(k: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """(B, S, n_kv, D) -> (B, S, H, D): GQA expansion to a single flat head
+    dimension, so the mesh 'model' axis can shard heads (a grouped (n, g)
+    pair fragments the dim and defeats GSPMD — see EXPERIMENTS.md Perf)."""
+    n_kv = k.shape[2]
+    if n_kv == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // n_kv, axis=2)
+
+
+def mha(
+    q: jnp.ndarray,  # (B, Sq, H, D)
+    k: jnp.ndarray,  # (B, Sk, n_kv, D)
+    v: jnp.ndarray,  # (B, Sk, n_kv, D)
+    causal: bool = True,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    B, Sq, H, D = q.shape
+    k = constrain(expand_kv(k, H), "batch", None, "model", None)
+    v = constrain(expand_kv(v, H), "batch", None, "model", None)
+    scores = jnp.einsum(
+        "bshd,bthd->bhst", q, k, preferred_element_type=jnp.float32
+    ) / math.sqrt(D)
+    if causal:
+        qpos = jnp.arange(Sq) + q_offset
+        kpos = jnp.arange(k.shape[1])
+        mask = qpos[:, None] >= kpos[None, :]
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhst,bthd->bshd", w, v)
+    return out
+
+
+def flash_ref(
+    q: jnp.ndarray,  # (B, S, H, D)
+    k: jnp.ndarray,  # (B, S, n_kv, D)
+    v: jnp.ndarray,  # (B, S, n_kv, D)
+    chunk: int = 1024,
+    causal: bool = True,
+) -> jnp.ndarray:
+    """Online-softmax attention, scanning KV in chunks (flash oracle)."""
+    B, S, H, D = q.shape
+    k = constrain(expand_kv(k, H), "batch", None, "model", None)
+    v = constrain(expand_kv(v, H), "batch", None, "model", None)
+    scale = 1.0 / math.sqrt(D)
+    n_chunks = S // chunk
+    assert S % chunk == 0, (S, chunk)
+    kc = k.reshape(B, n_chunks, chunk, H, D)
+    vc = v.reshape(B, n_chunks, chunk, H, D)
+    qpos = jnp.arange(S)
+
+    def step(carry, inputs):
+        m, l, acc = carry
+        kj, vj, j = inputs
+        s = jnp.einsum(
+            "bshd,bthd->bhst", q, kj, preferred_element_type=jnp.float32
+        ) * scale
+        if causal:
+            kpos = j * chunk + jnp.arange(chunk)
+            mask = qpos[:, None] >= kpos[None, :]
+            s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bhst,bthd->bhsd", p.astype(vj.dtype), vj)
+        acc_new = acc * corr[..., None].astype(acc.dtype) + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, S), jnp.float32)
+    a0 = jnp.zeros((B, H, S, D), v.dtype)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (kc.swapaxes(0, 1), vc.swapaxes(0, 1),
+                             jnp.arange(n_chunks)),
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+    return out.transpose(0, 2, 1, 3)  # (B, S, H, D)
+
+
+def decode_attention(
+    q: jnp.ndarray,        # (B, 1, H, D) new-token queries
+    k_cache: jnp.ndarray,  # (B, S_max, n_kv, D) (RoPE already applied)
+    v_cache: jnp.ndarray,  # (B, S_max, n_kv, D)
+    lengths: jnp.ndarray,  # (B,) valid cache lengths (including new token)
+) -> jnp.ndarray:
+    """Einsum orders keep the big cache operand in its stored (b,t,n,d)
+    layout — only the tiny score tensor is permuted (EXPERIMENTS.md Perf,
+    decode iteration 2: full-cache transposes eliminated)."""
+    B, _, H, D = q.shape
+    n_kv = k_cache.shape[2]
+    qg = _group_q(q, n_kv)[:, 0]  # (B, n_kv, G, D)
+    scores = jnp.einsum(
+        "btnd,bngd->btng", k_cache, qg, preferred_element_type=jnp.float32
+    ) / math.sqrt(D)
+    valid = jnp.arange(k_cache.shape[1])[None] < lengths[:, None]  # (B, S)
+    scores = jnp.where(valid[:, :, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=1).astype(v_cache.dtype)
+    out = jnp.einsum("btng,btnd->bngd", w, v_cache)
+    return out.reshape(B, 1, H, D)
+
+
+def attention(q, k, v, causal: bool = True, flash_threshold: int = 4096,
+              flash_chunk: int = 1024) -> jnp.ndarray:
+    """Dispatch: full scores for short S, chunked online softmax beyond."""
+    S = q.shape[1]
+    if S > flash_threshold and S % flash_chunk == 0:
+        return flash_ref(q, k, v, chunk=flash_chunk, causal=causal)
+    return mha(q, k, v, causal=causal)

@@ -1,0 +1,291 @@
+"""MACE: higher-order equivariant message passing (arXiv:2206.07697),
+adapted to the segment-sum substrate.
+
+Implemented structure (l_max=2, correlation order 3, E(3)-equivariant):
+
+  * node states h: (N, k, 9) — k channels x real-SH irreps [l0|l1(3)|l2(5)],
+  * radial basis: n_rbf Bessel-type functions with a smooth cutoff,
+  * A-basis: A_t = sum_{e: s->t} R_l(r_e) * (h_s (x) Y(r̂_e))  — the
+    tensor product is contracted through the real-Gaunt tensor C[a,b,c]
+    (computed once, numerically, by spherical quadrature — no e3nn),
+  * B-basis: correlation up to nu=3 by repeated C-contraction
+    (B2 = C(A, A), B3 = C(B2, A)) with per-order channel mixing,
+  * readout: invariant (l=0) channels -> MLP -> node logits / energies.
+
+Equivariance is checked in the tests by random global rotations.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import lru_cache
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.hooks import constrain
+from repro.nn.layers import dense_init, mlp_apply, mlp_init
+from repro.sparse.embedding import embedding_lookup
+
+Params = Dict[str, Any]
+
+N_IRREPS = 9  # l=0 (1) + l=1 (3) + l=2 (5)
+L_OF = np.array([0, 1, 1, 1, 2, 2, 2, 2, 2])  # irrep -> l
+
+
+def real_sph_harm(u: jnp.ndarray) -> jnp.ndarray:
+    """Real spherical harmonics l<=2 for unit vectors u: (..., 3) -> (..., 9)."""
+    x, y, z = u[..., 0], u[..., 1], u[..., 2]
+    c0 = 0.28209479177387814
+    c1 = 0.4886025119029199
+    c2a = 1.0925484305920792
+    c2b = 0.31539156525252005
+    c2c = 0.5462742152960396
+    return jnp.stack(
+        [
+            jnp.full_like(x, c0),
+            c1 * y,
+            c1 * z,
+            c1 * x,
+            c2a * x * y,
+            c2a * y * z,
+            c2b * (3 * z * z - 1.0),
+            c2a * x * z,
+            c2c * (x * x - y * y),
+        ],
+        axis=-1,
+    )
+
+
+def _np_real_sph_harm(u: np.ndarray) -> np.ndarray:
+    """Pure-numpy twin of real_sph_harm (used at module-init time only —
+    jnp inside a jit trace would turn the quadrature into tracers)."""
+    x, y, z = u[..., 0], u[..., 1], u[..., 2]
+    c0 = 0.28209479177387814
+    c1 = 0.4886025119029199
+    c2a = 1.0925484305920792
+    c2b = 0.31539156525252005
+    c2c = 0.5462742152960396
+    return np.stack(
+        [np.full_like(x, c0), c1 * y, c1 * z, c1 * x, c2a * x * y,
+         c2a * y * z, c2b * (3 * z * z - 1.0), c2a * x * z,
+         c2c * (x * x - y * y)],
+        axis=-1,
+    )
+
+
+@lru_cache(maxsize=1)
+def gaunt_tensor() -> np.ndarray:
+    """C[a,b,c] = ∫ Y_a Y_b Y_c dΩ by Gauss-Legendre x uniform-phi quadrature
+    (exact for the l<=6 band limit of triple products of l<=2)."""
+    nct, nph = 64, 128
+    ct, wt = np.polynomial.legendre.leggauss(nct)
+    ph = (np.arange(nph) + 0.5) * (2 * np.pi / nph)
+    ctg, phg = np.meshgrid(ct, ph, indexing="ij")
+    st = np.sqrt(1.0 - ctg**2)
+    xyz = np.stack([st * np.cos(phg), st * np.sin(phg), ctg], axis=-1)
+    Y = _np_real_sph_harm(xyz)                       # (nct, nph, 9)
+    w = wt[:, None] * (2 * np.pi / nph)              # (nct, 1)
+    C = np.einsum("tpa,tpb,tpc,tp->abc", Y, Y, Y, np.broadcast_to(w, ctg.shape))
+    C[np.abs(C) < 1e-12] = 0.0
+    return C.astype(np.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class MACEConfig:
+    name: str = "mace"
+    n_layers: int = 2
+    d_hidden: int = 128          # channels k
+    l_max: int = 2               # fixed at 2 in this implementation
+    correlation: int = 3
+    n_rbf: int = 8
+    r_cut: float = 2.5
+    d_feat: int = 0              # input node feature dim (0: species embed)
+    n_species: int = 32
+    n_out: int = 1               # 1: energy regression; >1: node classes
+    readout_mlp: Tuple[int, ...] = (64,)
+    dtype: Any = jnp.float32     # equivariant algebra is f32
+    # edge-chunked message passing: graphs beyond this many edges are
+    # processed in lax.scan chunks of this size (bounds the (E, k, 9)
+    # working set; padded edges are zero-length self loops -> masked)
+    edge_chunk: int = 1 << 21
+
+
+def mace_init(cfg: MACEConfig, key) -> Params:
+    ks = jax.random.split(key, 8 + 4 * cfg.n_layers)
+    k = cfg.d_hidden
+    p: Params = {}
+    if cfg.d_feat:
+        p["feat_in"] = dense_init(ks[0], cfg.d_feat, k)
+    else:
+        p["species"] = {
+            "table": jax.random.normal(ks[0], (cfg.n_species, k), jnp.float32)
+            * 0.5
+        }
+    layers = []
+    for i in range(cfg.n_layers):
+        kk = jax.random.split(ks[1 + i], 8)
+        layers.append(
+            {
+                # radial MLP: rbf -> per-channel, per-l weights
+                "radial": mlp_init(kk[0], (cfg.n_rbf, 32, k * 3)),
+                # channel mixers for B1, B2, B3 per l block: (k, k, 3)
+                "w1": jax.random.normal(kk[1], (k, k, 3), jnp.float32) / math.sqrt(k),
+                "w2": jax.random.normal(kk[2], (k, k, 3), jnp.float32) / math.sqrt(k),
+                "w3": jax.random.normal(kk[3], (k, k, 3), jnp.float32) / math.sqrt(k),
+                "self": jax.random.normal(kk[4], (k, k, 3), jnp.float32) / math.sqrt(k),
+            }
+        )
+    p["layers"] = layers
+    p["readout"] = mlp_init(
+        ks[-1], (k,) + cfg.readout_mlp + (cfg.n_out,)
+    )
+    return p
+
+
+def bessel_rbf(r: jnp.ndarray, n_rbf: int, r_cut: float) -> jnp.ndarray:
+    """Bessel radial basis with smooth polynomial cutoff (MACE eq. 5)."""
+    rs = jnp.maximum(r, 1e-6)[..., None]
+    n = jnp.arange(1, n_rbf + 1, dtype=jnp.float32)
+    basis = jnp.sqrt(2.0 / r_cut) * jnp.sin(n * math.pi * rs / r_cut) / rs
+    t = jnp.clip(r / r_cut, 0.0, 1.0)[..., None]
+    env = 1.0 - 10.0 * t**3 + 15.0 * t**4 - 6.0 * t**5
+    return basis * env
+
+
+def _mix(w: jnp.ndarray, h: jnp.ndarray) -> jnp.ndarray:
+    """Per-l channel mixing: w (k,k,3), h (N,k,9) -> (N,k,9)."""
+    lidx = jnp.asarray(L_OF)
+    wl = w[:, :, lidx]  # (k, k, 9)
+    return jnp.einsum("nka,jka->nja", h, wl)
+
+
+def mace_forward(
+    cfg: MACEConfig,
+    p: Params,
+    node_feat: jnp.ndarray,   # (N, d_feat) f32 or (N,) int species
+    positions: jnp.ndarray,   # (N, 3)
+    edges_src: jnp.ndarray,   # (E,)
+    edges_dst: jnp.ndarray,   # (E,)
+    edge_mask: Optional[jnp.ndarray] = None,  # (E,)
+) -> jnp.ndarray:
+    """Returns node outputs (N, n_out)."""
+    C = jnp.asarray(gaunt_tensor())
+    N = positions.shape[0]
+    k = cfg.d_hidden
+    if cfg.d_feat:
+        scal = jnp.einsum(
+            "nd,dk->nk", node_feat.astype(jnp.float32), p["feat_in"]["w"]
+        )
+    else:
+        scal = p["species"]["table"][node_feat]
+    h = jnp.zeros((N, k, N_IRREPS), jnp.float32)
+    h = h.at[:, :, 0].set(scal)
+
+    rvec = positions[edges_dst] - positions[edges_src]       # (E, 3)
+    r = jnp.sqrt(jnp.sum(rvec * rvec, axis=-1) + 1e-18)
+    u = rvec / jnp.maximum(r, 1e-6)[:, None]
+    Y = real_sph_harm(u)                                     # (E, 9)
+    rbf = bessel_rbf(r, cfg.n_rbf, cfg.r_cut)                # (E, n_rbf)
+    # zero-length (self-loop / padded) edges carry no message: Y(0) is a
+    # fixed non-scalar vector and would break equivariance if summed in
+    rbf = rbf * (r > 1e-6)[:, None]
+    if edge_mask is not None:
+        rbf = rbf * edge_mask[:, None]
+    lidx = jnp.asarray(L_OF)
+
+    # edge tensors are sharded over the batch axes: GSPMD loses the edge
+    # sharding through the h[edges_src] gather and replicates the whole
+    # edge pipeline per chip — constraints pin it down (EXPERIMENTS.md
+    # Perf, GNN iteration 1)
+    Y = constrain(Y, "batch", None)
+    rbf = constrain(rbf, "batch", None)
+
+    E = edges_src.shape[0]
+    n_chunks = max(1, -(-E // cfg.edge_chunk)) if cfg.edge_chunk else 1
+
+    def edge_msgs(lp, h, y_c, rbf_c, src_c):
+        R = mlp_apply(lp["radial"], rbf_c, dtype=jnp.float32)  # (e, k*3)
+        R = constrain(R, "batch", None)
+        R = R.reshape(-1, k, 3)[:, :, lidx]                    # (e, k, 9)
+        hs = constrain(h[src_c], "batch", None, None)          # (e, k, 9)
+        # phi_e[k, c] = R[k, c] * sum_{a,b} C[a,b,c] h_s[k,a] Y[b]
+        return jnp.einsum("eka,eb,abc->ekc", hs, y_c, C) * R
+
+    def layer(lp, h):
+        if n_chunks == 1:
+            msg = constrain(
+                edge_msgs(lp, h, Y, rbf, edges_src), "batch", None, None
+            )
+            A = jax.ops.segment_sum(msg, edges_dst, num_segments=N)
+        else:
+            # edge-chunked accumulation: bounds the (E, k, 9) working set
+            # (padded tail edges are (0,0) self-loops -> rbf masked -> 0)
+            ck = cfg.edge_chunk
+            pad = n_chunks * ck - E
+
+            def padded(x, fill=0):
+                return jnp.concatenate(
+                    [x, jnp.full((pad,) + x.shape[1:], fill, x.dtype)]
+                ).reshape((n_chunks, ck) + x.shape[1:])
+
+            xs = (padded(Y), padded(rbf), padded(edges_src),
+                  padded(edges_dst))
+
+            def chunk_fn(A, xc):
+                y_c, rbf_c, src_c, dst_c = xc
+                msg = edge_msgs(lp, h, y_c, rbf_c, src_c)
+                return A + jax.ops.segment_sum(
+                    msg, dst_c, num_segments=N
+                ), None
+
+            A0 = jnp.zeros((N, k, N_IRREPS), jnp.float32)
+            A, _ = jax.lax.scan(jax.checkpoint(chunk_fn), A0, xs)
+        A = constrain(A, "batch", None, None)
+        # higher-order products (correlation <= 3), channel-wise
+        B2 = jnp.einsum("nka,nkb,abc->nkc", A, A, C)
+        B3 = jnp.einsum("nka,nkb,abc->nkc", B2, A, C)
+        m = _mix(lp["w1"], A) + _mix(lp["w2"], B2) + _mix(lp["w3"], B3)
+        return constrain(_mix(lp["self"], h) + m, "batch", None, None)
+
+    # remat per interaction layer: edge tensors (E x k x 9) dominate the
+    # training footprint on full-batch graphs; recompute them in backward
+    layer_ckpt = jax.checkpoint(layer)
+    for lp in p["layers"]:
+        h = layer_ckpt(lp, h)
+
+    inv = h[:, :, 0]                                          # (N, k) invariants
+    return mlp_apply(p["readout"], inv, dtype=jnp.float32)
+
+
+# ------------------------------------------------------------- objectives ---
+def mace_node_xent(cfg: MACEConfig, p: Params, batch: Dict) -> jnp.ndarray:
+    out = mace_forward(
+        cfg, p, batch["feat"], batch["pos"], batch["edges_src"],
+        batch["edges_dst"], batch.get("edge_mask"),
+    )
+    logits = out.astype(jnp.float32)
+    labels = batch["labels"]
+    mask = batch.get("label_mask")
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[:, None], axis=-1
+    )[:, 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return nll.mean()
+
+
+def mace_energy_mse(cfg: MACEConfig, p: Params, batch: Dict) -> jnp.ndarray:
+    out = mace_forward(
+        cfg, p, batch["species"], batch["pos"], batch["edges_src"],
+        batch["edges_dst"], batch.get("edge_mask"),
+    )[:, 0]
+    n_graphs = batch["energy"].shape[0]
+    energies = jax.ops.segment_sum(out, batch["graph_of"], num_segments=n_graphs)
+    return jnp.mean((energies - batch["energy"]) ** 2)

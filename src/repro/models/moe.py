@@ -1,0 +1,230 @@
+"""Mixture-of-Experts layer: GShard-style grouped top-k dispatch.
+
+Tokens are processed in groups (sharded over the data axis); each group
+computes a capacity-bounded one-hot dispatch tensor, so the whole layer is
+einsums — the SPMD-friendly formulation (the token->expert scatter becomes
+all-to-all under GSPMD when experts are sharded over the model axis).
+
+This is the DS-strategy analogue at the model level (DESIGN.md): many
+small scatters (token->expert sends) are packed into one dense batched
+operation with an indirection structure (the dispatch tensor), exactly the
+paper's pack-small-writes-into-one-large-write idea.
+
+Capacity drops are counted in aux metrics; the router uses f32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.hooks import constrain
+from repro.nn.layers import dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff: int                      # per-expert hidden
+    n_shared_experts: int = 0      # DeepSeek/Moonlight-style always-on experts
+    capacity_factor: float = 1.25
+    group_tokens: int = 4096       # tokens per dispatch group
+    # 'onehot': GShard dispatch/combine einsums (SPMD-simple, but the
+    #   (T,E,C,d) contractions cost ~2x the expert FFN at E=128/k=8);
+    # 'sort': argsort-based scatter/gather dispatch, O(T*k*d) data
+    #   movement (EXPERIMENTS.md Perf, MoE iteration)
+    dispatch: str = "onehot"
+
+
+def moe_init(key, d_model: int, cfg: MoEConfig) -> Dict:
+    ks = jax.random.split(key, 5)
+    E, F = cfg.n_experts, cfg.d_ff
+    scale_in = 1.0 / jnp.sqrt(d_model)
+    scale_out = 1.0 / jnp.sqrt(F)
+    p = {
+        "router": dense_init(ks[0], d_model, E, scale=0.02),
+        # SwiGLU experts: gate, up, down
+        "wg": jax.random.normal(ks[1], (E, d_model, F), jnp.float32) * scale_in,
+        "wu": jax.random.normal(ks[2], (E, d_model, F), jnp.float32) * scale_in,
+        "wd": jax.random.normal(ks[3], (E, F, d_model), jnp.float32) * scale_out,
+    }
+    if cfg.n_shared_experts:
+        Fs = F * cfg.n_shared_experts
+        kk = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "wg": jax.random.normal(kk[0], (d_model, Fs), jnp.float32) * scale_in,
+            "wu": jax.random.normal(kk[1], (d_model, Fs), jnp.float32) * scale_in,
+            "wd": jax.random.normal(kk[2], (Fs, d_model), jnp.float32) * scale_out,
+        }
+    return p
+
+
+def _top_k_dispatch(
+    gates: jnp.ndarray,  # (G, T, E) f32 softmax probs
+    top_k: int,
+    capacity: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray, Dict]:
+    """GShard dispatch/combine tensors: (G, T, E, C) each."""
+    G, T, E = gates.shape
+    remaining = gates
+    location = jnp.zeros((G, T, E), jnp.int32)  # running per-expert counter
+    dispatch = None
+    combine = None
+    dropped = jnp.zeros((), jnp.float32)
+    prev_counts = jnp.zeros((G, 1, E), jnp.int32)
+    for _ in range(top_k):
+        idx = jnp.argmax(remaining, axis=-1)                      # (G, T)
+        onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)        # (G, T, E)
+        gate_k = (remaining * onehot).sum(-1)                     # (G, T)
+        remaining = remaining * (1.0 - onehot)
+        pos = jnp.cumsum(onehot, axis=1) - onehot + prev_counts   # (G, T, E)
+        prev_counts = prev_counts + jnp.sum(
+            onehot, axis=1, keepdims=True
+        ).astype(jnp.int32)
+        pos_k = (pos * onehot).sum(-1)                            # (G, T)
+        keep = pos_k < capacity
+        dropped = dropped + (1.0 - keep.astype(jnp.float32)).sum()
+        cap_oh = jax.nn.one_hot(
+            jnp.where(keep, pos_k.astype(jnp.int32), capacity), capacity,
+            dtype=jnp.float32,
+        )                                                          # (G, T, C)
+        d_k = onehot[..., None] * cap_oh[..., None, :]             # (G, T, E, C)
+        dispatch = d_k if dispatch is None else dispatch + d_k
+        c_k = d_k * gate_k[..., None, None]
+        combine = c_k if combine is None else combine + c_k
+    aux = {"dropped_tokens": dropped}
+    return dispatch, combine, aux
+
+
+def _sorted_dispatch_apply(
+    p: Dict, xg: jnp.ndarray, gates: jnp.ndarray, cfg: MoEConfig,
+    C: int, dtype,
+) -> Tuple[jnp.ndarray, Dict]:
+    """Sort-based expert dispatch: argsort token->expert assignments,
+    scatter tokens into (E, C, d) buffers, gather results back.  Moves
+    O(T*k*d) bytes instead of contracting (T,E,C,d) one-hots — the same
+    capacity/priority semantics as the GShard path (first-come within an
+    expert, in token order; ties resolved identically via stable sort)."""
+    G, T, E = gates.shape
+    k = cfg.top_k
+    # top-k experts per token (loop matches _top_k_dispatch's semantics)
+    remaining = gates
+    eidx, gval = [], []
+    for _ in range(k):
+        i = jnp.argmax(remaining, axis=-1)                  # (G, T)
+        oh = jax.nn.one_hot(i, E, dtype=gates.dtype)
+        eidx.append(i)
+        gval.append((remaining * oh).sum(-1))
+        remaining = remaining * (1.0 - oh)
+    # k-major flattening: within an expert, all round-0 picks outrank
+    # round-1 picks (GShard's prev_counts offset), then token order —
+    # keeps drop semantics identical to the one-hot path
+    e_flat = jnp.stack(eidx, 1).reshape(G, k * T)            # (G, kT)
+    g_flat = jnp.stack(gval, 1).reshape(G, k * T)
+    t_flat = jnp.tile(jnp.arange(T), (G, k)).astype(jnp.int32)
+
+    order = jnp.argsort(e_flat, axis=1, stable=True)         # (G, Tk)
+    e_sort = jnp.take_along_axis(e_flat, order, 1)
+    t_sort = jnp.take_along_axis(t_flat, order, 1)
+    g_sort = jnp.take_along_axis(g_flat, order, 1)
+    # rank within expert = position - index of the expert's first entry
+    first = jax.vmap(
+        lambda es: jnp.searchsorted(es, jnp.arange(E), side="left")
+    )(e_sort)                                                 # (G, E)
+    pos = jnp.arange(T * k)[None, :] - jnp.take_along_axis(
+        first, e_sort, 1
+    )
+    keep = pos < C
+    dropped = (1.0 - keep.astype(jnp.float32)).sum()
+    slot = jnp.where(keep, e_sort * C + pos, E * C)           # E*C = trash row
+
+    xt = jnp.take_along_axis(
+        xg.astype(dtype), t_sort[..., None], 1
+    )                                                         # (G, Tk, d)
+    xe = jnp.zeros((G, E * C + 1, xg.shape[-1]), dtype)
+    xe = jax.vmap(lambda buf, s, v: buf.at[s].set(v))(xe, slot, xt)
+    xe = xe[:, : E * C].reshape(G, E, C, -1)
+    xe = constrain(xe, "batch", "model", None, None)
+    h = jax.nn.silu(
+        jnp.einsum("gecd,edf->gecf", xe, p["wg"].astype(dtype))
+    ) * jnp.einsum("gecd,edf->gecf", xe, p["wu"].astype(dtype))
+    ye = jnp.einsum("gecf,efd->gecd", h, p["wd"].astype(dtype))
+    ye = constrain(ye, "batch", "model", None, None)
+    # gather back + weighted combine into token order
+    ye_flat = ye.reshape(G, E * C, -1)
+    yt = jax.vmap(lambda buf, s: buf[jnp.minimum(s, E * C - 1)])(
+        ye_flat, slot
+    ) * (keep[..., None] * g_sort[..., None]).astype(dtype)
+    y = jax.vmap(
+        lambda t, v: jax.ops.segment_sum(v, t, num_segments=T)
+    )(t_sort, yt)
+    aux = {"dropped_tokens": dropped}
+    return y.astype(dtype), aux
+
+
+def moe_apply(
+    p: Dict,
+    x: jnp.ndarray,  # (B, S, d)
+    cfg: MoEConfig,
+    dtype=jnp.bfloat16,
+) -> Tuple[jnp.ndarray, Dict]:
+    B, S, d = x.shape
+    N = B * S
+    Tg = min(cfg.group_tokens, N)
+    while N % Tg:  # largest group size <= group_tokens that divides N
+        Tg -= 1
+    G = N // Tg
+    xg = x.reshape(G, Tg, d)
+    E = cfg.n_experts
+    C = max(1, int(Tg * cfg.top_k * cfg.capacity_factor / E))
+
+    logits = jnp.einsum(
+        "gtd,de->gte", xg.astype(jnp.float32), p["router"]["w"]
+    )
+    gates = jax.nn.softmax(logits, axis=-1)
+
+    if cfg.dispatch == "sort":
+        y, aux = _sorted_dispatch_apply(p, xg, gates, cfg, C, dtype)
+        me = gates.mean(axis=(0, 1))
+        aux["balance_loss"] = E * jnp.sum(me * me)  # proxy (no dispatch tensor)
+        if cfg.n_shared_experts:
+            sh = p["shared"]
+            hs = jax.nn.silu(
+                jnp.einsum("gtd,df->gtf", xg.astype(dtype),
+                           sh["wg"].astype(dtype))
+            ) * jnp.einsum("gtd,df->gtf", xg.astype(dtype),
+                           sh["wu"].astype(dtype))
+            y = y + jnp.einsum("gtf,fd->gtd", hs, sh["wd"].astype(dtype))
+        return y.reshape(B, S, d).astype(x.dtype), aux
+
+    dispatch, combine, aux = _top_k_dispatch(gates, cfg.top_k, C)
+
+    # load-balancing aux loss (Shazeer): E * sum_e f_e * p_e
+    me = gates.mean(axis=(0, 1))
+    ce = dispatch.sum(axis=(1, 3)).mean(axis=0) / Tg
+    aux["balance_loss"] = E * jnp.sum(me * ce)
+
+    # expert-parallel placement: groups follow the batch axes, experts the
+    # model axis; the gtec/gecd einsums become the token all-to-all.
+    xg = constrain(xg, "batch", None, None)
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch.astype(dtype), xg.astype(dtype))
+    xe = constrain(xe, "batch", "model", None, None)
+    h = jax.nn.silu(
+        jnp.einsum("gecd,edf->gecf", xe, p["wg"].astype(dtype))
+    ) * jnp.einsum("gecd,edf->gecf", xe, p["wu"].astype(dtype))
+    ye = jnp.einsum("gecf,efd->gecd", h, p["wd"].astype(dtype))
+    ye = constrain(ye, "batch", "model", None, None)
+    y = jnp.einsum("gtec,gecd->gtd", combine.astype(dtype), ye)
+
+    if cfg.n_shared_experts:
+        sh = p["shared"]
+        hs = jax.nn.silu(
+            jnp.einsum("gtd,df->gtf", xg.astype(dtype), sh["wg"].astype(dtype))
+        ) * jnp.einsum("gtd,df->gtf", xg.astype(dtype), sh["wu"].astype(dtype))
+        y = y + jnp.einsum("gtf,fd->gtd", hs, sh["wd"].astype(dtype))
+
+    return y.reshape(B, S, d).astype(x.dtype), aux

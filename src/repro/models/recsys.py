@@ -1,0 +1,356 @@
+"""RecSys architectures: DLRM (MLPerf), DIN, SASRec, two-tower retrieval.
+
+All four share the same substrate: huge embedding tables (the paper's
+associative arrays — see DESIGN.md), a feature-interaction op, and a small
+MLP head.  Entry points per arch:
+
+  * ``loss_fn(params, batch)``           — training objective
+  * ``score_fn(params, batch)``          — pointwise serving (p99/bulk)
+  * ``retrieval_fn(params, batch)``      — 1 query vs N candidates + top-k
+
+Batches are dicts of arrays; ``input_specs`` in the configs produce the
+matching ShapeDtypeStructs for the dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import mha
+from repro.nn.layers import (
+    dense,
+    dense_init,
+    embedding_init,
+    mlp_apply,
+    mlp_init,
+    rms_norm,
+    softmax_xent,
+)
+from repro.sparse.embedding import embedding_lookup
+
+Params = Dict[str, Any]
+
+
+def bce_logits(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    lf = logits.astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(lf, 0) - lf * labels + jnp.log1p(jnp.exp(-jnp.abs(lf)))
+    )
+
+
+# ================================================================== DLRM ====
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str = "dlrm-mlperf"
+    n_dense: int = 13
+    table_rows: Tuple[int, ...] = ()   # 26 Criteo-1TB cardinalities
+    embed_dim: int = 128
+    bot_mlp: Tuple[int, ...] = (512, 256, 128)
+    top_mlp: Tuple[int, ...] = (1024, 1024, 512, 256, 1)
+    dtype: Any = jnp.bfloat16
+
+    @property
+    def n_sparse(self) -> int:
+        return len(self.table_rows)
+
+
+def dlrm_init(cfg: DLRMConfig, key) -> Params:
+    ks = jax.random.split(key, cfg.n_sparse + 2)
+    tables = {
+        f"t{i}": embedding_init(ks[i], rows, cfg.embed_dim)
+        for i, rows in enumerate(cfg.table_rows)
+    }
+    return {
+        "tables": tables,
+        "bot": mlp_init(ks[-2], (cfg.n_dense,) + cfg.bot_mlp),
+        "top": mlp_init(
+            ks[-1],
+            (cfg.embed_dim + (cfg.n_sparse + 1) * cfg.n_sparse // 2,)
+            + cfg.top_mlp,
+        ),
+    }
+
+
+def dlrm_forward(cfg: DLRMConfig, p: Params, batch: Dict) -> jnp.ndarray:
+    dense_x = batch["dense"]            # (B, 13) f32
+    sparse = batch["sparse"]            # (B, 26) int32
+    B = dense_x.shape[0]
+    d = mlp_apply(p["bot"], dense_x.astype(cfg.dtype), dtype=cfg.dtype,
+                  final_act=True)       # (B, 128)
+    embs = [
+        embedding_lookup(p["tables"][f"t{i}"]["table"], sparse[:, i], cfg.dtype)
+        for i in range(cfg.n_sparse)
+    ]
+    z = jnp.stack([d] + embs, axis=1)   # (B, 27, 128)
+    inter = jnp.einsum("bnd,bmd->bnm", z, z,
+                       preferred_element_type=jnp.float32)  # (B, 27, 27)
+    iu = jnp.triu_indices(z.shape[1], k=1)
+    flat = inter[:, iu[0], iu[1]].astype(cfg.dtype)          # (B, 351)
+    x = jnp.concatenate([d, flat], axis=-1)
+    return mlp_apply(p["top"], x, dtype=cfg.dtype)[:, 0]     # (B,)
+
+
+def dlrm_loss(cfg: DLRMConfig, p: Params, batch: Dict) -> jnp.ndarray:
+    return bce_logits(dlrm_forward(cfg, p, batch), batch["label"])
+
+
+def dlrm_retrieval(cfg: DLRMConfig, p: Params, batch: Dict) -> jnp.ndarray:
+    """Score one user context against N candidate items (vary table 0)."""
+    cand = batch["candidates"]          # (N,) ids for table 0
+    N = cand.shape[0]
+    dense_x = jnp.broadcast_to(batch["dense"], (N, cfg.n_dense))
+    sparse = jnp.broadcast_to(batch["sparse"], (N, cfg.n_sparse))
+    sparse = sparse.at[:, 0].set(cand)
+    scores = dlrm_forward(cfg, p, {"dense": dense_x, "sparse": sparse})
+    return jax.lax.top_k(scores, min(100, N))[1]
+
+
+# =================================================================== DIN ====
+@dataclasses.dataclass(frozen=True)
+class DINConfig:
+    name: str = "din"
+    n_items: int = 1_000_000
+    n_cates: int = 10_000
+    embed_dim: int = 18
+    seq_len: int = 100
+    attn_mlp: Tuple[int, ...] = (80, 40)
+    mlp: Tuple[int, ...] = (200, 80)
+    dtype: Any = jnp.bfloat16
+
+
+def din_init(cfg: DINConfig, key) -> Params:
+    ks = jax.random.split(key, 5)
+    d = cfg.embed_dim * 2  # item + category embedding
+    return {
+        "item": embedding_init(ks[0], cfg.n_items, cfg.embed_dim),
+        "cate": embedding_init(ks[1], cfg.n_cates, cfg.embed_dim),
+        # attention MLP input: [e, t, e*t, e-t] -> 4d
+        "attn": mlp_init(ks[2], (4 * d,) + cfg.attn_mlp + (1,)),
+        "head": mlp_init(ks[3], (3 * d,) + cfg.mlp + (1,)),
+    }
+
+
+def _din_embed(cfg: DINConfig, p: Params, items, cates):
+    e = jnp.concatenate(
+        [
+            embedding_lookup(p["item"]["table"], items, cfg.dtype),
+            embedding_lookup(p["cate"]["table"], cates, cfg.dtype),
+        ],
+        axis=-1,
+    )
+    return e  # (..., 2*embed_dim)
+
+
+def din_forward(cfg: DINConfig, p: Params, batch: Dict) -> jnp.ndarray:
+    seq = _din_embed(cfg, p, batch["hist_items"], batch["hist_cates"])  # (B,S,d)
+    mask = batch["hist_mask"]                                           # (B,S)
+    tgt = _din_embed(cfg, p, batch["target_item"], batch["target_cate"])  # (B,d)
+    t = jnp.broadcast_to(tgt[:, None, :], seq.shape)
+    att_in = jnp.concatenate([seq, t, seq * t, seq - t], axis=-1)
+    w = mlp_apply(p["attn"], att_in, dtype=cfg.dtype)[..., 0]           # (B,S)
+    w = jnp.where(mask > 0, w.astype(jnp.float32), -1e30)
+    w = jax.nn.softmax(w, axis=-1).astype(cfg.dtype)
+    user = jnp.einsum("bs,bsd->bd", w, seq)                             # (B,d)
+    x = jnp.concatenate([user, tgt, user * tgt], axis=-1)
+    return mlp_apply(p["head"], x, dtype=cfg.dtype)[:, 0]
+
+
+def din_loss(cfg: DINConfig, p: Params, batch: Dict) -> jnp.ndarray:
+    return bce_logits(din_forward(cfg, p, batch), batch["label"])
+
+
+def din_retrieval(cfg: DINConfig, p: Params, batch: Dict) -> jnp.ndarray:
+    cand_items = batch["candidates"]       # (N,)
+    cand_cates = batch["candidate_cates"]  # (N,)
+    N = cand_items.shape[0]
+    b = {
+        "hist_items": jnp.broadcast_to(batch["hist_items"], (N, cfg.seq_len)),
+        "hist_cates": jnp.broadcast_to(batch["hist_cates"], (N, cfg.seq_len)),
+        "hist_mask": jnp.broadcast_to(batch["hist_mask"], (N, cfg.seq_len)),
+        "target_item": cand_items,
+        "target_cate": cand_cates,
+    }
+    scores = din_forward(cfg, p, b)
+    return jax.lax.top_k(scores, min(100, N))[1]
+
+
+# ================================================================ SASRec ====
+@dataclasses.dataclass(frozen=True)
+class SASRecConfig:
+    name: str = "sasrec"
+    n_items: int = 60_000
+    embed_dim: int = 50
+    n_blocks: int = 2
+    n_heads: int = 1
+    seq_len: int = 50
+    dropout: float = 0.0
+    dtype: Any = jnp.bfloat16
+
+
+def sasrec_init(cfg: SASRecConfig, key) -> Params:
+    ks = jax.random.split(key, 3 + cfg.n_blocks)
+    d = cfg.embed_dim
+    blocks = []
+    for i in range(cfg.n_blocks):
+        kk = jax.random.split(ks[3 + i], 6)
+        blocks.append(
+            {
+                "ln1": jnp.ones((d,), jnp.float32),
+                "wq": dense_init(kk[0], d, d),
+                "wk": dense_init(kk[1], d, d),
+                "wv": dense_init(kk[2], d, d),
+                "wo": dense_init(kk[3], d, d),
+                "ln2": jnp.ones((d,), jnp.float32),
+                "fc1": dense_init(kk[4], d, d, bias=True),
+                "fc2": dense_init(kk[5], d, d, bias=True),
+            }
+        )
+    return {
+        "item": embedding_init(ks[0], cfg.n_items, d),
+        "pos": embedding_init(ks[1], cfg.seq_len, d),
+        "ln_f": jnp.ones((d,), jnp.float32),
+        "blocks": blocks,
+    }
+
+
+def sasrec_backbone(cfg: SASRecConfig, p: Params, seq: jnp.ndarray
+                    ) -> jnp.ndarray:
+    B, S = seq.shape
+    d = cfg.embed_dim
+    x = embedding_lookup(p["item"]["table"], seq, cfg.dtype)
+    x = x + p["pos"]["table"].astype(cfg.dtype)[None, :S]
+    for blk in p["blocks"]:
+        h = rms_norm(blk["ln1"], x)
+        q = dense(blk["wq"], h, cfg.dtype).reshape(B, S, cfg.n_heads, -1)
+        k = dense(blk["wk"], h, cfg.dtype).reshape(B, S, cfg.n_heads, -1)
+        v = dense(blk["wv"], h, cfg.dtype).reshape(B, S, cfg.n_heads, -1)
+        o = mha(q, k, v, causal=True).reshape(B, S, d)
+        x = x + dense(blk["wo"], o, cfg.dtype)
+        h = rms_norm(blk["ln2"], x)
+        x = x + dense(blk["fc2"], jax.nn.relu(dense(blk["fc1"], h, cfg.dtype)),
+                      cfg.dtype)
+    return rms_norm(p["ln_f"], x)
+
+
+def sasrec_loss(cfg: SASRecConfig, p: Params, batch: Dict) -> jnp.ndarray:
+    """Next-item prediction, full softmax over items, computed in
+    position chunks so (B, S, n_items) logits are never materialized
+    (same chunked-xent scheme as the LM loss)."""
+    h = sasrec_backbone(cfg, p, batch["seq"])            # (B, S, d)
+    B, S, d = h.shape
+    C = 5 if S % 5 == 0 else 1
+    hc = h.reshape(B, S // C, C, d).swapaxes(0, 1)
+    lc = batch["labels"].reshape(B, S // C, C).swapaxes(0, 1)
+
+    def chunk(carry, inp):
+        hh, ll = inp
+        logits = jnp.einsum(
+            "bsd,vd->bsv", hh, p["item"]["table"].astype(hh.dtype)
+        )
+        n = (ll != -1).sum()
+        return (carry[0] + softmax_xent(logits, ll) * n, carry[1] + n), None
+
+    (tot, n), _ = jax.lax.scan(
+        chunk, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)),
+        (hc, lc),
+    )
+    return tot / jnp.maximum(n, 1)
+
+
+def sasrec_score(cfg: SASRecConfig, p: Params, batch: Dict) -> jnp.ndarray:
+    """Serving: last-position scores for given candidate items."""
+    h = sasrec_backbone(cfg, p, batch["seq"])[:, -1]     # (B, d)
+    cand = embedding_lookup(p["item"]["table"], batch["candidates"], cfg.dtype)
+    return jnp.einsum("bd,bcd->bc", h, cand)
+
+
+def sasrec_retrieval(cfg: SASRecConfig, p: Params, batch: Dict) -> jnp.ndarray:
+    h = sasrec_backbone(cfg, p, batch["seq"])[:, -1]     # (1, d)
+    cand = embedding_lookup(p["item"]["table"], batch["candidates"], cfg.dtype)
+    scores = jnp.einsum("bd,cd->bc", h, cand)[0]
+    return jax.lax.top_k(scores, min(100, scores.shape[0]))[1]
+
+
+# ============================================================= Two-tower ====
+@dataclasses.dataclass(frozen=True)
+class TwoTowerConfig:
+    name: str = "two-tower-retrieval"
+    n_users: int = 10_000_000
+    n_items: int = 2_000_000
+    n_context: int = 100_000
+    embed_dim: int = 256
+    tower_mlp: Tuple[int, ...] = (1024, 512, 256)
+    temperature: float = 0.05
+    dtype: Any = jnp.bfloat16
+
+
+def twotower_init(cfg: TwoTowerConfig, key) -> Params:
+    ks = jax.random.split(key, 6)
+    d = cfg.embed_dim
+    return {
+        "user": embedding_init(ks[0], cfg.n_users, d),
+        "ctx": embedding_init(ks[1], cfg.n_context, d),
+        "item": embedding_init(ks[2], cfg.n_items, d),
+        "icat": embedding_init(ks[3], cfg.n_context, d),
+        "user_tower": mlp_init(ks[4], (2 * d,) + cfg.tower_mlp),
+        "item_tower": mlp_init(ks[5], (2 * d,) + cfg.tower_mlp),
+    }
+
+
+def user_embed(cfg: TwoTowerConfig, p: Params, batch: Dict) -> jnp.ndarray:
+    e = jnp.concatenate(
+        [
+            embedding_lookup(p["user"]["table"], batch["user_id"], cfg.dtype),
+            embedding_lookup(p["ctx"]["table"], batch["user_ctx"], cfg.dtype),
+        ],
+        axis=-1,
+    )
+    out = mlp_apply(p["user_tower"], e, dtype=cfg.dtype)
+    return out / jnp.linalg.norm(out.astype(jnp.float32), axis=-1,
+                                 keepdims=True).astype(cfg.dtype)
+
+
+def item_embed(cfg: TwoTowerConfig, p: Params, item_id, item_cat) -> jnp.ndarray:
+    e = jnp.concatenate(
+        [
+            embedding_lookup(p["item"]["table"], item_id, cfg.dtype),
+            embedding_lookup(p["icat"]["table"], item_cat, cfg.dtype),
+        ],
+        axis=-1,
+    )
+    out = mlp_apply(p["item_tower"], e, dtype=cfg.dtype)
+    return out / jnp.linalg.norm(out.astype(jnp.float32), axis=-1,
+                                 keepdims=True).astype(cfg.dtype)
+
+
+def twotower_loss(cfg: TwoTowerConfig, p: Params, batch: Dict) -> jnp.ndarray:
+    """In-batch sampled softmax (the RecSys'19 retrieval objective)."""
+    u = user_embed(cfg, p, batch)                                   # (B, d)
+    i = item_embed(cfg, p, batch["item_id"], batch["item_cat"])     # (B, d)
+    logits = jnp.einsum("bd,cd->bc", u, i).astype(jnp.float32)
+    logits = logits / cfg.temperature
+    labels = jnp.arange(u.shape[0])
+    return softmax_xent(logits[:, None, :], labels[:, None])
+
+
+def twotower_score(cfg: TwoTowerConfig, p: Params, batch: Dict) -> jnp.ndarray:
+    u = user_embed(cfg, p, batch)
+    i = item_embed(cfg, p, batch["item_id"], batch["item_cat"])
+    return jnp.einsum("bd,bd->b", u, i) / cfg.temperature
+
+
+def twotower_retrieval(cfg: TwoTowerConfig, p: Params, batch: Dict) -> jnp.ndarray:
+    """1 query vs N precomputed candidate embeddings: blocked matmul + top-k.
+
+    The candidate store is the paper's S-strategy in device form: one
+    physically contiguous segment array scanned sequentially (DESIGN.md).
+    """
+    u = user_embed(cfg, p, batch)                  # (1, d)
+    cands = batch["candidate_embs"].astype(cfg.dtype)  # (N, d) precomputed
+    scores = jnp.einsum("bd,nd->bn", u, cands)[0].astype(jnp.float32)
+    return jax.lax.top_k(scores, 100)[1]

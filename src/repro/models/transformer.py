@@ -1,0 +1,386 @@
+"""Decoder-only transformer family (dense + MoE) with train, prefill and
+decode entry points.
+
+One configuration type covers all five assigned LM architectures
+(minicpm-2b, granite-3-2b, qwen1.5-4b, moonshot-v1-16b-a3b,
+qwen3-moe-235b-a22b): GQA with optional QKV bias, RoPE, SwiGLU MLP or MoE
+FFN, RMSNorm, tied or untied unembedding.
+
+Implementation notes for scale (the 512-chip dry-run must compile with
+compact HLO and bounded per-device memory):
+
+  * layers are a ``lax.scan`` over stacked parameters (HLO size is O(1)
+    in depth),
+  * activation remat (`jax.checkpoint`) per block, policy configurable,
+  * the LM loss is computed in sequence chunks (`loss_chunk`) so the
+    (B, S, vocab) logits tensor is never materialized,
+  * decode keeps a (B, S_max) KV cache with valid-length masking — the
+    paged-KV page pool is per-sequence, so scoring needs no gather (see
+    DESIGN.md: S-segment contiguity adaptation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.hooks import constrain
+from repro.models.attention import attention, decode_attention, mha
+from repro.models.moe import MoEConfig, moe_apply, moe_init
+from repro.nn.layers import dense_init, embedding_init, rms_norm, rope, softmax_xent
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    rms_eps: float = 1e-6
+    tie_embeddings: bool = True
+    moe: Optional[MoEConfig] = None
+    dtype: Any = jnp.bfloat16
+    remat: str = "dots"          # none | dots | full
+    loss_chunk: int = 512
+    flash_chunk: int = 1024
+    # activation sharding (no-ops without an ambient mesh):
+    #   heads — shard attention heads on the model axis (H % axis == 0)
+    #   seq   — shard query positions instead (uneven head counts)
+    att_shard: str = "heads"
+
+    @property
+    def params_dense(self) -> int:
+        """Total parameter count (all experts included)."""
+        d, f, L, V = self.d_model, self.d_ff, self.n_layers, self.vocab
+        att = d * (self.n_heads * self.d_head) + 2 * d * (
+            self.n_kv_heads * self.d_head
+        ) + (self.n_heads * self.d_head) * d
+        if self.moe:
+            ff = self.moe.n_experts * 3 * d * self.moe.d_ff
+            ff += self.moe.n_shared_experts * 3 * d * self.moe.d_ff
+            ff += d * self.moe.n_experts  # router
+        else:
+            ff = 3 * d * f
+        emb = V * d * (1 if self.tie_embeddings else 2)
+        return L * (att + ff + 2 * d) + emb + d
+
+    @property
+    def params_active(self) -> int:
+        """Active parameters per token (MoE: top_k + shared experts only)."""
+        if not self.moe:
+            return self.params_dense
+        d, L = self.d_model, self.n_layers
+        att = d * (self.n_heads * self.d_head) + 2 * d * (
+            self.n_kv_heads * self.d_head
+        ) + (self.n_heads * self.d_head) * d
+        ff = (self.moe.top_k + self.moe.n_shared_experts) * 3 * d * self.moe.d_ff
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return L * (att + ff + 2 * d) + emb + d
+
+
+# ------------------------------------------------------------------- init ---
+def init_params(cfg: TransformerConfig, key) -> Params:
+    keys = list(jax.random.split(key, 16))
+    L, d = cfg.n_layers, cfg.d_model
+    qd = cfg.n_heads * cfg.d_head
+    kvd = cfg.n_kv_heads * cfg.d_head
+
+    def stack(initializer, *shape_args, **kw):
+        ks = jax.random.split(keys.pop(), L)
+        return jax.vmap(lambda k: initializer(k, *shape_args, **kw))(ks)
+
+    block = {
+        "ln1": jnp.ones((L, d), jnp.float32),
+        "ln2": jnp.ones((L, d), jnp.float32),
+        "wq": stack(dense_init, d, qd, bias=cfg.qkv_bias),
+        "wk": stack(dense_init, d, kvd, bias=cfg.qkv_bias),
+        "wv": stack(dense_init, d, kvd, bias=cfg.qkv_bias),
+        "wo": stack(dense_init, qd, d),
+    }
+    if cfg.moe is not None:
+        block["moe"] = jax.vmap(
+            lambda k: moe_init(k, d, cfg.moe)
+        )(jax.random.split(keys[1], L))
+    else:
+        block["mlp"] = {
+            "wg": stack(dense_init, d, cfg.d_ff),
+            "wu": stack(dense_init, d, cfg.d_ff),
+            "wd": stack(dense_init, cfg.d_ff, d),
+        }
+    params: Params = {
+        "embed": embedding_init(keys[2], cfg.vocab, d),
+        "ln_f": jnp.ones((d,), jnp.float32),
+        "block": block,
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(keys[3], d, cfg.vocab)
+    return params
+
+
+# ---------------------------------------------------------------- forward ---
+def _constrain_qkv(cfg: TransformerConfig, q, k, v):
+    """Attention activation sharding (EXPERIMENTS.md Perf):
+    uneven GQA head counts defeat GSPMD's propagation and replicate the
+    whole attention per chip.  Heads are sharded on the model axis — for
+    head counts that do not divide it (minicpm 36H, qwen1.5 20H) GSPMD
+    pads (<=33% attention-flop waste), which beats replicating K/V by an
+    order of magnitude in collective bytes (train iteration 1: 'seq' mode
+    refuted, replaced by padded head sharding).  K/V are constrained
+    after GQA expansion inside the attention ops."""
+    if cfg.att_shard in ("heads", "seq"):
+        q = constrain(q, "batch", None, "model", None)
+    return q, k, v
+
+
+def _block_fwd(cfg: TransformerConfig, lp: Params, x: jnp.ndarray,
+               positions: jnp.ndarray) -> Tuple[jnp.ndarray, Dict]:
+    B, S, d = x.shape
+    dtype = cfg.dtype
+    h = rms_norm(lp["ln1"], x, cfg.rms_eps)
+    q = jnp.einsum("bsd,dq->bsq", h.astype(dtype), lp["wq"]["w"].astype(dtype))
+    k = jnp.einsum("bsd,dq->bsq", h.astype(dtype), lp["wk"]["w"].astype(dtype))
+    v = jnp.einsum("bsd,dq->bsq", h.astype(dtype), lp["wv"]["w"].astype(dtype))
+    if cfg.qkv_bias:
+        q = q + lp["wq"]["b"].astype(dtype)
+        k = k + lp["wk"]["b"].astype(dtype)
+        v = v + lp["wv"]["b"].astype(dtype)
+    q = q.reshape(B, S, cfg.n_heads, cfg.d_head)
+    k = k.reshape(B, S, cfg.n_kv_heads, cfg.d_head)
+    v = v.reshape(B, S, cfg.n_kv_heads, cfg.d_head)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q, k, v = _constrain_qkv(cfg, q, k, v)
+    o = attention(q, k, v, causal=True, flash_chunk=cfg.flash_chunk)
+    o = jnp.einsum(
+        "bsq,qd->bsd",
+        o.reshape(B, S, cfg.n_heads * cfg.d_head),
+        lp["wo"]["w"].astype(dtype),
+    )
+    x = constrain(x + o.astype(x.dtype), "batch", None, None)
+
+    h = rms_norm(lp["ln2"], x, cfg.rms_eps)
+    aux: Dict = {}
+    if cfg.moe is not None:
+        y, aux = moe_apply(lp["moe"], h, cfg.moe, dtype=dtype)
+    else:
+        m = lp["mlp"]
+        g = jax.nn.silu(
+            jnp.einsum("bsd,df->bsf", h.astype(dtype), m["wg"]["w"].astype(dtype))
+        )
+        u = jnp.einsum("bsd,df->bsf", h.astype(dtype), m["wu"]["w"].astype(dtype))
+        y = jnp.einsum("bsf,fd->bsd", g * u, m["wd"]["w"].astype(dtype))
+    x = x + y.astype(x.dtype)
+    return x, aux
+
+
+def _remat(cfg: TransformerConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    return jax.checkpoint(
+        fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    )
+
+
+def backbone(cfg: TransformerConfig, params: Params, tokens: jnp.ndarray,
+             positions: Optional[jnp.ndarray] = None
+             ) -> Tuple[jnp.ndarray, Dict]:
+    """Embed + all blocks + final norm.  Returns (B, S, d) hidden + aux."""
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x = params["embed"]["table"].astype(cfg.dtype)[tokens]
+    x = constrain(x, "batch", None, None)
+
+    body = _remat(cfg, lambda lp, xx: _block_fwd(cfg, lp, xx, positions))
+
+    def scan_fn(xx, lp):
+        xx, aux = body(lp, xx)
+        return xx, aux
+
+    x, auxs = jax.lax.scan(scan_fn, x, params["block"])
+    x = rms_norm(params["ln_f"], x, cfg.rms_eps)
+    aux = {k: v.sum() for k, v in auxs.items()} if auxs else {}
+    return x, aux
+
+
+def _unembed_chunk(cfg: TransformerConfig, params: Params,
+                   h: jnp.ndarray) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        return jnp.einsum(
+            "bsd,vd->bsv", h, params["embed"]["table"].astype(h.dtype)
+        )
+    return jnp.einsum(
+        "bsd,dv->bsv", h, params["unembed"]["w"].astype(h.dtype)
+    )
+
+
+def lm_loss(cfg: TransformerConfig, params: Params, tokens: jnp.ndarray,
+            labels: jnp.ndarray) -> Tuple[jnp.ndarray, Dict]:
+    """Chunked-softmax LM loss: never materializes (B, S, vocab)."""
+    h, aux = backbone(cfg, params, tokens)
+    B, S, d = h.shape
+    C = min(cfg.loss_chunk, S)
+    assert S % C == 0
+    hc = h.reshape(B, S // C, C, d).swapaxes(0, 1)      # (n, B, C, d)
+    lc = labels.reshape(B, S // C, C).swapaxes(0, 1)
+
+    def chunk_loss(carry, inp):
+        hh, ll = inp
+        logits = constrain(
+            _unembed_chunk(cfg, params, hh), "batch", None, "model"
+        )
+        nll = softmax_xent(logits, ll)
+        n = (ll != -1).sum()
+        return (carry[0] + nll * n, carry[1] + n), None
+
+    (tot, n), _ = jax.lax.scan(
+        chunk_loss, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)),
+        (hc, lc),
+    )
+    loss = tot / jnp.maximum(n, 1)
+    if "balance_loss" in aux:
+        loss = loss + 0.01 * aux["balance_loss"] / cfg.n_layers
+    return loss, aux
+
+
+# ------------------------------------------------------------------ serve ---
+def make_cache(cfg: TransformerConfig, batch: int, s_max: int,
+               dtype=None) -> Dict:
+    dtype = dtype or cfg.dtype
+    L, n_kv, D = cfg.n_layers, cfg.n_kv_heads, cfg.d_head
+    return {
+        "k": jnp.zeros((L, batch, s_max, n_kv, D), dtype),
+        "v": jnp.zeros((L, batch, s_max, n_kv, D), dtype),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def prefill(cfg: TransformerConfig, params: Params, tokens: jnp.ndarray
+            ) -> Tuple[jnp.ndarray, Dict]:
+    """Process a prompt; return last-position logits and a filled cache."""
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x = params["embed"]["table"].astype(cfg.dtype)[tokens]
+
+    def scan_fn(xx, lp):
+        h = rms_norm(lp["ln1"], xx, cfg.rms_eps)
+        dtype = cfg.dtype
+        q = jnp.einsum("bsd,dq->bsq", h.astype(dtype), lp["wq"]["w"].astype(dtype))
+        k = jnp.einsum("bsd,dq->bsq", h.astype(dtype), lp["wk"]["w"].astype(dtype))
+        v = jnp.einsum("bsd,dq->bsq", h.astype(dtype), lp["wv"]["w"].astype(dtype))
+        if cfg.qkv_bias:
+            q = q + lp["wq"]["b"].astype(dtype)
+            k = k + lp["wk"]["b"].astype(dtype)
+            v = v + lp["wv"]["b"].astype(dtype)
+        q = q.reshape(B, S, cfg.n_heads, cfg.d_head)
+        k = k.reshape(B, S, cfg.n_kv_heads, cfg.d_head)
+        v = v.reshape(B, S, cfg.n_kv_heads, cfg.d_head)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        q, k, v = _constrain_qkv(cfg, q, k, v)
+        o = attention(q, k, v, causal=True, flash_chunk=cfg.flash_chunk)
+        o = jnp.einsum(
+            "bsq,qd->bsd", o.reshape(B, S, cfg.n_heads * cfg.d_head),
+            lp["wo"]["w"].astype(dtype),
+        )
+        xx = xx + o.astype(xx.dtype)
+        h = rms_norm(lp["ln2"], xx, cfg.rms_eps)
+        if cfg.moe is not None:
+            y, _ = moe_apply(lp["moe"], h, cfg.moe, dtype=dtype)
+        else:
+            m = lp["mlp"]
+            g = jax.nn.silu(jnp.einsum("bsd,df->bsf", h.astype(dtype),
+                                       m["wg"]["w"].astype(dtype)))
+            u = jnp.einsum("bsd,df->bsf", h.astype(dtype),
+                           m["wu"]["w"].astype(dtype))
+            y = jnp.einsum("bsf,fd->bsd", g * u, m["wd"]["w"].astype(dtype))
+        xx = xx + y.astype(xx.dtype)
+        return xx, (k, v)
+
+    body = _remat(cfg, scan_fn) if cfg.remat != "none" else scan_fn
+    x, (ks, vs) = jax.lax.scan(body, x, params["block"])
+    x = rms_norm(params["ln_f"], x, cfg.rms_eps)
+    logits = _unembed_chunk(cfg, params, x[:, -1:, :])
+    cache = {
+        "k": ks,  # (L, B, S, n_kv, D)
+        "v": vs,
+        "len": jnp.full((B,), S, jnp.int32),
+    }
+    return logits[:, 0], cache
+
+
+def decode_step(cfg: TransformerConfig, params: Params, token: jnp.ndarray,
+                cache: Dict) -> Tuple[jnp.ndarray, Dict]:
+    """One decode step: token (B,) int32 -> logits (B, vocab), new cache."""
+    B = token.shape[0]
+    lens = cache["len"]  # (B,)
+    positions = lens[:, None]  # (B, 1)
+    x = params["embed"]["table"].astype(cfg.dtype)[token[:, None]]
+    dtype = cfg.dtype
+    bidx = jnp.arange(B)
+
+    def scan_fn(xx, per_layer):
+        lp, kc, vc = per_layer
+        h = rms_norm(lp["ln1"], xx, cfg.rms_eps)
+        q = jnp.einsum("bsd,dq->bsq", h.astype(dtype), lp["wq"]["w"].astype(dtype))
+        k = jnp.einsum("bsd,dq->bsq", h.astype(dtype), lp["wk"]["w"].astype(dtype))
+        v = jnp.einsum("bsd,dq->bsq", h.astype(dtype), lp["wv"]["w"].astype(dtype))
+        if cfg.qkv_bias:
+            q = q + lp["wq"]["b"].astype(dtype)
+            k = k + lp["wk"]["b"].astype(dtype)
+            v = v + lp["wv"]["b"].astype(dtype)
+        q = q.reshape(B, 1, cfg.n_heads, cfg.d_head)
+        k = k.reshape(B, 1, cfg.n_kv_heads, cfg.d_head)
+        v = v.reshape(B, 1, cfg.n_kv_heads, cfg.d_head)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        # write the new entry at each sequence's current length.  A one-hot
+        # select instead of a scatter: scatters at mixed dtypes get promoted
+        # (full-cache convert round-trips) and fragment under GSPMD, while
+        # the select fuses into one slice-sized masked write
+        # (EXPERIMENTS.md Perf, decode iteration 1).
+        sel = (
+            jnp.arange(kc.shape[1], dtype=jnp.int32)[None, :]
+            == lens[:, None]
+        )[..., None, None]
+        kc = jnp.where(sel, k[:, 0][:, None].astype(kc.dtype), kc)
+        vc = jnp.where(sel, v[:, 0][:, None].astype(vc.dtype), vc)
+        o = decode_attention(q, kc, vc, lens + 1)
+        o = jnp.einsum(
+            "bsq,qd->bsd", o.reshape(B, 1, cfg.n_heads * cfg.d_head),
+            lp["wo"]["w"].astype(dtype),
+        )
+        xx = xx + o.astype(xx.dtype)
+        h = rms_norm(lp["ln2"], xx, cfg.rms_eps)
+        if cfg.moe is not None:
+            y, _ = moe_apply(lp["moe"], h, cfg.moe, dtype=dtype)
+        else:
+            m = lp["mlp"]
+            g = jax.nn.silu(jnp.einsum("bsd,df->bsf", h.astype(dtype),
+                                       m["wg"]["w"].astype(dtype)))
+            u = jnp.einsum("bsd,df->bsf", h.astype(dtype),
+                           m["wu"]["w"].astype(dtype))
+            y = jnp.einsum("bsf,fd->bsd", g * u, m["wd"]["w"].astype(dtype))
+        xx = xx + y.astype(xx.dtype)
+        return xx, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(scan_fn, x, (params["block"], cache["k"], cache["v"]))
+    x = rms_norm(params["ln_f"], x, cfg.rms_eps)
+    logits = _unembed_chunk(cfg, params, x)[:, 0]
+    new_cache = {"k": ks, "v": vs, "len": lens + 1}
+    return logits, new_cache

@@ -1,0 +1,10 @@
+from repro.nn.layers import (  # noqa: F401
+    dense,
+    dense_init,
+    embedding_init,
+    mlp_init,
+    mlp_apply,
+    rms_norm,
+    rope,
+    softmax_xent,
+)

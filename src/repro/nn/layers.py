@@ -1,0 +1,94 @@
+"""Minimal functional NN substrate (no flax/optax in this environment).
+
+Parameters are nested dicts of jnp arrays; every layer is an explicit
+``init`` + ``apply`` pair.  Compute dtype is configurable (bf16 matmuls,
+f32 softmax/norms — the TPU-native mixed precision recipe); parameters are
+kept in f32 master copies.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+# ----------------------------------------------------------------- inits ----
+def dense_init(key, d_in: int, d_out: int, bias: bool = False,
+               scale: Optional[float] = None) -> Params:
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": jax.random.normal(key, (d_in, d_out), jnp.float32) * scale}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def embedding_init(key, vocab: int, dim: int, scale: float = 0.02) -> Params:
+    return {"table": jax.random.normal(key, (vocab, dim), jnp.float32) * scale}
+
+
+def mlp_init(key, dims: Sequence[int], bias: bool = True) -> Params:
+    keys = jax.random.split(key, len(dims) - 1)
+    return {
+        f"fc{i}": dense_init(keys[i], dims[i], dims[i + 1], bias=bias)
+        for i in range(len(dims) - 1)
+    }
+
+
+# ---------------------------------------------------------------- applies ----
+def dense(p: Params, x: jnp.ndarray, dtype=jnp.bfloat16) -> jnp.ndarray:
+    y = jnp.einsum("...d,df->...f", x.astype(dtype), p["w"].astype(dtype))
+    if "b" in p:
+        y = y + p["b"].astype(dtype)
+    return y
+
+
+def mlp_apply(p: Params, x: jnp.ndarray, act=jax.nn.relu,
+              dtype=jnp.bfloat16, final_act: bool = False) -> jnp.ndarray:
+    n = len(p)
+    for i in range(n):
+        x = dense(p[f"fc{i}"], x, dtype=dtype)
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def rms_norm(g: jnp.ndarray, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    scale = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return ((xf * scale) * g.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0) -> jnp.ndarray:
+    """Rotary embedding.  x: (..., S, n_heads, d_head); positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., :, None, :]  # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray,
+                 ignore_id: int = -1) -> jnp.ndarray:
+    """Mean token cross-entropy in f32; labels == ignore_id are masked."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1
+    )[..., 0]
+    nll = logz - gold
+    mask = (labels != ignore_id).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

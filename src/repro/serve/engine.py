@@ -1,0 +1,138 @@
+"""Batched serving engine over the paged KV substrate.
+
+Continuous batching: requests join a fixed-slot batch as slots free up;
+each engine step decodes one token for every active slot.  The
+:class:`~repro.core.paged_kv.PagedKVManager` tracks page placement with
+the paper's CH/S/SR semantics — its gather-depth bound is what keeps the
+per-step read pattern bounded (the serving twin of bounded search I/O).
+
+The device cache uses per-sequence slot layout (S-segment contiguity,
+DESIGN.md section 2); the manager's block tables drive the Pallas
+paged_attention kernel on TPU deployments.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.paged_kv import PagedKVManager
+from repro.models.transformer import (
+    TransformerConfig,
+    decode_step,
+    make_cache,
+    prefill,
+)
+
+
+@dataclasses.dataclass
+class Request:
+    req_id: int
+    prompt: np.ndarray          # (S,) token ids
+    max_new_tokens: int = 16
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        cfg: TransformerConfig,
+        params,
+        batch_slots: int = 4,
+        s_max: int = 256,
+        page_size: int = 16,
+        chain_limit: int = 9,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.slots = batch_slots
+        self.s_max = s_max
+        self.cache = make_cache(cfg, batch_slots, s_max)
+        self.kv_mgr = PagedKVManager(
+            n_pages=batch_slots * (s_max // page_size) * 2,
+            page_size=page_size,
+            chain_limit=chain_limit,
+        )
+        self.slot_req: List[Optional[Request]] = [None] * batch_slots
+        self.queue: List[Request] = []
+        self.steps = 0
+        self._decode = jax.jit(
+            lambda p, t, c: decode_step(cfg, p, t, c)
+        )
+
+    # ------------------------------------------------------------- intake --
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for slot in range(self.slots):
+            if self.slot_req[slot] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            logits, cache1 = prefill(
+                self.cfg, self.params, jnp.asarray(req.prompt[None, :])
+            )
+            S = req.prompt.shape[0]
+            self.cache["k"] = self.cache["k"].at[:, slot, :S].set(
+                cache1["k"][:, 0]
+            )
+            self.cache["v"] = self.cache["v"].at[:, slot, :S].set(
+                cache1["v"][:, 0]
+            )
+            self.cache["len"] = self.cache["len"].at[slot].set(S)
+            first = int(jnp.argmax(logits[0]))
+            req.out_tokens.append(first)
+            self.slot_req[slot] = req
+            self.kv_mgr.new_sequence(req.req_id)
+            self.kv_mgr.append_tokens(req.req_id, S)
+
+    # --------------------------------------------------------------- step --
+    def step(self) -> int:
+        """One decode step for all active slots; returns #active."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return 0
+        tokens = np.zeros((self.slots,), np.int32)
+        for i in active:
+            tokens[i] = self.slot_req[i].out_tokens[-1]
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(tokens), self.cache
+        )
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for i in active:
+            req = self.slot_req[i]
+            req.out_tokens.append(int(nxt[i]))
+            self.kv_mgr.append_tokens(req.req_id, 1)
+            hit_limit = len(req.out_tokens) >= req.max_new_tokens
+            full = int(self.cache["len"][i]) + 1 >= self.s_max
+            if hit_limit or full:
+                req.done = True
+                self.kv_mgr.free_sequence(req.req_id)
+                self.slot_req[i] = None
+                self.cache["len"] = self.cache["len"].at[i].set(0)
+        self.steps += 1
+        return len(active)
+
+    def run_until_done(self, max_steps: int = 1000) -> List[Request]:
+        done: List[Request] = []
+        while (self.queue or any(self.slot_req)) and self.steps < max_steps:
+            before = [r for r in self.slot_req]
+            self.step()
+            for r in before:
+                if r is not None and r.done:
+                    done.append(r)
+        return done
+
+    def stats(self) -> Dict:
+        return {
+            "steps": self.steps,
+            "kv": dataclasses.asdict(self.kv_mgr.stats),
+            "fragmentation": self.kv_mgr.fragmentation(),
+        }

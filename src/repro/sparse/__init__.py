@@ -1,0 +1,5 @@
+from repro.sparse.embedding import (  # noqa: F401
+    embedding_bag,
+    embedding_lookup,
+    segment_softmax,
+)

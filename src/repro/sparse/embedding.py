@@ -1,0 +1,67 @@
+"""Sparse embedding ops built from ``jnp.take`` + ``jax.ops.segment_sum``.
+
+JAX has no native EmbeddingBag or CSR sparse support (BCOO only) — these
+ARE the system's lookup substrate, as the brief requires.  The same
+gather+segment-reduce pattern backs the recsys models and the GNN message
+passing; the Pallas kernel in ``repro.kernels.embedding_bag`` implements
+the fused TPU version and is validated against these functions.
+
+The paper mapping (DESIGN.md): an embedding table is the associative
+array; the *rows are keys*.  Batched lookups are the read path; gradient
+scatter-adds are the posting appends, and packing many of them into one
+dense segment_sum is the DS strategy's small-write elision on device.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_lookup(table: jnp.ndarray, ids: jnp.ndarray,
+                     dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Plain row gather: (..., ) ids -> (..., dim)."""
+    return jnp.take(table, ids, axis=0).astype(dtype)
+
+
+def embedding_bag(
+    table: jnp.ndarray,        # (vocab, dim)
+    ids: jnp.ndarray,          # (n_ids,) flat indices
+    segment_ids: jnp.ndarray,  # (n_ids,) output row per id
+    num_segments: int,
+    weights: Optional[jnp.ndarray] = None,
+    mode: str = "sum",
+    dtype=jnp.bfloat16,
+) -> jnp.ndarray:
+    """EmbeddingBag: gather rows, segment-reduce into bags.
+
+    Equivalent to torch.nn.EmbeddingBag(mode='sum'|'mean') with explicit
+    segment ids (padding-free ragged bags).
+    """
+    rows = jnp.take(table, ids, axis=0).astype(dtype)
+    if weights is not None:
+        rows = rows * weights[:, None].astype(dtype)
+    out = jax.ops.segment_sum(rows, segment_ids, num_segments=num_segments)
+    if mode == "mean":
+        cnt = jax.ops.segment_sum(
+            jnp.ones_like(segment_ids, dtype), segment_ids,
+            num_segments=num_segments,
+        )
+        out = out / jnp.maximum(cnt, 1)[:, None]
+    elif mode != "sum":
+        raise ValueError(mode)
+    return out
+
+
+def segment_softmax(
+    logits: jnp.ndarray,       # (n,) or (n, h)
+    segment_ids: jnp.ndarray,  # (n,)
+    num_segments: int,
+) -> jnp.ndarray:
+    """Softmax within segments (GAT-style attention over ragged neighbors)."""
+    mx = jax.ops.segment_max(logits, segment_ids, num_segments=num_segments)
+    z = jnp.exp(logits - mx[segment_ids])
+    denom = jax.ops.segment_sum(z, segment_ids, num_segments=num_segments)
+    return z / jnp.maximum(denom[segment_ids], 1e-20)

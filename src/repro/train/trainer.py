@@ -1,0 +1,155 @@
+"""Fault-tolerant training loop with microbatch gradient accumulation.
+
+Responsibilities (DESIGN.md section 4):
+  * build a jit'd train step from any ``loss_fn(params, batch)`` with
+    gradient accumulation over microbatches (scan) — the accumulation
+    structure is also what lets XLA overlap the reduce-scatter of
+    microbatch k with the compute of k+1 on a real interconnect,
+  * optional int8 gradient compression before the optimizer,
+  * periodic async checkpoints + resume from (step, data_cursor),
+  * crash-in-the-middle restart is exercised by tests/test_train.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt.checkpoint import CheckpointManager, latest_step, load_checkpoint
+from repro.distributed.compression import compress_tree
+from repro.train.optim import OptConfig, adamw_init, adamw_update
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    opt: OptConfig = dataclasses.field(default_factory=OptConfig)
+    microbatches: int = 1
+    compress_grads: bool = False
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    keep_ckpts: int = 3
+    log_every: int = 10
+
+
+def build_train_step(
+    loss_fn: Callable[[Any, Dict], jnp.ndarray],
+    cfg: TrainerConfig,
+    donate: bool = True,
+):
+    """Returns jit-able ``step(params, opt_state, batch) ->
+    (params, opt_state, metrics)``.  ``batch`` leaves must have a leading
+    dim divisible by ``cfg.microbatches``; accumulation runs as a scan."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    def step(params, opt_state, batch):
+        mb = cfg.microbatches
+        if mb > 1:
+            def split(x):
+                return x.reshape((mb, x.shape[0] // mb) + x.shape[1:])
+
+            micro = jax.tree_util.tree_map(split, batch)
+
+            def acc_fn(carry, mb_batch):
+                loss_sum, gacc = carry
+                loss, g = grads_of(params, mb_batch)
+                gacc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), gacc, g
+                )
+                return (loss_sum + loss, gacc), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (loss_sum, grads), _ = jax.lax.scan(
+                acc_fn, (jnp.zeros((), jnp.float32), zeros), micro
+            )
+            loss = loss_sum / mb
+            grads = jax.tree_util.tree_map(lambda g: g / mb, grads)
+        else:
+            loss, grads = grads_of(params, batch)
+        if cfg.compress_grads:
+            grads = compress_tree(grads)
+        params, opt_state, om = adamw_update(cfg.opt, grads, opt_state, params)
+        metrics = {"loss": loss, **om}
+        return params, opt_state, metrics
+
+    return step
+
+
+class Trainer:
+    def __init__(
+        self,
+        loss_fn: Callable,
+        params: Any,
+        cfg: TrainerConfig,
+        jit_kwargs: Optional[Dict] = None,
+    ):
+        self.cfg = cfg
+        self.loss_fn = loss_fn
+        self.params = params
+        self.opt_state = adamw_init(params)
+        self.step_num = 0
+        self.data_cursor = 0
+        self._step = jax.jit(
+            build_train_step(loss_fn, cfg), **(jit_kwargs or {})
+        )
+        self.ckpt = (
+            CheckpointManager(cfg.ckpt_dir, keep=cfg.keep_ckpts)
+            if cfg.ckpt_dir
+            else None
+        )
+        self.history = []
+
+    # -- resume ----------------------------------------------------------------
+    def try_resume(self, shardings=None, opt_shardings=None) -> bool:
+        if not self.cfg.ckpt_dir or latest_step(self.cfg.ckpt_dir) is None:
+            return False
+        self.params, self.opt_state, self.step_num, self.data_cursor = (
+            load_checkpoint(
+                self.cfg.ckpt_dir, self.params, self.opt_state,
+                shardings=shardings, opt_shardings=opt_shardings,
+            )
+        )
+        return True
+
+    # -- main loop ---------------------------------------------------------------
+    def fit(
+        self,
+        batches: Callable[[int], Dict],
+        n_steps: int,
+        on_step: Optional[Callable[[int, Dict], None]] = None,
+    ) -> Dict:
+        """``batches(cursor)`` returns the batch for a given data cursor —
+        deterministic data order makes restart-exactness testable."""
+        last = {}
+        while self.step_num < n_steps:
+            batch = batches(self.data_cursor)
+            self.params, self.opt_state, metrics = self._step(
+                self.params, self.opt_state, batch
+            )
+            self.step_num += 1
+            self.data_cursor += 1
+            if self.step_num % self.cfg.log_every == 0 or self.step_num == n_steps:
+                last = {k: float(v) for k, v in metrics.items()}
+                self.history.append({"step": self.step_num, **last})
+            if (
+                self.ckpt
+                and self.step_num % self.cfg.ckpt_every == 0
+            ):
+                self.ckpt.save(
+                    self.step_num, self.params, self.opt_state,
+                    data_cursor=self.data_cursor,
+                )
+        if self.ckpt:
+            self.ckpt.save(
+                self.step_num, self.params, self.opt_state,
+                data_cursor=self.data_cursor,
+            )
+            self.ckpt.wait()
+        return last

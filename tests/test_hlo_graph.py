@@ -1,0 +1,116 @@
+"""HLO call-graph analyzer: exactness on hand-computable programs.
+
+This analyzer produces the roofline numbers (EXPERIMENTS.md), so its
+trip-count multiplication and flop counting must be exact where XLA's
+cost_analysis is not (while bodies counted once)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_graph import analyze
+
+
+def _compile(fn, *shapes):
+    args = [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes]
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_plain_matmul_flops_exact():
+    M, N, K = 64, 128, 256
+    hlo = _compile(lambda a, b: a @ b, (M, K), (K, N))
+    r = analyze(hlo, 1)
+    assert abs(r["dot_flops"] / (2 * M * N * K) - 1) < 1e-9
+
+
+def test_scan_trip_count_multiplied():
+    L, Mm = 17, 32
+
+    def scanfn(x, ws):
+        def body(c, w):
+            return c @ w, None
+
+        return jax.lax.scan(body, x, ws)[0]
+
+    hlo = _compile(scanfn, (Mm, Mm), (L, Mm, Mm))
+    r = analyze(hlo, 1)
+    assert abs(r["dot_flops"] / (L * 2 * Mm**3) - 1) < 1e-9
+
+
+def test_nested_scan():
+    L, Mm, outer = 5, 16, 3
+
+    def nested(x, ws):
+        def outer_body(c, _):
+            def body(cc, w):
+                return cc @ w, None
+
+            return jax.lax.scan(body, c, ws)[0], None
+
+        return jax.lax.scan(outer_body, x, None, length=outer)[0]
+
+    hlo = _compile(nested, (Mm, Mm), (L, Mm, Mm))
+    r = analyze(hlo, 1)
+    assert abs(r["dot_flops"] / (outer * L * 2 * Mm**3) - 1) < 1e-9
+
+
+def test_grad_of_scan_is_3x_forward():
+    L, Mm = 8, 16
+
+    def lossfn(x, ws):
+        def body(c, w):
+            return c @ w, None
+
+        return jnp.sum(jax.lax.scan(body, x, ws)[0])
+
+    hlo = _compile(jax.grad(lossfn, argnums=1), (Mm, Mm), (L, Mm, Mm))
+    r = analyze(hlo, 1)
+    fwd = L * 2 * Mm**3
+    assert abs(r["dot_flops"] / (3 * fwd) - 1) < 0.01
+
+
+def test_collective_detection_and_wire_bytes():
+    import os
+
+    devices = jax.devices()
+    if len(devices) < 2:
+        pytest.skip("needs >1 device (run under forced host device count)")
+    mesh = jax.make_mesh((len(devices),), ("d",))
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    xs = NamedSharding(mesh, P("d", None))
+    f = jax.jit(
+        lambda x: jnp.sum(x, axis=0),
+        in_shardings=(xs,),
+        out_shardings=NamedSharding(mesh, P()),
+    )
+    with mesh:
+        hlo = f.lower(
+            jax.ShapeDtypeStruct((len(devices) * 8, 32), jnp.float32)
+        ).compile().as_text()
+    r = analyze(hlo, len(devices))
+    assert r["collectives"]["counts"].get("all-reduce", 0) >= 1
+    n = len(devices)
+    res = r["collectives"]["result_bytes"]["all-reduce"]
+    wire = r["collectives"]["wire_bytes"]["all-reduce"]
+    assert abs(wire - 2 * (n - 1) / n * res) < 1e-6
+
+
+def test_memory_bytes_slicing_not_overcounted():
+    """A scan that slices a big stacked array must charge slice windows,
+    not the whole array per iteration."""
+    L, Mm = 64, 32
+
+    def scanfn(x, ws):
+        def body(c, w):
+            return c + w, None
+
+        return jax.lax.scan(body, x, ws)[0]
+
+    hlo = _compile(scanfn, (Mm, Mm), (L, Mm, Mm))
+    r = analyze(hlo, 1)
+    full = L * Mm * Mm * 4
+    # bytes should be O(L x slice) ~ a small multiple of the array size,
+    # NOT O(L x full array) = L x full
+    assert r["hbm_bytes"] < 8 * full, (r["hbm_bytes"], full)

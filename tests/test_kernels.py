@@ -1,0 +1,120 @@
+"""Pallas kernels vs their pure-jnp oracles: shape/dtype sweeps in
+interpret mode (the kernel bodies execute in Python on CPU)."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag.ops import embedding_bag_fixed
+from repro.kernels.embedding_bag.ref import embedding_bag_fixed_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.intersect.ops import intersect_sorted
+from repro.kernels.intersect.ref import intersect_sorted_ref
+from repro.kernels.paged_attention.ops import paged_attention
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+RNG = np.random.RandomState(7)
+
+
+@pytest.mark.parametrize(
+    "B,H,S,D,bq,bk",
+    [
+        (1, 1, 64, 32, 32, 32),
+        (2, 3, 128, 64, 64, 32),
+        (1, 2, 256, 128, 128, 128),
+        (2, 1, 128, 16, 128, 64),  # D not lane-sized: interpret-mode check
+    ],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(B, H, S, D, bq, bk, dtype):
+    q = jnp.asarray(RNG.randn(B, H, S, D), dtype)
+    k = jnp.asarray(RNG.randn(B, H, S, D), dtype)
+    v = jnp.asarray(RNG.randn(B, H, S, D), dtype)
+    got = flash_attention(q, k, v, causal=True, bq=bq, bk=bk)
+    want = flash_attention_ref(q, k, v, causal=True)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    assert got.dtype == dtype
+    assert float(jnp.abs(got.astype(jnp.float32)
+                         - want.astype(jnp.float32)).max()) < tol
+
+
+def test_flash_attention_non_causal():
+    q = jnp.asarray(RNG.randn(1, 2, 128, 32), jnp.float32)
+    k = jnp.asarray(RNG.randn(1, 2, 128, 32), jnp.float32)
+    v = jnp.asarray(RNG.randn(1, 2, 128, 32), jnp.float32)
+    got = flash_attention(q, k, v, causal=False, bq=64, bk=64)
+    want = flash_attention_ref(q, k, v, causal=False)
+    assert float(jnp.abs(got - want).max()) < 2e-5
+
+
+@pytest.mark.parametrize(
+    "B,H,D,page,n_pages,max_pages",
+    [(2, 4, 32, 16, 12, 4), (3, 8, 64, 8, 30, 7), (1, 2, 128, 32, 6, 3)],
+)
+def test_paged_attention(B, H, D, page, n_pages, max_pages):
+    q = jnp.asarray(RNG.randn(B, H, D), jnp.float32)
+    kp = jnp.asarray(RNG.randn(n_pages, page, D), jnp.float32)
+    vp = jnp.asarray(RNG.randn(n_pages, page, D), jnp.float32)
+    bt = jnp.asarray(
+        RNG.choice(n_pages, size=(B, max_pages)), jnp.int32
+    )
+    lens = jnp.asarray(
+        RNG.randint(1, max_pages * page + 1, size=B), jnp.int32
+    )
+    got = paged_attention(q, kp, vp, bt, lens)
+    want = paged_attention_ref(q, kp, vp, bt, lens)
+    assert float(jnp.abs(got - want).max()) < 2e-5
+
+
+def test_paged_attention_chain_limit_semantics():
+    """max_pages bounds the indirections per read — the CH chain-limit
+    invariant carried onto the device (paper 5.7.3)."""
+    B, H, D, page = 2, 2, 32, 16
+    for max_pages in (2, 5, 9):
+        n_pages = max_pages * B
+        q = jnp.asarray(RNG.randn(B, H, D), jnp.float32)
+        kp = jnp.asarray(RNG.randn(n_pages, page, D), jnp.float32)
+        vp = jnp.asarray(RNG.randn(n_pages, page, D), jnp.float32)
+        bt = jnp.asarray(
+            np.arange(B * max_pages).reshape(B, max_pages), jnp.int32
+        )
+        lens = jnp.full((B,), max_pages * page, jnp.int32)
+        got = paged_attention(q, kp, vp, bt, lens)
+        want = paged_attention_ref(q, kp, vp, bt, lens)
+        assert float(jnp.abs(got - want).max()) < 2e-5
+
+
+@pytest.mark.parametrize("V,D,B,K", [(64, 32, 4, 3), (256, 128, 16, 8),
+                                     (1000, 64, 7, 1)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_embedding_bag(V, D, B, K, dtype):
+    tb = jnp.asarray(RNG.randn(V, D), dtype)
+    ids = jnp.asarray(RNG.randint(0, V, (B, K)), jnp.int32)
+    w = jnp.asarray(RNG.rand(B, K), jnp.float32)
+    got = embedding_bag_fixed(tb, ids, w)
+    want = embedding_bag_fixed_ref(tb, ids, w)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    assert float(jnp.abs(got.astype(jnp.float32)
+                         - want.astype(jnp.float32)).max()) < tol
+
+
+@pytest.mark.parametrize("na,nb,bn,bm", [
+    (100, 200, 32, 64), (1000, 50, 256, 32), (8, 8, 8, 8),
+    (2000, 3000, 1024, 1024),
+])
+def test_intersect(na, nb, bn, bm):
+    a = np.unique(RNG.randint(0, 10_000, na)).astype(np.int32)
+    b = np.unique(RNG.randint(0, 10_000, nb)).astype(np.int32)
+    got = np.asarray(intersect_sorted(a, b, bn=bn, bm=bm))
+    want = np.asarray(intersect_sorted_ref(jnp.asarray(a), jnp.asarray(b)))
+    assert (got == want).all()
+
+
+def test_intersect_disjoint_and_identical():
+    a = np.arange(0, 100, dtype=np.int32)
+    b = np.arange(1000, 1100, dtype=np.int32)
+    assert not np.asarray(intersect_sorted(a, b)).any()
+    assert np.asarray(intersect_sorted(a, a)).all()

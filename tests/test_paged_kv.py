@@ -1,0 +1,104 @@
+"""Paged-KV manager: chain limit, SR full-page invariant, compaction,
+and integration with the paged attention kernel."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.paged_kv import PagedKVManager
+from repro.kernels.paged_attention.ops import paged_attention
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+
+def test_bounded_gather_depth():
+    m = PagedKVManager(n_pages=1024, page_size=16, chain_limit=4)
+    # interleave appends across sequences to force fragmentation
+    for s in range(8):
+        m.new_sequence(s)
+    rng = np.random.RandomState(0)
+    for _ in range(400):
+        s = int(rng.randint(8))
+        m.append_tokens(s, int(rng.randint(1, 40)))
+        assert m.gather_depth(s) <= 4, "chain limit violated"
+    assert m.stats.compactions > 0, "test should exercise compaction"
+
+
+def test_sr_full_page_invariant():
+    """Published pages are always full: length is a multiple of page_size
+    and the remainder lives in the tail buffer."""
+    m = PagedKVManager(n_pages=128, page_size=16, chain_limit=9)
+    m.new_sequence(0)
+    total = 0
+    rng = np.random.RandomState(1)
+    for _ in range(50):
+        n = int(rng.randint(1, 23))
+        m.append_tokens(0, n)
+        total += n
+        st_ = m.seqs[0]
+        assert st_.length % 16 == 0
+        assert st_.length + st_.tail == total
+        assert st_.tail < 16
+
+
+def test_free_and_reuse():
+    m = PagedKVManager(n_pages=64, page_size=8, chain_limit=3)
+    for s in range(4):
+        m.new_sequence(s)
+        m.append_tokens(s, 64)
+    used_before = m.free_pages
+    for s in range(4):
+        m.free_sequence(s)
+    assert m.free_pages == 64
+    m.new_sequence(9)
+    m.append_tokens(9, 64 * 8)  # can use the whole pool again
+    assert m.seqs[9].length == 64 * 8
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.lists(
+        st.tuples(st.integers(0, 5), st.integers(1, 33)),
+        min_size=1, max_size=80,
+    ),
+    st.integers(2, 9),
+)
+def test_property_invariants(appends, limit):
+    m = PagedKVManager(n_pages=4096, page_size=8, chain_limit=limit)
+    seen = set()
+    totals = {}
+    for s, n in appends:
+        if s not in seen:
+            m.new_sequence(s)
+            seen.add(s)
+            totals[s] = 0
+        m.append_tokens(s, n)
+        totals[s] += n
+    # no page owned by two sequences
+    owned = []
+    for s in seen:
+        owned.extend(m.page_ids(s))
+    assert len(owned) == len(set(owned)), "page double-ownership"
+    for s in seen:
+        assert m.gather_depth(s) <= limit
+        assert m.seqs[s].length + m.seqs[s].tail == totals[s]
+
+
+def test_block_table_feeds_kernel():
+    rng = np.random.RandomState(3)
+    page, D, H = 8, 32, 2
+    m = PagedKVManager(n_pages=64, page_size=page, chain_limit=3)
+    for s in range(3):
+        m.new_sequence(s)
+        m.append_tokens(s, int(rng.randint(page, 20 * page)))
+    seqs = [0, 1, 2]
+    max_pages = max(len(m.page_ids(s)) for s in seqs) + 1
+    bt = m.block_table(seqs, max_pages)
+    lens = m.lengths(seqs)
+    kp = jnp.asarray(rng.randn(64, page, D), jnp.float32)
+    vp = jnp.asarray(rng.randn(64, page, D), jnp.float32)
+    q = jnp.asarray(rng.randn(3, H, D), jnp.float32)
+    got = paged_attention(q, kp, vp, jnp.asarray(bt), jnp.asarray(lens))
+    want = paged_attention_ref(q, kp, vp, jnp.asarray(bt), jnp.asarray(lens))
+    assert float(jnp.abs(got - want).max()) < 2e-5

@@ -1,0 +1,93 @@
+"""Sharding policy engine: rule matching, divisibility degradation,
+sanitization — the machinery every dry-run cell depends on."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import (
+    LM_RULES,
+    RECSYS_RULES,
+    batch_spec,
+    resolve_spec,
+    sanitize_shardings,
+    shard_by_rules,
+)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # single host device reshaped into a logical (1,1) mesh is enough to
+    # exercise the rule engine; axis sizes matter only via divisibility,
+    # covered by resolve_spec tests with fake meshes below
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+class FakeMesh:
+    """Duck-typed mesh for divisibility tests without real devices."""
+
+    def __init__(self, sizes):
+        self._sizes = dict(sizes)
+
+    @property
+    def axis_names(self):
+        return tuple(self._sizes)
+
+    @property
+    def shape(self):
+        return dict(self._sizes)
+
+
+def test_resolve_spec_exact_divisibility():
+    m = FakeMesh({"pod": 2, "data": 16, "model": 16})
+    # divisible: kept
+    assert resolve_spec(m, ("model", None), (32, 7)) == P("model", None)
+    # not divisible by the tuple, but by a prefix
+    spec = resolve_spec(m, (("pod", "data", "model"), None), (64, 5))
+    assert spec == P(("pod", "data"), None)  # 64 % 512 != 0, 64 % 32 == 0
+    # prime dimension: replicated
+    assert resolve_spec(m, ("model",), (122753,)) == P(None)
+    # missing axis name: dropped
+    assert resolve_spec(m, ("nonexistent",), (16,)) == P(None)
+
+
+def test_resolve_spec_single_axis_fallback():
+    m = FakeMesh({"data": 16, "model": 16})
+    # 48 % 256 != 0 and 48 % 16 == 0 -> falls back to one axis
+    spec = resolve_spec(m, (("data", "model"),), (48,))
+    assert spec == P("data")
+
+
+def test_lm_rules_cover_transformer_params(mesh):
+    from repro.configs.registry import get_bundle
+
+    b = get_bundle("granite-3-2b", reduced=True)
+    shapes = jax.eval_shape(b.init, jax.random.PRNGKey(0))
+    shard = shard_by_rules(shapes, mesh, LM_RULES)
+    flat, _ = jax.tree_util.tree_flatten(shard)
+    assert all(isinstance(s, NamedSharding) for s in flat)
+
+
+def test_sanitize_pads_short_specs(mesh):
+    # a spec with fewer entries than the rank must be right-padded, and
+    # sanitize must return a legal NamedSharding for any input
+    sds = jax.ShapeDtypeStruct((4, 8, 3), jnp.float32)
+    short = NamedSharding(mesh, P("data"))
+    fixed = sanitize_shardings(short, sds, mesh)
+    assert len(tuple(fixed.spec)) == 3
+    # degradation logic itself is covered via FakeMesh in
+    # test_resolve_spec_exact_divisibility (needs axis sizes > 1)
+
+
+def test_sanitize_preserves_legal_shardings(mesh):
+    sds = jax.ShapeDtypeStruct((16, 8), jnp.float32)
+    good = NamedSharding(mesh, P("data", None))
+    fixed = sanitize_shardings(good, sds, mesh)
+    assert fixed.spec == P("data", None)  # 16 % 1 == 0 on the host mesh
+
+
+def test_batch_spec_uses_available_axes(mesh):
+    assert batch_spec(mesh)[0] == "data"

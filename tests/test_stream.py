@@ -1,0 +1,158 @@
+"""Stream lifecycle invariants (paper sections 4, 5, Fig. 8)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.io_sim import BlockDevice
+from repro.core.strategies import StrategyConfig
+from repro.core.stream import CH, EM, PART, S, SR0, StreamManager
+
+
+def mk(cfg_name="set1", cluster=1024, **kw):
+    cfg = getattr(StrategyConfig, cfg_name)(cluster_size=cluster, **kw)
+    dev = BlockDevice(cluster_size=cluster)
+    mgr = StreamManager(cfg, dev, n_groups=2, fl_area_clusters=8)
+    return cfg, dev, mgr
+
+
+def feed(mgr, sid, chunks):
+    st_ = mgr.streams[sid]
+    for c in chunks:
+        mgr.append_stream(sid, c)
+    return st_
+
+
+def test_lifecycle_set1_em_part_s():
+    cfg, dev, mgr = mk("set1")
+    mgr.begin_phase(0)
+    sid = mgr.new_stream(0)
+    s = feed(mgr, sid, [b"x" * 32])
+    assert s.state == EM
+    s = feed(mgr, sid, [b"x" * 100])
+    assert s.state == PART
+    s = feed(mgr, sid, [b"x" * 300])
+    assert s.state == PART and s.part_size >= 432
+    s = feed(mgr, sid, [b"x" * 600])  # > cluster/2 = 512
+    assert s.state == S
+    mgr.end_phase()
+    assert s.total_bytes == 32 + 100 + 300 + 600
+
+
+def test_lifecycle_set2_em_sr_ch_s():
+    cfg, dev, mgr = mk("set2", chain_limit=3)
+    mgr.begin_phase(0)
+    sid = mgr.new_stream(0)
+    s = feed(mgr, sid, [b"a" * 64])
+    assert s.state == EM
+    s = feed(mgr, sid, [b"a" * 200])
+    assert s.state == SR0 and s.sr_bytes == 264
+    s = feed(mgr, sid, [b"a" * 1000])  # > cluster: cluster states
+    assert s.state == CH
+    mgr.end_phase()
+    # SR invariant: every chain byte is in full clusters; tail in SR
+    assert s.segment_bytes() + s.sr_bytes == s.total_bytes
+    assert s.sr_bytes <= cfg.cluster_size
+
+
+def test_chain_limit_conversion():
+    cfg, dev, mgr = mk("set2", chain_limit=3)
+    sid = None
+    s = None
+    # append across many phases so the chain grows one segment per phase
+    for phase in range(8):
+        mgr.begin_phase(0)
+        if sid is None:
+            sid = mgr.new_stream(0)
+        feed(mgr, sid, [b"z" * 900])
+        s = mgr.streams[sid]
+        assert len(s.segments) <= s.chain_limit, "chain limit violated"
+        mgr.end_phase()
+    # the chain must have converted to S at least once
+    assert mgr.transitions.get((CH, S), 0) >= 1
+
+
+def test_data_accounting_invariant():
+    for setname in ("set1", "set2"):
+        cfg, dev, mgr = mk(setname)
+        rng = np.random.RandomState(0)
+        mgr.begin_phase(0)
+        sids = [mgr.new_stream(0) for _ in range(10)]
+        for _ in range(50):
+            sid = sids[rng.randint(len(sids))]
+            feed(mgr, sid, [bytes(rng.randint(1, 400))])
+        mgr.end_phase()
+        for sid in sids:
+            s = mgr.streams[sid]
+            if s.state in (EM, SR0, PART):
+                assert not s.segments
+            else:
+                tail = s.sr_bytes if s.has_sr else (
+                    s.fl_bytes if s.has_fl else 0
+                )
+                assert s.segment_bytes() + tail == s.total_bytes
+
+
+def test_read_stream_returns_exact_bytes():
+    cfg, dev, mgr = mk("set2")
+    mgr.begin_phase(0)
+    sid = mgr.new_stream(0)
+    payload = b"".join(bytes([i % 251]) * 397 for i in range(20))
+    feed(mgr, sid, [payload[i : i + 397] for i in range(0, len(payload), 397)])
+    mgr.end_phase()
+    assert mgr.read_stream(sid) == payload
+
+
+def test_segment_contiguity():
+    """S segments must be physically contiguous (one read op each)."""
+    cfg, dev, mgr = mk("set1")
+    mgr.begin_phase(0)
+    sid = mgr.new_stream(0)
+    feed(mgr, sid, [b"q" * 4096] * 8)
+    mgr.end_phase()
+    s = mgr.streams[sid]
+    assert s.state == S
+    before = dev.stats.read_ops
+    mgr.read_stream(sid)
+    # ops == number of segments (+1 if FL tail)
+    expect = len(s.segments) + (1 if (s.has_fl and s.fl_bytes) else 0)
+    assert dev.stats.read_ops - before == expect
+
+
+def test_sr_no_tail_reads_on_update():
+    """The SR strategy's whole point: updating never re-reads tail clusters."""
+    results = {}
+    for setname in ("set1", "set2"):
+        cfg, dev, mgr = mk(setname, cluster=1024)
+        # disable FL coverage so set1 shows the raw read-modify-write cost
+        mgr.fl_area_clusters = 0
+        sid = None
+        for phase in range(6):
+            mgr.begin_phase(0)
+            if sid is None:
+                sid = mgr.new_stream(0)
+            feed(mgr, sid, [b"m" * 700])
+            mgr.end_phase()
+        results[setname] = dev.stats.read_ops
+    assert results["set2"] < results["set1"], results
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.lists(st.integers(min_value=1, max_value=3000), min_size=1, max_size=40),
+    st.sampled_from(["set1", "set2", "set3"]),
+)
+def test_property_total_bytes_preserved(sizes, setname):
+    cfg, dev, mgr = mk(setname)
+    mgr.begin_phase(1)
+    sid = mgr.new_stream(1)
+    total = 0
+    for i, n in enumerate(sizes):
+        feed(mgr, sid, [bytes([i % 256]) * n])
+        total += n
+    mgr.end_phase()
+    s = mgr.streams[sid]
+    assert s.total_bytes == total
+    assert len(mgr.read_stream(sid)) == total
+    if s.state == CH:
+        assert len(s.segments) <= s.chain_limit

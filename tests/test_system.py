@@ -1,0 +1,98 @@
+"""End-to-end system test: build, update in place, search, verify trends.
+
+This is the whole paper in one test: a two-part collection is indexed
+(part 2 as an in-place update), all five index kinds answer queries
+consistently with an ordinary-index baseline, and the strategy sets
+improve construction I/O in the directions Tables 2 and 3 claim.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.lexicon import FREQUENT, OTHER, STOP, make_lexicon
+from repro.core.proximity import ProximityEngine
+from repro.core.strategies import StrategyConfig
+from repro.core.text_index import INDEX_NAMES, IndexSetConfig, TextIndexSet
+from repro.data.corpus import generate_part
+
+
+def _build(setname, lex, parts, cluster=2048):
+    cfg = IndexSetConfig(
+        strategy=getattr(StrategyConfig, setname)(cluster_size=cluster),
+        build_ordinary_all=False,
+        fl_area_clusters=128,
+    )
+    ts = TextIndexSet(cfg, lex, seed=0)
+    doc0 = 0
+    for toks, offs in parts:
+        ts.add_documents(toks, offs, doc0)
+        doc0 += offs.shape[0] - 1
+    return ts
+
+
+@pytest.fixture(scope="module")
+def world():
+    lex = make_lexicon(n_words=6000, n_lemmas=2500, n_stop=25, n_frequent=150, seed=21)
+    parts = [
+        generate_part(lex, n_docs=120, avg_doc_len=200, doc0=0, seed=31),
+        generate_part(lex, n_docs=120, avg_doc_len=200, doc0=120, seed=32),
+    ]
+    return lex, parts
+
+
+def test_end_to_end_strategy_trends(world):
+    lex, parts = world
+    per_set = {}
+    for s in ("set1", "set2", "set3"):
+        ts = _build(s, lex, parts)
+        rows = ts.table_rows()
+        per_set[s] = {
+            "bytes": sum(r["total_bytes"] for r in rows.values()),
+            "write_ops": sum(r["write_ops"] for r in rows.values()),
+            "ops": sum(r["total_ops"] for r in rows.values()),
+        }
+    # Table 2 trend: CH+SR reduce total construction bytes
+    assert per_set["set2"]["bytes"] < per_set["set1"]["bytes"], per_set
+    # Table 3 trend: DS reduces operation counts further
+    assert per_set["set3"]["write_ops"] < per_set["set2"]["write_ops"], per_set
+
+
+def test_all_index_kinds_answer(world):
+    lex, parts = world
+    cfg = IndexSetConfig(
+        strategy=StrategyConfig.set3(cluster_size=2048),
+        build_ordinary_all=True,
+        fl_area_clusters=128,
+    )
+    ts = TextIndexSet(cfg, lex, seed=0)
+    doc0 = 0
+    for toks, offs in parts:
+        ts.add_documents(toks, offs, doc0)
+        doc0 += offs.shape[0] - 1
+    eng = ProximityEngine(ts, window=3)
+
+    def words_of(cls, n):
+        out = []
+        for w in range(lex.n_words):
+            l = lex.lemma1[w]
+            if l >= 0 and lex.lemma_class[l] == cls:
+                out.append(int(w))
+                if len(out) == n:
+                    break
+        return out
+
+    stop, freq, other = words_of(STOP, 5), words_of(FREQUENT, 5), words_of(OTHER, 5)
+    used_paths = set()
+    for q in (
+        [stop[0], stop[1]],
+        [stop[1], stop[2], stop[3]],
+        [freq[0], other[0]],
+        [freq[1], freq[2]],
+        [other[0], other[1]],
+        [stop[0], other[2]],
+    ):
+        r = eng.search(q)
+        rb = eng.search_ordinary(q)
+        assert set(r.docs.tolist()) == set(rb.docs.tolist()), q
+        used_paths.add(r.lookups[0][0])
+    assert {"stopseq", "wv_kk", "known"} <= used_paths

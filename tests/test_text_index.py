@@ -1,0 +1,156 @@
+"""Text index kinds + proximity engine (paper section 6)."""
+
+import numpy as np
+import pytest
+
+from repro.core.lexicon import FREQUENT, OTHER, STOP, make_lexicon
+from repro.core.proximity import (
+    ProximityEngine,
+    jax_window_join,
+    numpy_phrase_join,
+    numpy_window_join,
+)
+from repro.core.strategies import StrategyConfig
+from repro.core.text_index import INDEX_NAMES, IndexSetConfig, TextIndexSet
+from repro.data.corpus import extract_postings, generate_part
+
+
+@pytest.fixture(scope="module")
+def small_world():
+    lex = make_lexicon(
+        n_words=8000, n_lemmas=3500, n_stop=30, n_frequent=200, seed=11
+    )
+    t1, o1 = generate_part(lex, n_docs=150, avg_doc_len=250, doc0=0, seed=1)
+    t2, o2 = generate_part(lex, n_docs=150, avg_doc_len=250, doc0=150, seed=2)
+    cfg = IndexSetConfig(
+        strategy=StrategyConfig.set2(cluster_size=2048),
+        build_ordinary_all=True,
+        fl_area_clusters=128,
+    )
+    ts = TextIndexSet(cfg, lex, seed=0)
+    ts.add_documents(t1, o1, 0)
+    ts.add_documents(t2, o2, 150)
+    return lex, ts
+
+
+def words_of_class(lex, cls, n=8):
+    out = []
+    for w in range(lex.n_words):
+        l = lex.lemma1[w]
+        if l >= 0 and lex.lemma_class[l] == cls:
+            out.append(int(w))
+            if len(out) == n:
+                break
+    return out
+
+
+def test_extraction_covers_all_tokens():
+    lex = make_lexicon(n_words=2000, n_lemmas=900, n_stop=10, n_frequent=50, seed=3)
+    toks, offs = generate_part(lex, n_docs=20, avg_doc_len=60, doc0=0, seed=5)
+    maps = extract_postings(lex, toks, offs, 0)
+    l1, l2 = lex.lemmatize(toks)
+    known = lex.is_known(toks)
+    n_readings = toks.shape[0] + int((l2 >= 0).sum())
+    total_ord = sum(len(v) for v in maps["ordinary_all"].values())
+    assert total_ord == n_readings
+    # the known index covers every reading of every known token
+    total_known = sum(len(v) for v in maps["known"].values())
+    assert total_known == int(known.sum()) + int((l2 >= 0).sum())
+    primary = sum((v.shape[0] for v in maps["unknown"].values()), 0)
+    assert primary == int((~known).sum())
+
+
+def test_wv_postings_are_proximity_pairs():
+    lex = make_lexicon(n_words=2000, n_lemmas=900, n_stop=10, n_frequent=80, seed=4)
+    toks, offs = generate_part(lex, n_docs=10, avg_doc_len=80, doc0=0, seed=6)
+    maps = extract_postings(lex, toks, offs, 0, max_distance=2)
+    l1, l2 = lex.lemmatize(toks)
+
+    def readings(i):
+        r = [int(l1[i])]
+        if l2[i] >= 0:
+            r.append(int(l2[i]))
+        return r
+
+    # verify a handful of keys by brute force (both lemma readings count)
+    checked = 0
+    for key, posts in list(maps["wv_kk"].items())[:20]:
+        w, v = key >> 32, key & ((1 << 32) - 1)
+        for doc, pos in posts[:5]:
+            start = offs[doc]
+            assert w in readings(start + pos)
+            near = [
+                r
+                for d in range(-2, 3)
+                if d != 0 and 0 <= pos + d < offs[doc + 1] - offs[doc]
+                for r in readings(start + pos + d)
+            ]
+            assert v in near
+            checked += 1
+    assert checked > 10
+
+
+def test_paths_agree_with_ordinary_baseline(small_world):
+    lex, ts = small_world
+    eng = ProximityEngine(ts, window=3)
+    stop = words_of_class(lex, STOP)
+    freq = words_of_class(lex, FREQUENT)
+    other = words_of_class(lex, OTHER)
+    queries = [
+        [stop[0], stop[1]],
+        [stop[2], stop[3], stop[4]],
+        [freq[0], other[0]],
+        [freq[1], freq[2]],
+        [other[1], other[2]],
+        [other[3], stop[0]],
+    ]
+    for q in queries:
+        r1 = eng.search(q)
+        r2 = eng.search_ordinary(q)
+        assert set(r1.docs.tolist()) == set(r2.docs.tolist()), q
+
+
+def test_additional_indexes_scan_less(small_world):
+    """Paper 6.1: queries with frequent words touch orders of magnitude
+    fewer postings through the additional indexes."""
+    lex, ts = small_world
+    eng = ProximityEngine(ts, window=3)
+    stop = words_of_class(lex, STOP)
+    freq = words_of_class(lex, FREQUENT)
+    other = words_of_class(lex, OTHER)
+    wins = []
+    for q in ([stop[0], stop[1]], [freq[0], other[0]], [freq[1], freq[2]]):
+        r1 = eng.search(q)
+        r2 = eng.search_ordinary(q)
+        wins.append(r2.postings_scanned / max(1, r1.postings_scanned))
+    assert min(wins) > 3 and max(wins) > 20, wins
+
+
+def test_window_join_implementations_agree():
+    rng = np.random.RandomState(0)
+    a = np.stack([np.sort(rng.randint(0, 50, 300)), rng.randint(0, 400, 300)], 1)
+    b = np.stack([np.sort(rng.randint(0, 50, 200)), rng.randint(0, 400, 200)], 1)
+    a = a[np.lexsort((a[:, 1], a[:, 0]))]
+    b = b[np.lexsort((b[:, 1], b[:, 0]))]
+    for w in (0, 1, 3, 10):
+        ref = numpy_window_join(a, b, w)
+        jx = jax_window_join(a, b, w)
+        assert ref.shape == jx.shape and (ref == jx).all()
+
+
+def test_phrase_join():
+    a = np.asarray([[1, 5], [1, 9], [2, 0]], np.int64)
+    b = np.asarray([[1, 6], [2, 2], [3, 1]], np.int64)
+    got = numpy_phrase_join(a, b, 1)
+    assert (got == np.asarray([[1, 5]], np.int64)).all()
+
+
+def test_build_io_isolated_from_search_io(small_world):
+    lex, ts = small_world
+    build_before = {n: s.total_ops for n, s in ts.build_io().items()}
+    eng = ProximityEngine(ts, window=3)
+    freq = words_of_class(lex, FREQUENT)
+    other = words_of_class(lex, OTHER)
+    eng.search([freq[0], other[0]])
+    build_after = {n: s.total_ops for n, s in ts.build_io().items()}
+    assert build_before == build_after, "search charged to the build device"
