@@ -8,6 +8,7 @@ Benches:
     chain_sweep   — section 5.7.3 chain-limit trade-off
     lifecycle     — Fig. 8 stream state distribution
     search_speed  — section 6.1 additional-index speedups
+    search_batched — batched SearchService qps vs per-query loop
     paged_kv      — TPU adaptation: paged KV allocator behaviour
     kernels       — Pallas kernel microbenches (interpret mode) vs refs
 """
@@ -63,6 +64,19 @@ def _bench_search_speed(scale):
     ]
 
 
+def _bench_search_batched(scale):
+    from benchmarks import search_speed
+
+    rows = search_speed.run_batched(min(scale, 0.5))
+    ok = all(r["identical"] for r in rows)
+    best = max(r["batch_speedup"] for r in rows)
+    ok &= best > 1.0
+    return rows, [
+        f"{'PASS' if ok else 'FAIL'}  batched SearchService beats the "
+        f"per-query loop (best {best:.2f}x) with identical results"
+    ]
+
+
 def _bench_paged_kv(scale):
     from benchmarks import paged_kv_bench
 
@@ -80,6 +94,7 @@ BENCHES = {
     "chain_sweep": _bench_chain_sweep,
     "lifecycle": _bench_lifecycle,
     "search_speed": _bench_search_speed,
+    "search_batched": _bench_search_batched,
     "paged_kv": _bench_paged_kv,
     "kernels": _bench_kernels,
 }

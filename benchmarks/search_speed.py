@@ -4,6 +4,11 @@ The paper's motivating claim: proximity queries containing frequently used
 words are orders of magnitude cheaper through the (w,v) and stop-sequence
 indexes than through the ordinary inverted index.  We measure postings
 scanned, search I/O ops, and wall time per query class.
+
+``--batched`` adds the multi-user serving view: the same mixed query
+stream through ``SearchService.search_batch`` (planned, deduplicated,
+JAX-bucketed joins) vs a per-query ``ProximityEngine.search`` loop,
+reported as queries/sec per join backend.
 """
 
 from __future__ import annotations
@@ -16,6 +21,7 @@ import numpy as np
 from benchmarks.common import World, build_index_set, make_world
 from repro.core.lexicon import FREQUENT, OTHER, STOP
 from repro.core.proximity import ProximityEngine
+from repro.search import SearchService
 
 
 def _words_of_class(lex, cls, n, rng):
@@ -76,6 +82,99 @@ def run(scale: float = 0.5, world: World = None) -> List[Dict]:
     return rows
 
 
+def _mixed_stream(lex, n_queries: int, rng) -> List[List[int]]:
+    """A mixed multi-user query stream over all three planner routes, with
+    the repeat structure of real traffic (hot keys recur across users)."""
+    stop = _words_of_class(lex, STOP, 12, rng)
+    freq = _words_of_class(lex, FREQUENT, 12, rng)
+    other = _words_of_class(lex, OTHER, 12, rng)
+    qs: List[List[int]] = []
+    while len(qs) < n_queries:
+        kind = len(qs) % 4
+        if kind == 0:
+            qs.append([rng.choice(stop), rng.choice(stop)])
+        elif kind == 1:
+            qs.append([rng.choice(stop), rng.choice(stop), rng.choice(stop)])
+        elif kind == 2:
+            qs.append([rng.choice(freq), rng.choice(other)])
+        else:
+            qs.append([rng.choice(other), rng.choice(other)])
+    return [[int(w) for w in q] for q in qs]
+
+
+def run_batched(
+    scale: float = 0.5,
+    world: World = None,
+    n_queries: int = 64,
+    backends=("numpy", "jax", "pallas"),
+    repeats: int = 3,
+) -> List[Dict]:
+    """Per-query loop vs ``search_batch`` on the same query stream."""
+    if n_queries < 1:
+        raise ValueError(f"--queries must be >= 1, got {n_queries}")
+    world = world or make_world(scale)
+    ts = build_index_set(world, "set2", build_ordinary_all=False)
+    lex = world.lexicon
+    queries = _mixed_stream(lex, n_queries, np.random.RandomState(7))
+
+    rows: List[Dict] = []
+    for backend in backends:
+        eng = ProximityEngine(ts, window=3, join=backend)
+        svc = SearchService(ts, window=3, backend=backend)
+        # warm both paths: jit compilation + posting cache fill, so the
+        # timed section measures steady-state serving throughput
+        loop_ref = [eng.search(q) for q in queries]
+        batch_ref = svc.search_batch(queries)
+        identical = all(
+            np.array_equal(ref.docs, got.docs)
+            and np.array_equal(ref.witnesses, got.witnesses)
+            for ref, got in zip(loop_ref, batch_ref)
+        )
+        t_loop = min(
+            _timed(lambda: [eng.search(q) for q in queries])
+            for _ in range(repeats)
+        )
+        t_batch = min(
+            _timed(lambda: svc.search_batch(queries)) for _ in range(repeats)
+        )
+        rows.append(
+            {
+                "bench": "search_speed_batched",
+                "backend": backend,
+                "queries": len(queries),
+                "loop_qps": len(queries) / t_loop,
+                "batch_qps": len(queries) / t_batch,
+                "batch_speedup": t_loop / t_batch,
+                "identical": identical,
+            }
+        )
+    return rows
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def main_batched(scale: float = 0.5, n_queries: int = 64) -> None:
+    rows = run_batched(scale, n_queries=n_queries)
+    print(f"{'backend':8s} {'queries':>8s} {'loop_qps':>10s} {'batch_qps':>10s} "
+          f"{'speedup':>8s}")
+    for r in rows:
+        print(
+            f"{r['backend']:8s} {r['queries']:>8d} {r['loop_qps']:>10,.0f} "
+            f"{r['batch_qps']:>10,.0f} {r['batch_speedup']:>8.2f}"
+        )
+    assert all(r["identical"] for r in rows), (
+        "search_batch diverged from the per-query loop"
+    )
+    assert max(r["batch_speedup"] for r in rows) > 1.0, (
+        "batched execution should beat the per-query loop"
+    )
+    print("PASS  search_batch matches the per-query loop and is faster")
+
+
 def main(scale: float = 0.5) -> None:
     rows = run(scale)
     print(
@@ -95,4 +194,15 @@ def main(scale: float = 0.5) -> None:
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.5)
+    ap.add_argument("--batched", action="store_true",
+                    help="batched SearchService qps vs per-query loop")
+    ap.add_argument("--queries", type=int, default=64)
+    args = ap.parse_args()
+    if args.batched:
+        main_batched(args.scale, n_queries=args.queries)
+    else:
+        main(args.scale)

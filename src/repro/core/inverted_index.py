@@ -259,10 +259,14 @@ class InvertedIndex:
         self.n_extractions += 1
 
     # ------------------------------------------------------------- queries --
-    def lookup(self, key: Hashable) -> np.ndarray:
-        """Return the (N, 2) posting list for a key, charging search I/O."""
+    def lookup(self, key: Hashable, device: Optional[BlockDevice] = None) -> np.ndarray:
+        """Return the (N, 2) posting list for a key.
+
+        I/O is charged to ``device`` when given (how readers separate
+        search accounting from the build device — see
+        ``repro.search.reader``); otherwise to the build device."""
         e = self.dict.get(key)
-        dev = self.mgr.device
+        dev = device if device is not None else self.mgr.device
         if e is None:
             dev.read_small(ENTRY_FIXED_BYTES)
             return _EMPTY
@@ -270,7 +274,7 @@ class InvertedIndex:
         if e.kind == K_EM:
             posts, _ = decode_postings(bytes(e.data))
             return posts
-        data = self.mgr.read_stream(e.sid)
+        data = self.mgr.read_stream(e.sid, device=dev)
         if e.kind == K_TAG:
             posts, tags = decode_postings(data, tagged=True, zigzag=True)
             mine = posts[tags == e.tag]

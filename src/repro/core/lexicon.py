@@ -68,6 +68,13 @@ class Lexicon:
         out[known] = self.lemma_class[lemma_ids[known]]
         return out
 
+    def classify_words(self, word_ids: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """(primary lemma, class) per word in one vectorized pass — the
+        query planner's batch classification (no per-word round trips)."""
+        word_ids = np.asarray(word_ids, dtype=np.int64)
+        l1, _ = self.lemmatize(word_ids)
+        return l1, self.classes_of(l1)
+
 
 def make_lexicon(
     n_words: int = 60_000,

@@ -4,165 +4,75 @@ Query model: a list of word ids; the answer is the set of documents where
 the queried words occur near each other (within ``window`` positions),
 with the witness positions.
 
+This module is the backward-compatible single-query surface.  The actual
+query processor is the Reader → Planner → Executor stack in
+:mod:`repro.search` (see DESIGN_SEARCH.md): :class:`ProximityEngine` is a
+thin wrapper that plans and executes each query through a
+:class:`~repro.search.service.SearchService`, and the join functions
+(``numpy_window_join``, ``jax_window_join``, ...) are re-exported from
+:mod:`repro.search.join` for existing imports.
+
 The planner mirrors the paper's three word classes:
 
   * two stop lemmas            → one ``stopseq`` lookup (the whole
     co-occurrence is precomputed in the index key),
   * FREQUENT lemma + any other → one extended ``(w, v)`` lookup,
   * otherwise                  → ordinary-index lookups + position join.
-
-The position join has three interchangeable implementations:
-``numpy_window_join`` (oracle), ``jax_window_join`` (jit-compiled,
-padded), and the Pallas kernel in ``repro.kernels.intersect`` (TPU tiles).
-The paper's claim reproduced by ``benchmarks/search_speed.py`` is that the
-planner's additional-index path touches orders of magnitude less data than
-evaluating the same query through the ordinary index alone.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import List, Optional, Tuple
+from typing import List
 
 import numpy as np
 
-import jax
-import jax.numpy as jnp
-
-from repro.core.lexicon import FREQUENT, Lexicon, OTHER, STOP
-from repro.data.corpus import PAIR_SHIFT, SEQ2_FLAG, SEQ_SHIFT
+from repro.core.lexicon import STOP
 from repro.core.text_index import TextIndexSet
+from repro.search.join import (
+    JOIN_BACKENDS,
+    jax_window_join,
+    numpy_phrase_join,
+    numpy_window_join,
+    pallas_window_join,
+)
+from repro.search.plan import Query, QueryResult
+from repro.search.service import SearchService
 
-
-# ------------------------------------------------------------ position join --
-def numpy_window_join(
-    a: np.ndarray, b: np.ndarray, window: int
-) -> np.ndarray:
-    """Rows of ``a`` having a row of ``b`` with the same doc and
-    |pos_a - pos_b| <= window.  Both (N,2), sorted by (doc, pos)."""
-    if a.size == 0 or b.size == 0:
-        return np.zeros((0, 2), dtype=np.int64)
-    scale = np.int64(1) << 32
-    bkey = b[:, 0] * scale + b[:, 1]
-    lo = np.searchsorted(bkey, a[:, 0] * scale + (a[:, 1] - window))
-    hi = np.searchsorted(bkey, a[:, 0] * scale + (a[:, 1] + window), side="right")
-    return a[hi > lo]
-
-
-def numpy_phrase_join(a: np.ndarray, b: np.ndarray, dist: int) -> np.ndarray:
-    """Rows of ``a`` where ``b`` has the same doc at exactly pos_a + dist
-    (ordered adjacency — the stop-sequence index semantics)."""
-    if a.size == 0 or b.size == 0:
-        return np.zeros((0, 2), dtype=np.int64)
-    scale = np.int64(1) << 32
-    bkey = b[:, 0] * scale + b[:, 1]
-    want = a[:, 0] * scale + (a[:, 1] + dist)
-    i = np.searchsorted(bkey, want)
-    i = np.minimum(i, bkey.shape[0] - 1)
-    return a[bkey[i] == want]
-
-
-@jax.jit
-def _jax_window_join(a: jnp.ndarray, b: jnp.ndarray, window: jnp.ndarray) -> jnp.ndarray:
-    scale = jnp.int64(1) << 32 if a.dtype == jnp.int64 else jnp.int32(1) << 24
-    akey = a[:, 0] * scale + a[:, 1]
-    bkey = b[:, 0] * scale + b[:, 1]
-    lo = jnp.searchsorted(bkey, akey - window)
-    hi = jnp.searchsorted(bkey, akey + window, side="right")
-    return hi > lo
-
-
-def jax_window_join(a: np.ndarray, b: np.ndarray, window: int) -> np.ndarray:
-    """JAX path: pad to the next power of two, join, unpad."""
-    if a.size == 0 or b.size == 0:
-        return np.zeros((0, 2), dtype=np.int64)
-
-    def pad(x: np.ndarray) -> np.ndarray:
-        n = 1
-        while n < x.shape[0]:
-            n <<= 1
-        fill = np.full((n - x.shape[0], 2), np.iinfo(np.int32).max // 2, np.int64)
-        return np.concatenate([x, fill], axis=0)
-
-    pa, pb = pad(a), pad(b)
-    mask = np.asarray(_jax_window_join(jnp.asarray(pa), jnp.asarray(pb),
-                                       jnp.int64(window)))
-    return pa[mask & (np.arange(pa.shape[0]) < a.shape[0])]
-
-
-# ---------------------------------------------------------------- the engine --
-@dataclasses.dataclass
-class QueryResult:
-    docs: np.ndarray            # matched doc ids (unique, sorted)
-    witnesses: np.ndarray       # (N,2) witness postings
-    lookups: List[Tuple[str, int]]  # (index, key) lookups performed
-    postings_scanned: int       # total postings decoded
+__all__ = [
+    "ProximityEngine",
+    "QueryResult",
+    "jax_window_join",
+    "numpy_phrase_join",
+    "numpy_window_join",
+    "pallas_window_join",
+]
 
 
 class ProximityEngine:
+    """Single-query facade over :class:`~repro.search.SearchService`.
+
+    ``join`` keeps the historical signature: a callable
+    ``join(a, b, window)`` or one of the named backends; it is forwarded
+    to the service as the join backend for the ordinary route.
+    """
+
     def __init__(self, index_set: TextIndexSet, window: int = 3,
-                 join=numpy_window_join):
+                 join=numpy_window_join, cache_bytes: int = 8 << 20):
         self.idx = index_set
         self.lex = index_set.lexicon
         self.window = min(window, index_set.cfg.max_distance)
         self.join = join
-
-    # -- planning -------------------------------------------------------------
-    def _classify(self, word: int) -> Tuple[int, int]:
-        """(lemma, class) for one query word; class OTHER for unknown."""
-        l1, _ = self.lex.lemmatize(np.asarray([word], dtype=np.int64))
-        lemma = int(l1[0])
-        cls = int(self.lex.classes_of(np.asarray([lemma]))[0])
-        return lemma, cls
+        backend = {id(f): name for name, f in JOIN_BACKENDS.items()}.get(
+            id(join), join
+        )
+        self.service = SearchService(
+            index_set, window=window, backend=backend, cache_bytes=cache_bytes
+        )
 
     def search(self, words: List[int]) -> QueryResult:
         """Proximity search via the additional indexes (the paper's path)."""
         assert 2 <= len(words) <= 3, "benchmark queries are 2-3 words"
-        lemmas_cls = [self._classify(w) for w in words]
-        lemmas = [lc[0] for lc in lemmas_cls]
-        classes = [lc[1] for lc in lemmas_cls]
-
-        # all-stop: one stop-sequence lookup
-        if all(c == STOP for c in classes):
-            if len(lemmas) == 2:
-                key = int(SEQ2_FLAG | (lemmas[0] << SEQ_SHIFT) | lemmas[1])
-            else:
-                key = int(
-                    (lemmas[0] << (2 * SEQ_SHIFT))
-                    | (lemmas[1] << SEQ_SHIFT)
-                    | lemmas[2]
-                )
-            posts = self.idx.lookup("stopseq", key)
-            return QueryResult(
-                np.unique(posts[:, 0]), posts,
-                [("stopseq", key)], posts.shape[0],
-            )
-
-        # a FREQUENT lemma pairs through the extended index
-        freq_i = next((i for i, c in enumerate(classes) if c == FREQUENT), None)
-        if freq_i is not None and len(words) == 2:
-            w = lemmas[freq_i]
-            vi = 1 - freq_i
-            v = lemmas[vi]
-            key = int((w << PAIR_SHIFT) | v)
-            name = "wv_kk" if v < self.lex.n_lemmas else "wv_ku"
-            posts = self.idx.lookup(name, key)
-            return QueryResult(
-                np.unique(posts[:, 0]), posts, [(name, key)], posts.shape[0],
-            )
-
-        # general: ordinary lookups + window join
-        lists, lookups, scanned = [], [], 0
-        for lemma, cls in lemmas_cls:
-            name = "unknown" if lemma >= self.lex.n_lemmas else "known"
-            posts = self.idx.lookup(name, lemma)
-            lists.append(posts)
-            lookups.append((name, lemma))
-            scanned += posts.shape[0]
-        acc = lists[0]
-        for nxt in lists[1:]:
-            acc = self.join(acc, nxt, self.window)
-        return QueryResult(np.unique(acc[:, 0]), acc, lookups, scanned)
+        return self.service.search(words)
 
     def search_ordinary(self, words: List[int]) -> QueryResult:
         """Baseline: the same query through the ordinary-all index only.
@@ -171,12 +81,14 @@ class ProximityEngine:
         assert "ordinary_all" in self.idx.indexes, (
             "build TextIndexSet with build_ordinary_all=True for the baseline"
         )
-        classes = [self._classify(w)[1] for w in words]
-        phrase = all(c == STOP for c in classes)
+        lemmas, classes = self.lex.classify_words(
+            np.asarray(words, dtype=np.int64)
+        )
+        phrase = all(int(c) == STOP for c in classes)
+        join = self.join if callable(self.join) else JOIN_BACKENDS[self.join]
         lists, lookups, scanned = [], [], 0
-        for w in words:
-            l1, _ = self.lex.lemmatize(np.asarray([w], dtype=np.int64))
-            lemma = int(l1[0])
+        for lemma in lemmas:
+            lemma = int(lemma)
             posts = self.idx.lookup("ordinary_all", lemma)
             lists.append(posts)
             lookups.append(("ordinary_all", lemma))
@@ -186,5 +98,5 @@ class ProximityEngine:
             if phrase:
                 acc = numpy_phrase_join(acc, nxt, k)
             else:
-                acc = self.join(acc, nxt, self.window)
+                acc = join(acc, nxt, self.window)
         return QueryResult(np.unique(acc[:, 0]), acc, lookups, scanned)

@@ -43,7 +43,6 @@ against a posting-level oracle in the tests.
 
 from __future__ import annotations
 
-import contextlib
 import dataclasses
 from typing import Dict, Iterable, List, Optional, Tuple
 
@@ -159,15 +158,6 @@ class StreamManager:
 
     def seg_cap(self, seg: Segment) -> int:
         return seg.nclusters * self.cluster_size - LINK_BYTES
-
-    @contextlib.contextmanager
-    def io_device(self, device: BlockDevice):
-        """Temporarily redirect I/O charges (e.g. to a search-stats device)."""
-        prev, self.device = self.device, device
-        try:
-            yield
-        finally:
-            self.device = prev
 
     def new_stream(self, group: int, tagged: bool = False) -> int:
         sid = self._next_sid
@@ -651,26 +641,31 @@ class StreamManager:
         return False
 
     # ------------------------------------------------------------- reading --
-    def read_stream(self, sid: int) -> bytes:
+    def read_stream(self, sid: int, device: Optional[BlockDevice] = None) -> bytes:
         """Read a stream's full posting data, charging search I/O:
         one op per physically contiguous segment, one per PART cluster,
-        one small read for the SR record, one for the FL cluster."""
+        one small read for the SR record, one for the FL cluster.
+
+        ``device`` lets readers charge their own accounting device (the
+        reader/writer split in ``repro.search.reader``); the default is
+        the manager's build device."""
+        dev = device if device is not None else self.device
         st = self.streams[sid]
         if st.state == EM:
             return bytes(st.data)  # dictionary-resident: no extra device op
         if st.state == SR0:
-            self.device.read_small(_blocks(st.sr_bytes, self.cfg.sr_block))
+            dev.read_small(_blocks(st.sr_bytes, self.cfg.sr_block))
             return bytes(st.data)
         if st.state == PART:
-            self.device.read_clusters([st.part_cluster])
+            dev.read_clusters([st.part_cluster])
             return bytes(st.data)
         # CH / S
         for seg in st.segments:
-            self.device.read_clusters(seg.ids)
+            dev.read_clusters(seg.ids)
         if st.has_sr and st.sr_bytes:
-            self.device.read_small(_blocks(st.sr_bytes, self.cfg.sr_block))
+            dev.read_small(_blocks(st.sr_bytes, self.cfg.sr_block))
         if st.has_fl and st.fl_bytes:
-            self.device.read_sequential(self.cluster_size)  # FL cluster: one op
+            dev.read_sequential(self.cluster_size)  # FL cluster: one op
         return bytes(st.data)
 
     def read_ops_estimate(self, sid: int) -> int:

@@ -63,6 +63,7 @@ class TextIndexSet:
         )
         self.indexes: Dict[str, InvertedIndex] = {}
         self.search_devices: Dict[str, BlockDevice] = {}
+        self.dict_devices: Dict[str, BlockDevice] = {}
         s = cfg.strategy
         for name in names:
             if s.use_ds:
@@ -84,7 +85,6 @@ class TextIndexSet:
                 seed=seed,
                 dict_device=dict_dev,
             )
-            self.dict_devices = getattr(self, "dict_devices", {})
             self.dict_devices[name] = dict_dev
             self.search_devices[name] = BlockDevice(
                 cluster_size=s.cluster_size, name=f"{name}-search"
@@ -105,8 +105,14 @@ class TextIndexSet:
     def lookup(self, index_name: str, key: Hashable) -> np.ndarray:
         """Posting lookup charging I/O to the per-index *search* device."""
         index = self.indexes[index_name]
-        with index.mgr.io_device(self.search_devices[index_name]):
-            return index.lookup(key)
+        return index.lookup(key, device=self.search_devices[index_name])
+
+    def reader(self, cache_bytes: int = 8 << 20):
+        """Read-only snapshot view with a posting-list LRU cache (the
+        reader/planner/executor stack lives in :mod:`repro.search`)."""
+        from repro.search.reader import IndexSetReader
+
+        return IndexSetReader(self, cache_bytes=cache_bytes)
 
     # -------------------------------------------------------------- reports --
     def build_io(self) -> Dict[str, IOStats]:

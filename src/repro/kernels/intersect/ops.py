@@ -1,6 +1,8 @@
-"""Dispatch wrapper: pad to block multiples, run the intersect kernel."""
+"""Dispatch wrappers: pad to block multiples, run the intersect kernel."""
 
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -30,3 +32,22 @@ def intersect_sorted(a, b, bn: int = 1024, bm: int = 1024):
         ap, bp, bn=bn, bm=bm, interpret=not _on_tpu()
     )
     return mask[:N]
+
+
+def doc_member_mask(a_docs: np.ndarray, b_docs: np.ndarray) -> Optional[np.ndarray]:
+    """Host mask[i] = a_docs[i] occurs in b_docs, via the Pallas kernel.
+
+    The doc-level prefilter of the proximity search pallas backend
+    (``repro.search.join.pallas_window_join``).  ``a_docs`` must be sorted;
+    ``b_docs`` is deduplicated here.  Returns None when the doc ids do not
+    fit the kernel's int32 key width — callers fall back to a host join.
+    """
+    if a_docs.size == 0 or b_docs.size == 0:
+        return np.zeros(a_docs.shape, dtype=bool)
+    b_docs = np.unique(b_docs)
+    if int(a_docs[-1]) >= np.iinfo(np.int32).max or (
+        int(b_docs[-1]) >= np.iinfo(np.int32).max
+    ):
+        return None
+    mask = intersect_sorted(a_docs.astype(np.int32), b_docs.astype(np.int32))
+    return np.asarray(mask).astype(bool)

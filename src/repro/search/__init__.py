@@ -1,0 +1,68 @@
+"""Read-side query stack: Reader → Planner → Executor.
+
+Layering (DESIGN_SEARCH.md):
+
+  * :mod:`repro.search.reader`  — read-only index snapshots with their own
+    search-I/O accounting and a byte-budgeted posting-list LRU,
+  * :mod:`repro.search.plan`    — typed ``Query → QueryPlan`` routing over
+    the paper's three lookup paths, batched and vectorized,
+  * :mod:`repro.search.service` — ``SearchService.search_batch``: grouped
+    fetches + bucketed JAX/Pallas window joins,
+  * :mod:`repro.search.join`    — the interchangeable join backends.
+"""
+
+from repro.search.join import (
+    JOIN_BACKENDS,
+    batched_window_mask,
+    jax_window_join,
+    numpy_phrase_join,
+    numpy_window_join,
+    pack_keys,
+    pallas_window_join,
+    pos_scale,
+)
+from repro.search.plan import (
+    ROUTE_ORDINARY,
+    ROUTE_STOPSEQ,
+    ROUTE_WV,
+    ROUTES,
+    KeyLookup,
+    PlannedQuery,
+    Query,
+    QueryPlan,
+    QueryResult,
+    plan_batch,
+)
+from repro.search.reader import (
+    CacheStats,
+    IndexReader,
+    IndexSetReader,
+    PostingCache,
+)
+from repro.search.service import SearchService
+
+__all__ = [
+    "JOIN_BACKENDS",
+    "batched_window_mask",
+    "jax_window_join",
+    "numpy_phrase_join",
+    "numpy_window_join",
+    "pack_keys",
+    "pallas_window_join",
+    "pos_scale",
+    "ROUTE_ORDINARY",
+    "ROUTE_STOPSEQ",
+    "ROUTE_WV",
+    "ROUTES",
+    "KeyLookup",
+    "PlannedQuery",
+    "Query",
+    "QueryPlan",
+    "QueryResult",
+    "plan_batch",
+    "CacheStats",
+    "IndexReader",
+    "IndexSetReader",
+    "PostingCache",
+    "SearchService",
+]

@@ -1,0 +1,186 @@
+"""Typed query planning over the paper's three lookup routes.
+
+``plan_batch`` turns a batch of word-id queries into a
+:class:`QueryPlan`: every query is classified (vectorized — ONE
+lemmatize/classes pass over all words of the batch, replacing the old
+per-word round trips) and routed down one of the paper's three paths:
+
+  * ``ROUTE_STOPSEQ``  — all words are stop lemmas: the whole
+    co-occurrence is precomputed under one stop-sequence key,
+  * ``ROUTE_WV``       — a FREQUENT lemma pairs with the other word
+    through one extended (w, v) key,
+  * ``ROUTE_ORDINARY`` — ordinary-index lookups + position window join.
+
+The plan also carries the batch's key lookups grouped by
+``(index, dictionary group)`` so the executor can fetch group-mates
+together (one dictionary partition visit serves every query that needs
+it) and deduplicate identical keys across the batch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.lexicon import FREQUENT, Lexicon, STOP
+from repro.data.corpus import PAIR_SHIFT, SEQ2_FLAG, SEQ_SHIFT
+
+ROUTE_STOPSEQ = "stopseq"
+ROUTE_WV = "wv"
+ROUTE_ORDINARY = "ordinary"
+
+ROUTES = (ROUTE_STOPSEQ, ROUTE_WV, ROUTE_ORDINARY)
+
+
+@dataclasses.dataclass(frozen=True)
+class Query:
+    """One proximity query: 2-3 word ids + an optional per-query window."""
+
+    words: Tuple[int, ...]
+    window: Optional[int] = None
+
+    def __post_init__(self):
+        if not 2 <= len(self.words) <= 3:
+            raise ValueError(f"queries are 2-3 words, got {len(self.words)}")
+
+
+@dataclasses.dataclass(frozen=True)
+class KeyLookup:
+    """One (index, key) posting fetch; ``group`` is the dictionary group."""
+
+    index: str
+    key: int
+    group: int
+
+
+@dataclasses.dataclass
+class PlannedQuery:
+    query: Query
+    route: str
+    lookups: List[KeyLookup]
+    window: int
+
+
+@dataclasses.dataclass
+class QueryPlan:
+    """Executable plan for a batch of queries."""
+
+    queries: List[PlannedQuery]
+    # all *unique* lookups of the batch, grouped by (index, dict group)
+    grouped: Dict[Tuple[str, int], List[KeyLookup]]
+
+    @property
+    def n_unique_lookups(self) -> int:
+        return sum(len(v) for v in self.grouped.values())
+
+    def route_census(self) -> Dict[str, int]:
+        census = {r: 0 for r in ROUTES}
+        for pq in self.queries:
+            census[pq.route] += 1
+        return census
+
+
+@dataclasses.dataclass
+class QueryResult:
+    docs: np.ndarray                 # matched doc ids (unique, sorted)
+    witnesses: np.ndarray            # (N,2) witness postings
+    lookups: List[Tuple[str, int]]   # (index, key) lookups performed
+    postings_scanned: int            # total postings decoded
+    route: Optional[str] = None      # which planner route produced this
+
+    def __eq__(self, other) -> bool:  # element-wise identity for tests
+        return (
+            isinstance(other, QueryResult)
+            and np.array_equal(self.docs, other.docs)
+            and np.array_equal(self.witnesses, other.witnesses)
+            and self.lookups == other.lookups
+            and self.postings_scanned == other.postings_scanned
+        )
+
+
+def classify_batch(
+    lexicon: Lexicon, queries: Sequence[Query]
+) -> Tuple[np.ndarray, np.ndarray, List[slice]]:
+    """One vectorized lemmatize+classify pass over all words of the batch.
+
+    Returns (lemmas, classes) flat over the concatenated query words plus
+    the per-query slice into them.
+    """
+    spans: List[slice] = []
+    flat: List[int] = []
+    for q in queries:
+        spans.append(slice(len(flat), len(flat) + len(q.words)))
+        flat.extend(q.words)
+    words = np.asarray(flat, dtype=np.int64)
+    if words.size == 0:
+        return words, words, spans
+    lemmas, classes = lexicon.classify_words(words)
+    return lemmas, classes, spans
+
+
+def plan_query(
+    lemmas: np.ndarray,
+    classes: np.ndarray,
+    query: Query,
+    lexicon: Lexicon,
+    group_of,
+    window: int,
+) -> PlannedQuery:
+    """Route one classified query (mirrors the paper's decision order)."""
+    lem = [int(x) for x in lemmas]
+    cls = [int(x) for x in classes]
+
+    if all(c == STOP for c in cls):
+        if len(lem) == 2:
+            key = int(SEQ2_FLAG | (lem[0] << SEQ_SHIFT) | lem[1])
+        else:
+            key = int(
+                (lem[0] << (2 * SEQ_SHIFT)) | (lem[1] << SEQ_SHIFT) | lem[2]
+            )
+        lk = KeyLookup("stopseq", key, group_of("stopseq", key))
+        return PlannedQuery(query, ROUTE_STOPSEQ, [lk], window)
+
+    freq_i = next((i for i, c in enumerate(cls) if c == FREQUENT), None)
+    if freq_i is not None and len(query.words) == 2:
+        w = lem[freq_i]
+        v = lem[1 - freq_i]
+        key = int((w << PAIR_SHIFT) | v)
+        name = "wv_kk" if v < lexicon.n_lemmas else "wv_ku"
+        lk = KeyLookup(name, key, group_of(name, key))
+        return PlannedQuery(query, ROUTE_WV, [lk], window)
+
+    lookups = []
+    for lemma in lem:
+        name = "unknown" if lemma >= lexicon.n_lemmas else "known"
+        lookups.append(KeyLookup(name, lemma, group_of(name, lemma)))
+    return PlannedQuery(query, ROUTE_ORDINARY, lookups, window)
+
+
+def plan_batch(
+    queries: Sequence[Query],
+    lexicon: Lexicon,
+    group_of,
+    default_window: int,
+) -> QueryPlan:
+    """Plan a batch: classify all words at once, route each query, group
+    the batch's unique lookups by (index, dictionary group)."""
+    lemmas, classes, spans = classify_batch(lexicon, queries)
+    planned = [
+        plan_query(
+            lemmas[span], classes[span], q, lexicon, group_of,
+            q.window if q.window is not None else default_window,
+        )
+        for q, span in zip(queries, spans)
+    ]
+    grouped: Dict[Tuple[str, int], List[KeyLookup]] = {}
+    seen = set()
+    for pq in planned:
+        for lk in pq.lookups:
+            ident = (lk.index, lk.key)
+            if ident in seen:
+                continue
+            seen.add(ident)
+            grouped.setdefault((lk.index, lk.group), []).append(lk)
+    return QueryPlan(planned, grouped)

@@ -1,0 +1,191 @@
+"""Read-side snapshot views over the easily updatable indexes.
+
+The writer (:class:`~repro.core.inverted_index.InvertedIndex`) owns the
+build device and the update protocol; readers own everything about
+serving lookups:
+
+  * each :class:`IndexReader` charges its I/O to a dedicated *search*
+    device, so build and search traffic are never conflated (previously
+    done by temporarily swapping the stream manager's device — a
+    writer-side hack that could not be made concurrent-safe);
+  * posting lists are cached in a byte-budgeted LRU shared across the
+    readers of a :class:`IndexSetReader` — a cache hit costs ZERO device
+    I/O, which is what makes repeated keys in a query batch (and hot stop
+    pairs across batches) nearly free;
+  * readers snapshot the writer's part counter; when the writer indexes
+    another collection part, stale cached postings are dropped on the
+    next lookup (single-writer, read-your-writes semantics).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, Hashable, Optional, Tuple
+
+import numpy as np
+
+from repro.core.inverted_index import InvertedIndex
+from repro.core.io_sim import BlockDevice, IOStats
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    bytes_used: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+
+class PostingCache:
+    """Byte-budgeted LRU over decoded posting arrays.
+
+    Values are (N,2) int64 arrays, charged at ``arr.nbytes`` with a small
+    per-entry floor (so negative-cache entries for absent keys stay
+    bounded by the budget too); keys are ``(index_name, key)``.  Cached
+    arrays are marked read-only: every consumer of a posting list treats
+    it as immutable, and the flag turns an accidental in-place mutation
+    into a loud error instead of silent cross-query corruption.
+    """
+
+    # accounting floor per entry: map/key overhead, and the reason a
+    # stream of distinct absent keys cannot grow the cache unboundedly
+    MIN_CHARGE = 64
+
+    def __init__(self, budget_bytes: int = 8 << 20):
+        self.budget = int(budget_bytes)
+        self._map: "OrderedDict[Tuple[str, Hashable], np.ndarray]" = OrderedDict()
+        self.stats = CacheStats()
+
+    def get(self, key: Tuple[str, Hashable]) -> Optional[np.ndarray]:
+        arr = self._map.get(key)
+        if arr is None:
+            self.stats.misses += 1
+            return None
+        self._map.move_to_end(key)
+        self.stats.hits += 1
+        return arr
+
+    def _charge(self, arr: np.ndarray) -> int:
+        return max(arr.nbytes, self.MIN_CHARGE)
+
+    def put(self, key: Tuple[str, Hashable], arr: np.ndarray) -> None:
+        if self._charge(arr) > self.budget:
+            return  # bigger than the whole budget: not cacheable
+        old = self._map.pop(key, None)
+        if old is not None:
+            self.stats.bytes_used -= self._charge(old)
+        arr = arr.view()
+        arr.flags.writeable = False
+        self._map[key] = arr
+        self.stats.bytes_used += self._charge(arr)
+        while self.stats.bytes_used > self.budget and self._map:
+            _, victim = self._map.popitem(last=False)
+            self.stats.bytes_used -= self._charge(victim)
+            self.stats.evictions += 1
+
+    def drop_index(self, index_name: str) -> None:
+        """Invalidate every entry of one index (writer advanced)."""
+        stale = [k for k in self._map if k[0] == index_name]
+        for k in stale:
+            self.stats.bytes_used -= self._charge(self._map.pop(k))
+
+    def __len__(self) -> int:
+        return len(self._map)
+
+
+class IndexReader:
+    """Read-only access to one :class:`InvertedIndex` snapshot.
+
+    All lookup I/O is charged to ``self.device`` (never the writer's
+    build device); decoded posting lists go through the shared LRU.
+    """
+
+    def __init__(
+        self,
+        index: InvertedIndex,
+        device: Optional[BlockDevice] = None,
+        cache: Optional[PostingCache] = None,
+    ):
+        self.index = index
+        self.device = device if device is not None else BlockDevice(
+            cluster_size=index.cfg.cluster_size, name=f"{index.name}-read"
+        )
+        self.cache = cache
+        self._generation = index.n_parts
+
+    # ------------------------------------------------------------ lookups --
+    def lookup(self, key: Hashable) -> np.ndarray:
+        if self.index.n_parts != self._generation:
+            self.refresh()
+        if self.cache is not None:
+            hit = self.cache.get((self.index.name, key))
+            if hit is not None:
+                return hit
+        posts = self.index.lookup(key, device=self.device)
+        # readers hand out immutable postings: the same buffer is shared
+        # with every later cache hit, so a mutation by the first caller
+        # must fail loudly instead of corrupting other queries' results
+        posts.flags.writeable = False
+        if self.cache is not None:
+            self.cache.put((self.index.name, key), posts)
+        return posts
+
+    def lookup_ops(self, key: Hashable) -> int:
+        return self.index.lookup_ops(key)
+
+    def group_of(self, key: Hashable) -> int:
+        """Dictionary group of a key — the planner's amortization unit."""
+        return self.index.dict.group_of(key)
+
+    # ------------------------------------------------------------- state --
+    def refresh(self) -> None:
+        """Re-snapshot after the writer indexed more parts."""
+        if self.cache is not None:
+            self.cache.drop_index(self.index.name)
+        self._generation = self.index.n_parts
+
+    def io_stats(self) -> IOStats:
+        return self.device.stats.snapshot()
+
+
+class IndexSetReader:
+    """Readers for every index of a :class:`TextIndexSet`, one shared cache.
+
+    Reuses the set's per-index search devices so the existing
+    ``TextIndexSet.search_io()`` reporting keeps aggregating reader
+    traffic.
+    """
+
+    def __init__(self, index_set, cache_bytes: int = 8 << 20):
+        self.index_set = index_set
+        self.cache = PostingCache(cache_bytes) if cache_bytes > 0 else None
+        self.readers: Dict[str, IndexReader] = {
+            name: IndexReader(
+                idx, device=index_set.search_devices[name], cache=self.cache
+            )
+            for name, idx in index_set.indexes.items()
+        }
+        self.lexicon = index_set.lexicon
+
+    def lookup(self, index_name: str, key: Hashable) -> np.ndarray:
+        return self.readers[index_name].lookup(key)
+
+    def group_of(self, index_name: str, key: Hashable) -> int:
+        return self.readers[index_name].group_of(key)
+
+    def refresh(self) -> None:
+        for r in self.readers.values():
+            r.refresh()
+
+    def io_stats(self) -> Dict[str, IOStats]:
+        return {name: r.io_stats() for name, r in self.readers.items()}
+
+    @property
+    def cache_stats(self) -> Optional[CacheStats]:
+        return self.cache.stats if self.cache is not None else None

@@ -1,7 +1,7 @@
 """Extent allocator + block device accounting properties."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from tests._hypothesis_compat import given, settings, strategies as st
 
 from repro.core.cluster_store import ExtentAllocator
 from repro.core.io_sim import BlockDevice, PackedWriteDevice

@@ -103,10 +103,14 @@ def test_mace_energy_training_reduces_loss():
     )
     loss_fn = lambda pp: mace_energy_mse(cfg, pp, batch)
     l0 = float(loss_fn(p))
+    grad_fn = jax.jit(jax.grad(loss_fn))
     for _ in range(30):
-        g = jax.grad(loss_fn)(p)
-        # small lr: the correlation-3 (cubic) terms make the landscape stiff
-        p = jax.tree_util.tree_map(lambda a, b: a - 0.005 * b, p, g)
+        g = grad_fn(p)
+        # the correlation-3 (cubic) terms make the landscape stiff: without
+        # a global-norm clip plain SGD at this lr diverges to NaN
+        gn = jnp.sqrt(sum(jnp.sum(x * x) for x in jax.tree_util.tree_leaves(g)))
+        clip = jnp.minimum(1.0, 1.0 / (gn + 1e-9))
+        p = jax.tree_util.tree_map(lambda a, b: a - 0.005 * clip * b, p, g)
     l1 = float(loss_fn(p))
     assert l1 < 0.2 * l0, (l0, l1)
 

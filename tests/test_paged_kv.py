@@ -3,7 +3,7 @@ and integration with the paged attention kernel."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._hypothesis_compat import given, settings, strategies as st
 
 import jax.numpy as jnp
 

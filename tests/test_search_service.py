@@ -1,0 +1,283 @@
+"""Reader/Planner/Executor stack: batched results identical to per-query
+search, cache hits free, joins exact beyond int32 packing."""
+
+import numpy as np
+import pytest
+
+from repro.core.lexicon import FREQUENT, OTHER, STOP, make_lexicon
+from repro.core.proximity import ProximityEngine
+from repro.core.strategies import StrategyConfig
+from repro.core.text_index import IndexSetConfig, TextIndexSet
+from repro.data.corpus import generate_part
+from repro.search import (
+    ROUTE_ORDINARY,
+    ROUTE_STOPSEQ,
+    ROUTE_WV,
+    IndexReader,
+    PostingCache,
+    Query,
+    SearchService,
+    jax_window_join,
+    numpy_window_join,
+    pos_scale,
+)
+
+
+@pytest.fixture(scope="module")
+def small_world():
+    lex = make_lexicon(
+        n_words=8000, n_lemmas=3500, n_stop=30, n_frequent=200, seed=11
+    )
+    t1, o1 = generate_part(lex, n_docs=150, avg_doc_len=250, doc0=0, seed=1)
+    t2, o2 = generate_part(lex, n_docs=150, avg_doc_len=250, doc0=150, seed=2)
+    cfg = IndexSetConfig(
+        strategy=StrategyConfig.set2(cluster_size=2048),
+        build_ordinary_all=True,
+        fl_area_clusters=128,
+    )
+    ts = TextIndexSet(cfg, lex, seed=0)
+    ts.add_documents(t1, o1, 0)
+    ts.add_documents(t2, o2, 150)
+    return lex, ts
+
+
+def words_of_class(lex, cls, n=12):
+    out = []
+    for w in range(lex.n_words):
+        l = lex.lemma1[w]
+        if l >= 0 and lex.lemma_class[l] == cls:
+            out.append(int(w))
+            if len(out) == n:
+                break
+    return out
+
+
+def mixed_queries(lex, n=64, seed=5):
+    """>= n queries hitting all three planner routes, with repeats so the
+    batch exercises lookup dedup and the posting cache."""
+    rng = np.random.RandomState(seed)
+    stop = words_of_class(lex, STOP)
+    freq = words_of_class(lex, FREQUENT)
+    other = words_of_class(lex, OTHER)
+    qs = []
+    while len(qs) < n:
+        kind = len(qs) % 4
+        if kind == 0:
+            qs.append([rng.choice(stop), rng.choice(stop)])
+        elif kind == 1:
+            qs.append([rng.choice(stop), rng.choice(stop), rng.choice(stop)])
+        elif kind == 2:
+            qs.append([rng.choice(freq), rng.choice(other)])
+        else:
+            pool = rng.choice(other, size=rng.randint(2, 4), replace=False)
+            qs.append([int(w) for w in pool])
+    return [[int(w) for w in q] for q in qs]
+
+
+# ------------------------------------------------------------ the planner --
+def test_planner_routes_and_grouping(small_world):
+    lex, ts = small_world
+    svc = SearchService(ts, window=3)
+    qs = mixed_queries(lex, n=64)
+    plan = svc.plan(qs)
+    census = plan.route_census()
+    assert census[ROUTE_STOPSEQ] >= 16
+    assert census[ROUTE_WV] >= 8
+    assert census[ROUTE_ORDINARY] >= 8
+    # grouped lookups are unique and keyed by real dictionary groups
+    total = sum(len(v) for v in plan.grouped.values())
+    flat = {(lk.index, lk.key) for v in plan.grouped.values() for lk in v}
+    assert len(flat) == total == plan.n_unique_lookups
+    per_query = sum(len(pq.lookups) for pq in plan.queries)
+    assert total < per_query, "batch planning must dedupe repeated keys"
+    for (index, group), lks in plan.grouped.items():
+        for lk in lks:
+            assert lk.group == group == ts.indexes[index].dict.group_of(lk.key)
+
+
+def test_query_validation():
+    with pytest.raises(ValueError):
+        Query((1,))
+    with pytest.raises(ValueError):
+        Query((1, 2, 3, 4))
+
+
+# ----------------------------------------------- batched == per-query loop --
+@pytest.mark.parametrize("backend", ["numpy", "jax", "pallas"])
+def test_batched_identical_to_per_query(small_world, backend):
+    lex, ts = small_world
+    eng = ProximityEngine(ts, window=3)
+    svc = SearchService(ts, window=3, backend=backend)
+    qs = mixed_queries(lex, n=64)
+    batch = svc.search_batch(qs)
+    assert len(batch) == 64
+    routes = set()
+    for q, r in zip(qs, batch):
+        ref = eng.search(q)
+        routes.add(r.route)
+        assert np.array_equal(ref.docs, r.docs), (backend, q)
+        assert np.array_equal(ref.witnesses, r.witnesses), (backend, q)
+        assert ref.lookups == r.lookups, (backend, q)
+        assert ref.postings_scanned == r.postings_scanned, (backend, q)
+    assert routes == {ROUTE_STOPSEQ, ROUTE_WV, ROUTE_ORDINARY}
+
+
+def test_batched_agrees_with_ordinary_baseline(small_world):
+    lex, ts = small_world
+    eng = ProximityEngine(ts, window=3)
+    svc = SearchService(ts, window=3, backend="jax")
+    qs = mixed_queries(lex, n=16)
+    for q, r in zip(qs, svc.search_batch(qs)):
+        rb = eng.search_ordinary(q)
+        assert set(r.docs.tolist()) == set(rb.docs.tolist()), q
+
+
+# ------------------------------------------------------- reader I/O + LRU --
+def test_cache_hits_charge_zero_io(small_world):
+    lex, ts = small_world
+    svc = SearchService(ts, window=3)
+    qs = mixed_queries(lex, n=32)
+    svc.search_batch(qs)
+    warm = {n: s.total_ops for n, s in ts.search_io().items()}
+    stats0 = svc.reader.cache_stats
+    h0, b0 = stats0.hits, stats0.bytes_used
+    svc.search_batch(qs)  # every lookup now a cache hit
+    after = {n: s.total_ops for n, s in ts.search_io().items()}
+    assert warm == after, "cache hits must charge zero search-device I/O"
+    assert svc.reader.cache_stats.hits > h0
+    assert svc.reader.cache_stats.bytes_used == b0
+
+
+def test_reader_refreshes_after_writer_update(small_world):
+    lex, _ = small_world
+    cfg = IndexSetConfig(strategy=StrategyConfig.set1(cluster_size=2048))
+    ts = TextIndexSet(cfg, lex, seed=0)
+    t1, o1 = generate_part(lex, n_docs=60, avg_doc_len=200, doc0=0, seed=21)
+    t2, o2 = generate_part(lex, n_docs=60, avg_doc_len=200, doc0=60, seed=22)
+    ts.add_documents(t1, o1, 0)
+    reader = ts.reader()
+    key = next(iter(ts.indexes["known"].dict.entries))
+    before = reader.lookup("known", key).copy()
+    ts.add_documents(t2, o2, 60)  # writer advances: cached postings stale
+    after = reader.lookup("known", key)
+    fresh = ts.indexes["known"].lookup(key)
+    assert np.array_equal(after, fresh)
+    assert after.shape[0] >= before.shape[0]
+
+
+def test_per_query_window_clamped_to_max_distance(small_world):
+    """A Query window beyond cfg.max_distance must clamp: the stopseq/wv
+    indexes are precomputed at max_distance, so a wider ordinary join
+    would give route-dependent proximity semantics."""
+    lex, ts = small_world
+    svc = SearchService(ts, window=3)
+    other = words_of_class(lex, OTHER)
+    q = [other[1], other[2]]
+    wide = svc.search_batch([Query(tuple(q), window=50)])[0]
+    default = svc.search_batch([q])[0]
+    assert np.array_equal(wide.docs, default.docs)
+    assert np.array_equal(wide.witnesses, default.witnesses)
+
+
+def test_negative_cache_entries_stay_bounded():
+    cache = PostingCache(budget_bytes=PostingCache.MIN_CHARGE * 8)
+    empty = np.zeros((0, 2), np.int64)
+    for k in range(100):  # a stream of distinct absent keys
+        cache.put(("i", k), empty)
+    assert len(cache) <= 8, "zero-byte entries must respect the budget"
+    assert cache.stats.evictions > 0
+
+
+def test_cache_budget_evicts():
+    cache = PostingCache(budget_bytes=1024)
+    a = np.zeros((32, 2), np.int64)  # 512 B each
+    cache.put(("i", 1), a)
+    cache.put(("i", 2), a)
+    cache.put(("i", 3), a)  # evicts key 1 (LRU)
+    assert cache.get(("i", 1)) is None
+    assert cache.get(("i", 3)) is not None
+    assert cache.stats.bytes_used <= 1024
+    assert cache.stats.evictions == 1
+    # oversized values are passed through, never cached
+    cache.put(("i", 4), np.zeros((200, 2), np.int64))
+    assert cache.get(("i", 4)) is None
+
+
+def test_cached_postings_are_readonly(small_world):
+    lex, ts = small_world
+    svc = SearchService(ts, window=3)
+    stop = words_of_class(lex, STOP)
+    # miss and hit share one buffer: both must be immutable, or the first
+    # caller could silently corrupt every later cache hit
+    r_miss = svc.search([stop[0], stop[1]])
+    r_hit = svc.search([stop[0], stop[1]])
+    for r in (r_miss, r_hit):
+        with pytest.raises(ValueError):
+            r.witnesses[:] = 0
+
+
+# ----------------------------------------- join packing regression (int64) --
+def test_jax_join_beyond_int24_doc_packing():
+    """Doc ids past the old 24-bit packing range: the int32 truncation bug
+    made the jax join silently wrong there (scale picked off the
+    post-truncation dtype).  The packed-key scale is now data-driven."""
+    rng = np.random.RandomState(1)
+    # 3000 docs x positions < 400: packed keys need doc*512, far beyond
+    # what doc * 2^24 could hold in int32 (overflow at doc 128)
+    docs = np.sort(rng.randint(0, 3000, 500))
+    a = np.stack([docs, rng.randint(0, 400, 500)], 1)
+    docs_b = np.sort(rng.randint(0, 3000, 400))
+    b = np.stack([docs_b, rng.randint(0, 400, 400)], 1)
+    a = a[np.lexsort((a[:, 1], a[:, 0]))]
+    b = b[np.lexsort((b[:, 1], b[:, 0]))]
+    for w in (0, 1, 3, 7):
+        ref = numpy_window_join(a, b, w)
+        jx = jax_window_join(a, b, w)
+        assert ref.shape == jx.shape and (ref == jx).all(), w
+
+
+def test_jax_join_padding_near_dtype_limit():
+    """Packed keys just under the int32 admission line must not window-match
+    the padding rows (b pads above every real key + window)."""
+    M = np.iinfo(np.int32).max
+    w = 3
+    scale = 16  # pos < 16 - w - 1 keeps pos_scale at 16
+    doc = (M - 5) // scale  # akey lands at M - 5 + pos adjustments
+    a = np.asarray([[doc, 10], [doc, 11]], np.int64)
+    # 3 rows pad to 4: the padded slot sits right past the real keys
+    b = np.asarray([[1, 0], [2, 0], [3, 0]], np.int64)
+    for arr in (a, b):
+        assert arr[:, 0].max() * scale + arr[:, 1].max() + w < M
+    ref = numpy_window_join(a, b, w)
+    jx = jax_window_join(a, b, w)
+    assert ref.shape == jx.shape == (0, 2)
+
+
+def test_jax_join_falls_back_when_keys_exceed_int32():
+    # doc ids so large the packed keys cannot fit int32: exact host fallback
+    a = np.asarray([[2 ** 40, 5], [2 ** 40 + 1, 9]], np.int64)
+    b = np.asarray([[2 ** 40, 7], [2 ** 41, 1]], np.int64)
+    ref = numpy_window_join(a, b, 3)
+    jx = jax_window_join(a, b, 3)
+    assert np.array_equal(ref, jx)
+    assert jx.shape == (1, 2) and jx[0, 0] == 2 ** 40
+
+
+def test_pos_scale_headroom():
+    for max_pos, w in [(0, 0), (5, 3), (511, 0), (511, 3), (1000, 7)]:
+        s = pos_scale(max_pos, w)
+        assert s > max_pos + w, (max_pos, w, s)
+        assert s & (s - 1) == 0
+
+
+def test_index_reader_own_device(small_world):
+    """A standalone IndexReader charges its own device, not the writer's."""
+    lex, ts = small_world
+    idx = ts.indexes["known"]
+    build_before = idx.mgr.device.stats.total_ops
+    reader = IndexReader(idx)
+    key = next(iter(idx.dict.entries))
+    posts = reader.lookup(key)
+    assert posts.shape[0] > 0
+    assert idx.mgr.device.stats.total_ops == build_before
+    assert reader.io_stats().total_ops > 0
