@@ -69,6 +69,7 @@ def build_index_set(
     cluster_size: int = 1024,
     build_ordinary_all: bool = False,
     fl_area_clusters: int = 4096,
+    multi_k=3,
     **strategy_kw,
 ) -> TextIndexSet:
     """Benchmark geometry: the CI corpus is ~10^4x smaller than the paper's
@@ -86,6 +87,7 @@ def build_index_set(
         strategy=strategy,
         build_ordinary_all=build_ordinary_all,
         fl_area_clusters=fl_area_clusters,
+        multi_k=multi_k,
     )
     ts = TextIndexSet(cfg, world.lexicon, seed=0)
     for (toks, offs), doc0 in zip(world.parts, world.doc_starts):

@@ -17,7 +17,7 @@ def run(scale: float = 0.5, world: World = None) -> List[Dict]:
     world = world or make_world(scale)
     rows: List[Dict] = []
     for setname in ("set1", "set2"):
-        ts = build_index_set(world, setname)
+        ts = build_index_set(world, setname, multi_k=None)  # paper tables never query the multi index
         for name in INDEX_NAMES:
             idx = ts.indexes[name]
             census = idx.mgr.state_census()

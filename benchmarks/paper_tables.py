@@ -31,7 +31,7 @@ def run(scale: float = 1.0, world: World = None) -> List[Dict]:
     rows: List[Dict] = []
     per_set = {}
     for setname in SETS:
-        ts = build_index_set(world, setname)
+        ts = build_index_set(world, setname, multi_k=None)  # paper tables never query the multi index
         table = ts.table_rows()
         per_set[setname] = table
         census = ts.census()

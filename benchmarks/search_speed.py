@@ -9,6 +9,12 @@ scanned, search I/O ops, and wall time per query class.
 stream through ``SearchService.search_batch`` (planned, deduplicated,
 JAX-bucketed joins) vs a per-query ``ProximityEngine.search`` loop,
 reported as queries/sec per join backend.
+
+``--multi`` compares the multi-component key route (arXiv:1812.07640)
+against the ordinary-index join path on a stream of k-word phrase
+queries: same results, strictly fewer posting bytes read (the k-word key
+fetches only the phrase's own occurrences; the join path drags in every
+occurrence of every queried lemma).
 """
 
 from __future__ import annotations
@@ -21,7 +27,7 @@ import numpy as np
 from benchmarks.common import World, build_index_set, make_world
 from repro.core.lexicon import FREQUENT, OTHER, STOP
 from repro.core.proximity import ProximityEngine
-from repro.search import SearchService
+from repro.search import ROUTE_MULTI, Query, SearchService
 
 
 def _words_of_class(lex, cls, n, rng):
@@ -36,7 +42,8 @@ def _words_of_class(lex, cls, n, rng):
 
 def run(scale: float = 0.5, world: World = None) -> List[Dict]:
     world = world or make_world(scale)
-    ts = build_index_set(world, "set2", build_ordinary_all=True)
+    ts = build_index_set(world, "set2", build_ordinary_all=True,
+                         multi_k=None)  # no phrase queries in this bench
     eng = ProximityEngine(ts, window=3)
     lex = world.lexicon
     rng = np.random.RandomState(7)
@@ -113,7 +120,8 @@ def run_batched(
     if n_queries < 1:
         raise ValueError(f"--queries must be >= 1, got {n_queries}")
     world = world or make_world(scale)
-    ts = build_index_set(world, "set2", build_ordinary_all=False)
+    ts = build_index_set(world, "set2", build_ordinary_all=False,
+                         multi_k=None)  # no phrase queries in this bench
     lex = world.lexicon
     queries = _mixed_stream(lex, n_queries, np.random.RandomState(7))
 
@@ -155,6 +163,110 @@ def _timed(fn) -> float:
     t0 = time.perf_counter()
     fn()
     return time.perf_counter() - t0
+
+
+# ------------------------------------------------- multi-component route --
+def _phrase_stream(world: World, n_queries: int, k: int, rng) -> List[Query]:
+    """k-word phrase queries lifted from the real token stream (so they
+    have occurrences), skipping all-stop windows (those take the even
+    cheaper stop-sequence route, not the one under test)."""
+    lex = world.lexicon
+    toks, offs = world.parts[0]
+    out: List[Query] = []
+    while len(out) < n_queries:
+        s = int(rng.randint(0, toks.shape[0] - k))
+        words = tuple(int(t) for t in toks[s : s + k])
+        _, cls = lex.classify_words(np.asarray(words, np.int64))
+        if all(int(c) == STOP for c in cls):
+            continue
+        out.append(Query(words, phrase=True))
+    return out
+
+
+def _read_bytes(ts) -> int:
+    return sum(s.read_bytes for s in ts.search_io().values())
+
+
+def run_multi(
+    scale: float = 0.5,
+    world: World = None,
+    n_queries: int = 64,
+    repeats: int = 3,
+) -> List[Dict]:
+    """ROUTE_MULTI vs the ordinary-index join path on phrase queries.
+
+    Both services run the numpy (oracle) backend with the posting cache
+    disabled, so the reader ``search_io`` deltas are the true per-batch
+    posting traffic of each path.
+    """
+    if n_queries < 1:
+        raise ValueError(f"--queries must be >= 1, got {n_queries}")
+    world = world or make_world(scale)
+    ts = build_index_set(world, "set2", build_ordinary_all=False)
+    k = ts.indexes["multi"].k
+    queries = _phrase_stream(world, n_queries, k, np.random.RandomState(11))
+
+    svc_multi = SearchService(ts, window=3, backend="numpy", cache_bytes=0)
+    svc_ord = SearchService(ts, window=3, backend="numpy", cache_bytes=0,
+                            use_multi=False)
+
+    b0 = _read_bytes(ts)
+    res_multi = svc_multi.search_batch(queries)
+    multi_bytes = _read_bytes(ts) - b0
+    b0 = _read_bytes(ts)
+    res_ord = svc_ord.search_batch(queries)
+    ord_bytes = _read_bytes(ts) - b0
+
+    # identical answers (the ordinary path may carry duplicate witness
+    # rows when a token's two lemma readings coincide — compare sets)
+    identical = all(
+        rm.route == ROUTE_MULTI
+        and ro.route == "ordinary"
+        and np.array_equal(rm.docs, ro.docs)
+        and {tuple(x) for x in rm.witnesses.tolist()}
+        == {tuple(x) for x in ro.witnesses.tolist()}
+        for rm, ro in zip(res_multi, res_ord)
+    )
+    t_multi = min(
+        _timed(lambda: svc_multi.search_batch(queries)) for _ in range(repeats)
+    )
+    t_ord = min(
+        _timed(lambda: svc_ord.search_batch(queries)) for _ in range(repeats)
+    )
+    scanned_multi = sum(r.postings_scanned for r in res_multi)
+    scanned_ord = sum(r.postings_scanned for r in res_ord)
+    return [
+        {
+            "bench": "search_speed_multi",
+            "queries": len(queries),
+            "k": k,
+            "multi_qps": len(queries) / t_multi,
+            "ord_qps": len(queries) / t_ord,
+            "multi_read_bytes": int(multi_bytes),
+            "ord_read_bytes": int(ord_bytes),
+            "bytes_ratio": ord_bytes / max(1, multi_bytes),
+            "multi_scanned": int(scanned_multi),
+            "ord_scanned": int(scanned_ord),
+            "identical": identical,
+        }
+    ]
+
+
+def main_multi(scale: float = 0.5, n_queries: int = 64) -> None:
+    rows = run_multi(scale, n_queries=n_queries)
+    r = rows[0]
+    print(f"{'route':10s} {'qps':>10s} {'read_bytes':>12s} {'scanned':>10s}")
+    print(f"{'multi':10s} {r['multi_qps']:>10,.0f} {r['multi_read_bytes']:>12,} "
+          f"{r['multi_scanned']:>10,}")
+    print(f"{'ordinary':10s} {r['ord_qps']:>10,.0f} {r['ord_read_bytes']:>12,} "
+          f"{r['ord_scanned']:>10,}")
+    print(f"{r['queries']} {r['k']}-word phrase queries; "
+          f"bytes ratio ord/multi = {r['bytes_ratio']:.1f}x")
+    assert r["identical"], "ROUTE_MULTI diverged from the ordinary-join oracle"
+    assert r["multi_read_bytes"] < r["ord_read_bytes"], (
+        "multi route must read strictly fewer posting bytes"
+    )
+    print("PASS  multi route matches the ordinary join and reads fewer bytes")
 
 
 def main_batched(scale: float = 0.5, n_queries: int = 64) -> None:
@@ -200,9 +312,14 @@ if __name__ == "__main__":
     ap.add_argument("--scale", type=float, default=0.5)
     ap.add_argument("--batched", action="store_true",
                     help="batched SearchService qps vs per-query loop")
+    ap.add_argument("--multi", action="store_true",
+                    help="multi-component key route vs ordinary join "
+                         "on phrase queries")
     ap.add_argument("--queries", type=int, default=64)
     args = ap.parse_args()
     if args.batched:
         main_batched(args.scale, n_queries=args.queries)
+    elif args.multi:
+        main_multi(args.scale, n_queries=args.queries)
     else:
         main(args.scale)

@@ -84,6 +84,20 @@ def main():
         assert set(r.docs.tolist()) == set(eng.search(q).docs.tolist())
     print("batched results identical to the per-query engine")
 
+    # phrase search through the multi-component (k-word) key index: one
+    # key fetch returns exactly the phrase's occurrences — no join over
+    # the ordinary posting lists at all
+    toks, offs = part1
+    phrase = tuple(int(t) for t in toks[offs[0] : offs[0] + 3])
+    r = svc.search(phrase, phrase=True)
+    r_ord = SearchService(ts, window=3, use_multi=False).search(
+        phrase, phrase=True
+    )
+    assert set(r.docs.tolist()) == set(r_ord.docs.tolist())
+    print(f"phrase {phrase} -> {len(r.docs)} docs via route '{r.route}',"
+          f" scanning {r.postings_scanned:,} postings"
+          f" (ordinary join path: {r_ord.postings_scanned:,})")
+
 
 if __name__ == "__main__":
     main()

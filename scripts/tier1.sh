@@ -1,0 +1,6 @@
+#!/usr/bin/env bash
+# Tier-1 verification — the single entry point CI and humans share.
+# Keep in sync with ROADMAP.md ("Tier-1 verify").
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -x -q "$@"

@@ -11,9 +11,17 @@ by the search-speed experiment:
   wv_ku    — extended (w, v), v unknown
   stopseq  — stop-lemma sequences
 
+plus (unless disabled via ``multi_k=None``) the follow-up work's
+multi-component key index:
+
+  multi    — sliding k-word lemma-tuple keys (:mod:`repro.core.multi_key`),
+             the planner's fourth route for phrase queries
+
 Each index owns its own simulated block device, so construction I/O is
-reported per index exactly like the paper's tables.  Search I/O is charged
-to a separate per-index device so build and search are never conflated.
+reported per index exactly like the paper's tables (the ``multi`` index
+gets its own build/search accounting rows the same way).  Search I/O is
+charged to a separate per-index device so build and search are never
+conflated.
 """
 
 from __future__ import annotations
@@ -26,10 +34,12 @@ import numpy as np
 from repro.core.inverted_index import InvertedIndex
 from repro.core.io_sim import BlockDevice, IOStats, PackedWriteDevice
 from repro.core.lexicon import Lexicon
+from repro.core.multi_key import MultiKeyIndex
 from repro.core.strategies import StrategyConfig
 from repro.data.corpus import extract_postings
 
 INDEX_NAMES = ("known", "unknown", "wv_kk", "wv_ku", "stopseq")
+MULTI_INDEX = "multi"
 
 # paper Table 1: 243 known-lemma groups, 96 unknown groups (full scale);
 # scaled defaults keep phase counts proportional at CI corpus sizes.
@@ -39,6 +49,7 @@ DEFAULT_GROUPS = {
     "wv_kk": 32,
     "wv_ku": 16,
     "stopseq": 8,
+    "multi": 24,
     "ordinary_all": 24,
 }
 
@@ -52,6 +63,8 @@ class IndexSetConfig:
     )
     fl_area_clusters: int = 2048
     build_ordinary_all: bool = False
+    # multi-component (k-word) key index: tuple width, or None to disable
+    multi_k: Optional[int] = 3
 
 
 class TextIndexSet:
@@ -59,6 +72,8 @@ class TextIndexSet:
         self.cfg = cfg
         self.lexicon = lexicon
         names = list(INDEX_NAMES) + (
+            [MULTI_INDEX] if cfg.multi_k is not None else []
+        ) + (
             ["ordinary_all"] if cfg.build_ordinary_all else []
         )
         self.indexes: Dict[str, InvertedIndex] = {}
@@ -76,15 +91,19 @@ class TextIndexSet:
             else:
                 dev = BlockDevice(cluster_size=s.cluster_size, name=name)
             dict_dev = BlockDevice(cluster_size=s.cluster_size, name=f"{name}-dict")
-            self.indexes[name] = InvertedIndex(
-                s,
-                dev,
+            common = dict(
                 n_groups=cfg.groups.get(name, 16),
                 name=name,
                 fl_area_clusters=cfg.fl_area_clusters,
                 seed=seed,
                 dict_device=dict_dev,
             )
+            if name == MULTI_INDEX:
+                self.indexes[name] = MultiKeyIndex.for_lexicon(
+                    s, dev, lexicon, k=cfg.multi_k, **common
+                )
+            else:
+                self.indexes[name] = InvertedIndex(s, dev, **common)
             self.dict_devices[name] = dict_dev
             self.search_devices[name] = BlockDevice(
                 cluster_size=s.cluster_size, name=f"{name}-search"
@@ -98,6 +117,10 @@ class TextIndexSet:
         maps = extract_postings(
             self.lexicon, tokens, offsets, doc0, self.cfg.max_distance
         )
+        if MULTI_INDEX in self.indexes:
+            maps[MULTI_INDEX] = self.indexes[MULTI_INDEX].extract_part(
+                self.lexicon, tokens, offsets, doc0
+            )
         for name, index in self.indexes.items():
             index.add_part(maps[name])
 

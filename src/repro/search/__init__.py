@@ -5,7 +5,8 @@ Layering (DESIGN_SEARCH.md):
   * :mod:`repro.search.reader`  — read-only index snapshots with their own
     search-I/O accounting and a byte-budgeted posting-list LRU,
   * :mod:`repro.search.plan`    — typed ``Query → QueryPlan`` routing over
-    the paper's three lookup paths, batched and vectorized,
+    the four lookup paths (the paper's three + the multi-component
+    k-word route), batched and vectorized,
   * :mod:`repro.search.service` — ``SearchService.search_batch``: grouped
     fetches + bucketed JAX/Pallas window joins,
   * :mod:`repro.search.join`    — the interchangeable join backends.
@@ -22,11 +23,13 @@ from repro.search.join import (
     pos_scale,
 )
 from repro.search.plan import (
+    ROUTE_MULTI,
     ROUTE_ORDINARY,
     ROUTE_STOPSEQ,
     ROUTE_WV,
     ROUTES,
     KeyLookup,
+    MultiKeySpec,
     PlannedQuery,
     Query,
     QueryPlan,
@@ -50,11 +53,13 @@ __all__ = [
     "pack_keys",
     "pallas_window_join",
     "pos_scale",
+    "ROUTE_MULTI",
     "ROUTE_ORDINARY",
     "ROUTE_STOPSEQ",
     "ROUTE_WV",
     "ROUTES",
     "KeyLookup",
+    "MultiKeySpec",
     "PlannedQuery",
     "Query",
     "QueryPlan",

@@ -1,15 +1,21 @@
-"""Typed query planning over the paper's three lookup routes.
+"""Typed query planning over the paper family's four lookup routes.
 
 ``plan_batch`` turns a batch of word-id queries into a
 :class:`QueryPlan`: every query is classified (vectorized — ONE
 lemmatize/classes pass over all words of the batch, replacing the old
-per-word round trips) and routed down one of the paper's three paths:
+per-word round trips) and routed down one of four paths:
 
   * ``ROUTE_STOPSEQ``  — all words are stop lemmas: the whole
     co-occurrence is precomputed under one stop-sequence key,
+  * ``ROUTE_MULTI``    — a phrase query whose words are covered by one
+    (or a small overlapping cover of) multi-component k-word keys
+    (arXiv:1812.07640); the executor reconstructs the window matches
+    from the NSW-style (doc, start-position) records alone,
   * ``ROUTE_WV``       — a FREQUENT lemma pairs with the other word
     through one extended (w, v) key,
-  * ``ROUTE_ORDINARY`` — ordinary-index lookups + position window join.
+  * ``ROUTE_ORDINARY`` — ordinary-index lookups + position join
+    (window join, or staged phrase joins for phrase queries the
+    multi index cannot cover).
 
 The plan also carries the batch's key lookups grouped by
 ``(index, dictionary group)`` so the executor can fetch group-mates
@@ -20,7 +26,7 @@ it) and deduplicate identical keys across the batch.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -28,21 +34,49 @@ from repro.core.lexicon import FREQUENT, Lexicon, STOP
 from repro.data.corpus import PAIR_SHIFT, SEQ2_FLAG, SEQ_SHIFT
 
 ROUTE_STOPSEQ = "stopseq"
+ROUTE_MULTI = "multi"
 ROUTE_WV = "wv"
 ROUTE_ORDINARY = "ordinary"
 
-ROUTES = (ROUTE_STOPSEQ, ROUTE_WV, ROUTE_ORDINARY)
+ROUTES = (ROUTE_STOPSEQ, ROUTE_MULTI, ROUTE_WV, ROUTE_ORDINARY)
+
+# proximity queries stay at the paper's 2-3 words; phrase queries may be
+# longer — the multi route covers them with overlapping k-word keys
+MAX_PHRASE_WORDS = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiKeySpec:
+    """Planner view of the multi-component key index: tuple width ``k``
+    and the key packing, both owned by the index itself."""
+
+    k: int
+    pack: Callable[[Sequence[int]], int]
+    name: str = "multi"
 
 
 @dataclasses.dataclass(frozen=True)
 class Query:
-    """One proximity query: 2-3 word ids + an optional per-query window."""
+    """One query: word ids + an optional per-query window.
+
+    ``phrase=True`` asks for ordered-contiguous semantics (word j at
+    start+j) — the stop-sequence index's semantics extended to arbitrary
+    words; ``window`` is ignored for phrase queries.  Proximity queries
+    are 2-3 words; phrase queries may be up to ``MAX_PHRASE_WORDS``.
+    """
 
     words: Tuple[int, ...]
     window: Optional[int] = None
+    phrase: bool = False
 
     def __post_init__(self):
-        if not 2 <= len(self.words) <= 3:
+        if self.phrase:
+            if not 2 <= len(self.words) <= MAX_PHRASE_WORDS:
+                raise ValueError(
+                    f"phrase queries are 2-{MAX_PHRASE_WORDS} words, "
+                    f"got {len(self.words)}"
+                )
+        elif not 2 <= len(self.words) <= 3:
             raise ValueError(f"queries are 2-3 words, got {len(self.words)}")
 
 
@@ -127,12 +161,15 @@ def plan_query(
     lexicon: Lexicon,
     group_of,
     window: int,
+    multi: Optional[MultiKeySpec] = None,
+    max_distance: Optional[int] = None,
 ) -> PlannedQuery:
-    """Route one classified query (mirrors the paper's decision order)."""
+    """Route one classified query (mirrors the paper's decision order,
+    with the multi-component route slotted between stopseq and (w, v))."""
     lem = [int(x) for x in lemmas]
     cls = [int(x) for x in classes]
 
-    if all(c == STOP for c in cls):
+    if all(c == STOP for c in cls) and len(lem) <= 3:
         if len(lem) == 2:
             key = int(SEQ2_FLAG | (lem[0] << SEQ_SHIFT) | lem[1])
         else:
@@ -142,8 +179,27 @@ def plan_query(
         lk = KeyLookup("stopseq", key, group_of("stopseq", key))
         return PlannedQuery(query, ROUTE_STOPSEQ, [lk], window)
 
+    if query.phrase and multi is not None and len(lem) >= multi.k:
+        # cover the phrase with L-k+1 overlapping k-word keys; the
+        # executor intersects them at their fixed start-position offsets
+        lookups = []
+        for off in range(len(lem) - multi.k + 1):
+            key = int(multi.pack(lem[off : off + multi.k]))
+            lookups.append(KeyLookup(multi.name, key, group_of(multi.name, key)))
+        return PlannedQuery(query, ROUTE_MULTI, lookups, window)
+
     freq_i = next((i for i, c in enumerate(cls) if c == FREQUENT), None)
-    if freq_i is not None and len(query.words) == 2:
+    if (
+        freq_i is not None
+        and len(query.words) == 2
+        and not query.phrase
+        # (w, v) records are precomputed at max_distance and carry only
+        # w's position, so a NARROWER window cannot be applied to them —
+        # those queries take the ordinary route, which honors the window
+        and (max_distance is None or window >= max_distance)
+    ):
+        # (w, v) records carry only w's position — enough for window
+        # proximity, not for reconstructing a phrase match
         w = lem[freq_i]
         v = lem[1 - freq_i]
         key = int((w << PAIR_SHIFT) | v)
@@ -163,6 +219,8 @@ def plan_batch(
     lexicon: Lexicon,
     group_of,
     default_window: int,
+    multi: Optional[MultiKeySpec] = None,
+    max_distance: Optional[int] = None,
 ) -> QueryPlan:
     """Plan a batch: classify all words at once, route each query, group
     the batch's unique lookups by (index, dictionary group)."""
@@ -171,6 +229,7 @@ def plan_batch(
         plan_query(
             lemmas[span], classes[span], q, lexicon, group_of,
             q.window if q.window is not None else default_window,
+            multi=multi, max_distance=max_distance,
         )
         for q, span in zip(queries, spans)
     ]

@@ -47,10 +47,15 @@ class PostingCache:
 
     Values are (N,2) int64 arrays, charged at ``arr.nbytes`` with a small
     per-entry floor (so negative-cache entries for absent keys stay
-    bounded by the budget too); keys are ``(index_name, key)``.  Cached
-    arrays are marked read-only: every consumer of a posting list treats
-    it as immutable, and the flag turns an accidental in-place mutation
-    into a loud error instead of silent cross-query corruption.
+    bounded by the budget too).  Entries are namespaced by index name AT
+    THE API level — ``get``/``put`` take ``(index_name, key)`` as two
+    separate arguments — so different indexes whose packed integer keys
+    happen to coincide numerically (e.g. an extended ``(w, v)`` key and
+    a 2-word multi-component key) can never share a cache slot, and no
+    caller can accidentally pass an un-namespaced key.  Cached arrays
+    are marked read-only: every consumer of a posting list treats it as
+    immutable, and the flag turns an accidental in-place mutation into a
+    loud error instead of silent cross-query corruption.
     """
 
     # accounting floor per entry: map/key overhead, and the reason a
@@ -62,27 +67,29 @@ class PostingCache:
         self._map: "OrderedDict[Tuple[str, Hashable], np.ndarray]" = OrderedDict()
         self.stats = CacheStats()
 
-    def get(self, key: Tuple[str, Hashable]) -> Optional[np.ndarray]:
-        arr = self._map.get(key)
+    def get(self, index_name: str, key: Hashable) -> Optional[np.ndarray]:
+        slot = (index_name, key)
+        arr = self._map.get(slot)
         if arr is None:
             self.stats.misses += 1
             return None
-        self._map.move_to_end(key)
+        self._map.move_to_end(slot)
         self.stats.hits += 1
         return arr
 
     def _charge(self, arr: np.ndarray) -> int:
         return max(arr.nbytes, self.MIN_CHARGE)
 
-    def put(self, key: Tuple[str, Hashable], arr: np.ndarray) -> None:
+    def put(self, index_name: str, key: Hashable, arr: np.ndarray) -> None:
         if self._charge(arr) > self.budget:
             return  # bigger than the whole budget: not cacheable
-        old = self._map.pop(key, None)
+        slot = (index_name, key)
+        old = self._map.pop(slot, None)
         if old is not None:
             self.stats.bytes_used -= self._charge(old)
         arr = arr.view()
         arr.flags.writeable = False
-        self._map[key] = arr
+        self._map[slot] = arr
         self.stats.bytes_used += self._charge(arr)
         while self.stats.bytes_used > self.budget and self._map:
             _, victim = self._map.popitem(last=False)
@@ -124,7 +131,7 @@ class IndexReader:
         if self.index.n_parts != self._generation:
             self.refresh()
         if self.cache is not None:
-            hit = self.cache.get((self.index.name, key))
+            hit = self.cache.get(self.index.name, key)
             if hit is not None:
                 return hit
         posts = self.index.lookup(key, device=self.device)
@@ -133,7 +140,7 @@ class IndexReader:
         # must fail loudly instead of corrupting other queries' results
         posts.flags.writeable = False
         if self.cache is not None:
-            self.cache.put((self.index.name, key), posts)
+            self.cache.put(self.index.name, key, posts)
         return posts
 
     def lookup_ops(self, key: Hashable) -> int:

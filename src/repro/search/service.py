@@ -30,11 +30,14 @@ from repro.search.join import (
     _jax_dtype_for,
     _pow2,
     batched_window_mask,
+    numpy_phrase_join,
     numpy_window_join,
     pack_keys,
 )
 from repro.search.plan import (
+    ROUTE_MULTI,
     ROUTE_ORDINARY,
+    MultiKeySpec,
     Query,
     QueryPlan,
     QueryResult,
@@ -66,6 +69,7 @@ class SearchService:
         window: int = 3,
         backend: Union[str, Callable] = "numpy",
         cache_bytes: int = 8 << 20,
+        use_multi: bool = True,
     ):
         if isinstance(source, IndexSetReader):
             self.reader = source
@@ -74,6 +78,13 @@ class SearchService:
         self.index_set = self.reader.index_set
         self.lexicon = self.reader.lexicon
         self.window = min(window, self.index_set.cfg.max_distance)
+        # multi-component route: available when the set built the multi
+        # index and the caller did not opt out (use_multi=False forces
+        # phrase queries down the ordinary path — the benchmark baseline)
+        self.multi: Optional[MultiKeySpec] = None
+        if use_multi and "multi" in self.index_set.indexes:
+            mi = self.index_set.indexes["multi"]
+            self.multi = MultiKeySpec(k=mi.k, pack=mi.pack)
         if callable(backend):
             self.backend: Union[str, Callable] = backend
         elif backend in JOIN_BACKENDS:
@@ -95,11 +106,18 @@ class SearchService:
             if q.window is not None and q.window > md else q
             for q in map(_as_query, queries)
         ]
-        return plan_batch(qs, self.lexicon, self.reader.group_of, self.window)
+        return plan_batch(qs, self.lexicon, self.reader.group_of, self.window,
+                          multi=self.multi, max_distance=md)
 
     # ----------------------------------------------------------- execution --
-    def search(self, words: Sequence[int], window: Optional[int] = None) -> QueryResult:
-        return self.search_batch([Query(tuple(int(w) for w in words), window)])[0]
+    def search(
+        self,
+        words: Sequence[int],
+        window: Optional[int] = None,
+        phrase: bool = False,
+    ) -> QueryResult:
+        q = Query(tuple(int(w) for w in words), window, phrase=phrase)
+        return self.search_batch([q])[0]
 
     def search_batch(self, queries: Sequence[QueryLike]) -> List[QueryResult]:
         plan = self.plan(queries)
@@ -110,16 +128,30 @@ class SearchService:
             fetched = [posts[(lk.index, lk.key)] for lk in pq.lookups]
             log = [(lk.index, lk.key) for lk in pq.lookups]
             scanned = sum(f.shape[0] for f in fetched)
-            if pq.route == ROUTE_ORDINARY:
+            if pq.route == ROUTE_ORDINARY and not pq.query.phrase:
                 ordinary.append((i, fetched))
                 results[i] = QueryResult(_EMPTY[:, 0], _EMPTY, log, scanned,
                                          pq.route)
+            elif pq.route == ROUTE_MULTI or pq.route == ROUTE_ORDINARY:
+                # phrase reconstruction: lookup j's records must sit at
+                # start+j (multi: k-gram at word offset j; ordinary
+                # phrase: word j itself) — staged exact host joins
+                acc = self._phrase_chain(fetched)
+                results[i] = QueryResult(np.unique(acc[:, 0]), acc, log,
+                                         scanned, pq.route)
             else:
                 p = fetched[0]
                 results[i] = QueryResult(np.unique(p[:, 0]), p, log, scanned,
                                          pq.route)
         self._execute_ordinary(plan, ordinary, results)
         return results
+
+    @staticmethod
+    def _phrase_chain(fetched: List[np.ndarray]) -> np.ndarray:
+        acc = fetched[0]
+        for dist, nxt in enumerate(fetched[1:], start=1):
+            acc = numpy_phrase_join(acc, nxt, dist)
+        return acc
 
     def _fetch(self, plan: QueryPlan) -> Dict[Tuple[str, int], np.ndarray]:
         """Fetch each unique (index, key) once, walking (index, group) in

@@ -1,0 +1,265 @@
+"""Multi-component (k-word) key index: brute-force oracle equivalence,
+storage-tier coverage, key packing, and I/O accounting rows."""
+
+import numpy as np
+import pytest
+
+from repro.core.dictionary import K_EM
+from repro.core.lexicon import make_lexicon
+from repro.core.multi_key import (
+    MultiKeyIndex,
+    extract_multi_postings,
+    lemma_bits,
+    pack_components,
+    unpack_components,
+)
+from repro.core.strategies import StrategyConfig
+from repro.core.text_index import IndexSetConfig, TextIndexSet
+from repro.data.corpus import generate_part
+from repro.search import ROUTE_MULTI, Query, SearchService
+
+
+# a tiny, hot vocabulary: trigram keys repeat heavily, so with a tiny
+# em_limit and cluster the hottest keys are pushed out of EM into
+# PART/S/CH streams while the cold tail stays inline — the oracle runs
+# across every storage tier
+@pytest.fixture(scope="module")
+def tiered_world():
+    lex = make_lexicon(
+        n_words=14, n_lemmas=10, n_stop=2, n_frequent=3,
+        unknown_fraction=0.15, seed=7,
+    )
+    parts = [
+        generate_part(lex, n_docs=40, avg_doc_len=120, doc0=0, seed=51),
+        generate_part(lex, n_docs=40, avg_doc_len=120, doc0=40, seed=52),
+    ]
+    cfg = IndexSetConfig(
+        strategy=StrategyConfig.set2(
+            cluster_size=256, em_limit=8, tag_extract_bytes=512
+        ),
+        fl_area_clusters=64,
+    )
+    ts = TextIndexSet(cfg, lex, seed=0)
+    doc0 = 0
+    for toks, offs in parts:
+        ts.add_documents(toks, offs, doc0)
+        doc0 += offs.shape[0] - 1
+    return lex, parts, ts
+
+
+def _readings(lex, token):
+    token = int(token)
+    if token >= lex.known_cutoff:
+        return {lex.n_lemmas + token}
+    out = {int(lex.lemma1[token])}
+    if lex.lemma2[token] >= 0:
+        out.add(int(lex.lemma2[token]))
+    return out
+
+
+def oracle_phrase(lex, parts, words, doc0=0):
+    """Scan the raw token stream: every (doc, start) where word j's
+    primary lemma is among the readings of token start+j."""
+    lemmas, _ = lex.classify_words(np.asarray(words, np.int64))
+    hits = set()
+    base = doc0
+    for toks, offs in parts:
+        for d in range(offs.shape[0] - 1):
+            s, e = int(offs[d]), int(offs[d + 1])
+            for p in range(e - s - len(words) + 1):
+                if all(
+                    int(lemmas[j]) in _readings(lex, toks[s + p + j])
+                    for j in range(len(words))
+                ):
+                    hits.add((base + d, p))
+        base += offs.shape[0] - 1
+    return hits
+
+
+def _word_for_lemma(lex):
+    """lemma id -> some word whose PRIMARY reading is that lemma."""
+    inv = {}
+    for w in range(lex.n_words):
+        l = int(lex.lemma1[w])
+        if l >= 0 and l not in inv:
+            inv[l] = w
+    for w in range(lex.known_cutoff, lex.n_words):
+        inv[lex.n_lemmas + w] = w
+    return inv
+
+
+# ----------------------------------------------------------- oracle tests --
+def test_multi_route_matches_bruteforce_oracle(tiered_world):
+    lex, parts, ts = tiered_world
+    svc = SearchService(ts, window=3)
+    toks0, offs0 = parts[0]
+    rng = np.random.RandomState(3)
+    n_multi = 0
+    for _ in range(40):
+        start = int(rng.randint(0, toks0.shape[0] - 3))
+        words = tuple(int(t) for t in toks0[start : start + 3])
+        r = svc.search_batch([Query(words, phrase=True)])[0]
+        # all-stop trigrams take the (equally phrase-exact) stopseq route
+        n_multi += r.route == ROUTE_MULTI
+        want = oracle_phrase(lex, parts, words)
+        got = {tuple(x) for x in r.witnesses.tolist()}
+        assert got == want, (r.route, words)
+        assert r.docs.tolist() == sorted({d for d, _ in want})
+    assert n_multi >= 15, f"only {n_multi}/40 queries took the multi route"
+
+
+def test_oracle_holds_across_storage_tiers(tiered_world):
+    """Query one key per storage tier the index actually populated —
+    EM-resident keys AND stream-backed (PART/S/CH/TAG) keys must both
+    return exactly the oracle's matches."""
+    lex, parts, ts = tiered_world
+    mi = ts.indexes["multi"]
+    census = mi.mgr.state_census()
+    streams_used = {s for s, n in census.items() if n > 0}
+    kinds = {e.kind for e in mi.dict.entries.values()}
+    assert K_EM in kinds, "tiny keys should stay inline in the dictionary"
+    assert streams_used - {"em"}, f"no stream-backed tiers populated: {census}"
+
+    inv = _word_for_lemma(lex)
+    svc = SearchService(ts, window=3)
+    covered = set()
+    for key, e in mi.dict.entries.items():
+        if e.kind in covered or e.npostings == 0:
+            continue
+        lemmas = mi.unpack(key)
+        if any(l not in inv for l in lemmas):
+            continue  # key only reachable through secondary readings
+        words = tuple(inv[l] for l in lemmas)
+        lem_back, cls_back = lex.classify_words(np.asarray(words, np.int64))
+        if tuple(int(x) for x in lem_back) != lemmas:
+            continue
+        if all(int(c) == 0 for c in cls_back):  # all-stop: stopseq wins
+            continue
+        r = svc.search_batch([Query(words, phrase=True)])[0]
+        assert r.route == ROUTE_MULTI
+        want = oracle_phrase(lex, parts, words)
+        got = {tuple(x) for x in r.witnesses.tolist()}
+        assert got == want, (e.kind, words)
+        covered.add(e.kind)
+    assert len(covered) >= 2, f"expected >= 2 storage tiers exercised: {covered}"
+
+
+def test_absent_phrase_returns_empty(tiered_world):
+    lex, parts, ts = tiered_world
+    svc = SearchService(ts, window=3)
+    # an unknown-word trigram that never occurs contiguously
+    w = lex.n_words - 1
+    r = svc.search_batch([Query((w, w, w), phrase=True)])[0]
+    if r.route == ROUTE_MULTI:  # not all-stop, vocab-dependent
+        assert oracle_phrase(lex, parts, (w, w, w)) == set()
+        assert r.docs.size == 0 and r.witnesses.shape == (0, 2)
+
+
+def test_longer_phrase_cover_matches_oracle(tiered_world):
+    """Phrases longer than k are covered by overlapping k-word keys."""
+    lex, parts, ts = tiered_world
+    svc = SearchService(ts, window=3)
+    toks0, _ = parts[0]
+    rng = np.random.RandomState(9)
+    for L in (4, 5):
+        for _ in range(6):
+            start = int(rng.randint(0, toks0.shape[0] - L))
+            words = tuple(int(t) for t in toks0[start : start + L])
+            r = svc.search_batch([Query(words, phrase=True)])[0]
+            assert r.route == ROUTE_MULTI
+            assert len(r.lookups) == L - ts.indexes["multi"].k + 1
+            want = oracle_phrase(lex, parts, words)
+            got = {tuple(x) for x in r.witnesses.tolist()}
+            assert got == want, (L, words)
+
+
+# ------------------------------------------------------- extraction/packing --
+def test_pack_unpack_roundtrip():
+    for k, bits in ((2, 21), (3, 17), (4, 15)):
+        rng = np.random.RandomState(k)
+        for _ in range(50):
+            comps = tuple(int(x) for x in rng.randint(0, 1 << bits, size=k))
+            key = pack_components(comps, bits)
+            assert 0 <= key < 1 << 62
+            assert unpack_components(key, k, bits) == comps
+    with pytest.raises(ValueError):
+        pack_components((1 << 17, 0, 0), 17)
+
+
+def test_multi_key_index_validation():
+    from repro.core.io_sim import BlockDevice
+
+    dev = BlockDevice(cluster_size=1024)
+    with pytest.raises(ValueError):
+        MultiKeyIndex(StrategyConfig.set1(), dev, k=1)
+    with pytest.raises(ValueError):
+        MultiKeyIndex(StrategyConfig.set1(), dev, k=4, component_bits=17)
+    mi = MultiKeyIndex(StrategyConfig.set1(), dev, k=3, component_bits=17)
+    with pytest.raises(ValueError):
+        mi.pack((1, 2))  # wrong arity
+
+
+def test_extraction_postings_are_exact_windows():
+    """Every extracted posting certifies a real k-window whose tokens can
+    read the key's lemmas; counts match an exhaustive scan."""
+    lex = make_lexicon(n_words=300, n_lemmas=150, n_stop=5, n_frequent=30, seed=13)
+    toks, offs = generate_part(lex, n_docs=15, avg_doc_len=50, doc0=0, seed=17)
+    bits = lemma_bits(lex)
+    maps = extract_multi_postings(lex, toks, offs, 0, k=3, bits=bits)
+    n_checked = 0
+    for key, posts in list(maps.items())[:200]:
+        lemmas = unpack_components(key, 3, bits)
+        for doc, pos in posts.tolist():
+            s = int(offs[doc])
+            assert all(
+                lemmas[j] in _readings(lex, toks[s + pos + j]) for j in range(3)
+            )
+            n_checked += 1
+        # sorted, unique rows
+        assert posts.shape == np.unique(posts, axis=0).shape
+    assert n_checked > 100
+    # total coverage: every in-document window appears under >= 1 key
+    n_windows = sum(
+        max(0, int(offs[d + 1] - offs[d]) - 2) for d in range(offs.shape[0] - 1)
+    )
+    primary_only = sum(
+        1
+        for posts in maps.values()
+        for _ in range(posts.shape[0])
+    )
+    assert primary_only >= n_windows
+
+
+def test_multi_index_has_io_accounting_rows(tiered_world):
+    lex, parts, ts = tiered_world
+    assert "multi" in ts.build_io()
+    assert "multi" in ts.search_io()
+    # build moved real bytes for the hot (stream-backed) keys
+    assert ts.build_io()["multi"].total_bytes > 0
+    svc = SearchService(ts, window=3, cache_bytes=0)
+    toks0, _ = parts[0]
+    before = ts.search_io()["multi"].total_ops
+    # first trigram that is not all-stop (those route to stopseq)
+    for s in range(toks0.shape[0] - 3):
+        words = tuple(int(t) for t in toks0[s : s + 3])
+        _, cls = lex.classify_words(np.asarray(words, np.int64))
+        if any(int(c) != 0 for c in cls):
+            break
+    r = svc.search_batch([Query(words, phrase=True)])[0]
+    assert r.route == ROUTE_MULTI
+    assert ts.search_io()["multi"].total_ops > before
+
+
+def test_index_set_multi_disabled():
+    lex = make_lexicon(n_words=500, n_lemmas=250, n_stop=5, n_frequent=30, seed=2)
+    cfg = IndexSetConfig(strategy=StrategyConfig.set1(cluster_size=1024),
+                         multi_k=None, fl_area_clusters=64)
+    ts = TextIndexSet(cfg, lex, seed=0)
+    toks, offs = generate_part(lex, n_docs=10, avg_doc_len=40, doc0=0, seed=1)
+    ts.add_documents(toks, offs, 0)
+    assert "multi" not in ts.indexes
+    svc = SearchService(ts, window=3)
+    assert svc.multi is None
+    words = tuple(int(t) for t in toks[:3])
+    r = svc.search_batch([Query(words, phrase=True)])[0]
+    assert r.route == "ordinary"  # graceful fallback, phrase semantics kept

@@ -1,8 +1,13 @@
 """Reader/Planner/Executor stack: batched results identical to per-query
-search, cache hits free, joins exact beyond int32 packing."""
+search, cache hits free, joins exact beyond int32 packing, and all four
+planner routes element-wise identical across join backends."""
+
+import functools
 
 import numpy as np
 import pytest
+
+from tests._hypothesis_compat import given, settings, strategies as st
 
 from repro.core.lexicon import FREQUENT, OTHER, STOP, make_lexicon
 from repro.core.proximity import ProximityEngine
@@ -10,6 +15,7 @@ from repro.core.strategies import StrategyConfig
 from repro.core.text_index import IndexSetConfig, TextIndexSet
 from repro.data.corpus import generate_part
 from repro.search import (
+    ROUTE_MULTI,
     ROUTE_ORDINARY,
     ROUTE_STOPSEQ,
     ROUTE_WV,
@@ -21,6 +27,8 @@ from repro.search import (
     numpy_window_join,
     pos_scale,
 )
+
+BACKENDS = ("numpy", "jax", "pallas")
 
 
 @pytest.fixture(scope="module")
@@ -183,7 +191,7 @@ def test_negative_cache_entries_stay_bounded():
     cache = PostingCache(budget_bytes=PostingCache.MIN_CHARGE * 8)
     empty = np.zeros((0, 2), np.int64)
     for k in range(100):  # a stream of distinct absent keys
-        cache.put(("i", k), empty)
+        cache.put("i", k, empty)
     assert len(cache) <= 8, "zero-byte entries must respect the budget"
     assert cache.stats.evictions > 0
 
@@ -191,16 +199,33 @@ def test_negative_cache_entries_stay_bounded():
 def test_cache_budget_evicts():
     cache = PostingCache(budget_bytes=1024)
     a = np.zeros((32, 2), np.int64)  # 512 B each
-    cache.put(("i", 1), a)
-    cache.put(("i", 2), a)
-    cache.put(("i", 3), a)  # evicts key 1 (LRU)
-    assert cache.get(("i", 1)) is None
-    assert cache.get(("i", 3)) is not None
+    cache.put("i", 1, a)
+    cache.put("i", 2, a)
+    cache.put("i", 3, a)  # evicts key 1 (LRU)
+    assert cache.get("i", 1) is None
+    assert cache.get("i", 3) is not None
     assert cache.stats.bytes_used <= 1024
     assert cache.stats.evictions == 1
     # oversized values are passed through, never cached
-    cache.put(("i", 4), np.zeros((200, 2), np.int64))
-    assert cache.get(("i", 4)) is None
+    cache.put("i", 4, np.zeros((200, 2), np.int64))
+    assert cache.get("i", 4) is None
+
+
+def test_cache_keys_namespaced_by_index():
+    """Regression: a numerically equal packed key in two different
+    indexes (e.g. an extended (w, v) key and a 2-word multi key) must
+    occupy distinct cache slots and never answer for each other."""
+    cache = PostingCache(budget_bytes=1 << 16)
+    key = (7 << 32) | 42  # same integer under both index names
+    wv = np.asarray([[1, 2]], np.int64)
+    multi = np.asarray([[3, 4], [5, 6]], np.int64)
+    cache.put("wv_kk", key, wv)
+    cache.put("multi", key, multi)
+    assert np.array_equal(cache.get("wv_kk", key), wv)
+    assert np.array_equal(cache.get("multi", key), multi)
+    cache.drop_index("wv_kk")
+    assert cache.get("wv_kk", key) is None
+    assert np.array_equal(cache.get("multi", key), multi)
 
 
 def test_cached_postings_are_readonly(small_world):
@@ -268,6 +293,162 @@ def test_pos_scale_headroom():
         s = pos_scale(max_pos, w)
         assert s > max_pos + w, (max_pos, w, s)
         assert s & (s - 1) == 0
+
+
+# ------------------------------------------------- route census regression --
+def test_route_census_regression(small_world):
+    """Pin the planner's route per query shape so future planner edits
+    cannot silently reroute traffic.  Columns: query, route, #lookups."""
+    lex, ts = small_world
+    svc = SearchService(ts, window=3)
+    stop = words_of_class(lex, STOP)
+    freq = words_of_class(lex, FREQUENT)
+    other = words_of_class(lex, OTHER)
+    P = True  # phrase
+    table = [
+        (Query((stop[0], stop[1])), ROUTE_STOPSEQ, 1),
+        (Query((stop[0], stop[1], stop[2])), ROUTE_STOPSEQ, 1),
+        (Query((stop[0], stop[1]), phrase=P), ROUTE_STOPSEQ, 1),
+        (Query((freq[0], other[0])), ROUTE_WV, 1),
+        (Query((other[0], freq[0])), ROUTE_WV, 1),
+        (Query((other[0], other[1])), ROUTE_ORDINARY, 2),
+        (Query((other[0], other[1], other[2])), ROUTE_ORDINARY, 3),
+        (Query((stop[0], other[0])), ROUTE_ORDINARY, 2),
+        (Query((freq[0], freq[1], other[0])), ROUTE_ORDINARY, 3),
+        # k-word-covered phrase queries: one key per k-window of the cover
+        (Query((other[0], other[1], other[2]), phrase=P), ROUTE_MULTI, 1),
+        (Query((other[0], freq[0], stop[0]), phrase=P), ROUTE_MULTI, 1),
+        (Query((other[0], other[1], other[2], other[3]), phrase=P), ROUTE_MULTI, 2),
+        (Query((stop[0], stop[1], stop[2], stop[0]), phrase=P), ROUTE_MULTI, 2),
+        # 2-word phrases: too short for a k=3 key, and (w, v) records
+        # cannot reconstruct a phrase — ordinary phrase joins
+        (Query((freq[0], other[0]), phrase=P), ROUTE_ORDINARY, 2),
+        (Query((other[0], other[1]), phrase=P), ROUTE_ORDINARY, 2),
+    ]
+    plan = svc.plan([q for q, _, _ in table])
+    for pq, (q, route, n_lookups) in zip(plan.queries, table):
+        assert pq.route == route, (q, pq.route)
+        assert len(pq.lookups) == n_lookups, (q, pq.lookups)
+    census = plan.route_census()
+    assert census == {
+        ROUTE_STOPSEQ: 3, ROUTE_MULTI: 4, ROUTE_WV: 2, ROUTE_ORDINARY: 6,
+    }
+    # opting out of the multi index reroutes phrases down ordinary
+    svc_no_multi = SearchService(ts, window=3, use_multi=False)
+    plan2 = svc_no_multi.plan([Query((other[0], other[1], other[2]), phrase=P)])
+    assert plan2.queries[0].route == ROUTE_ORDINARY
+    assert len(plan2.queries[0].lookups) == 3
+
+
+def test_wv_route_honors_narrow_window(small_world):
+    """A per-query window NARROWER than max_distance cannot be applied to
+    the precomputed (w, v) records (they carry only w's position), so
+    those queries must take the ordinary route — and return exactly the
+    narrow-window oracle, not max_distance false positives."""
+    lex, ts = small_world
+    svc = SearchService(ts, window=3)
+    freq = words_of_class(lex, FREQUENT)
+    other = words_of_class(lex, OTHER)
+    md = ts.cfg.max_distance
+    for q in ([freq[0], other[0]], [freq[1], freq[2]]):
+        narrow = svc.plan([Query(tuple(q), window=1)]).queries[0]
+        assert narrow.route == ROUTE_ORDINARY, q
+        wide = svc.plan([Query(tuple(q), window=md)]).queries[0]
+        assert wide.route == ROUTE_WV, q
+        # execution agrees with the narrow-window join over raw postings
+        r = svc.search_batch([Query(tuple(q), window=1)])[0]
+        lemmas, _ = lex.classify_words(np.asarray(q, np.int64))
+        posts = [ts.indexes["known"].lookup(int(l)) for l in lemmas]
+        ref = numpy_window_join(posts[0], posts[1], 1)
+        assert np.array_equal(r.docs, np.unique(ref[:, 0])), q
+
+
+# --------------------------------- cross-backend equivalence (all 4 routes) --
+@functools.lru_cache(maxsize=None)
+def _equiv_world(seed: int):
+    """A small random collection + per-class word pools + services for
+    every join backend (cached: worlds are immutable across examples)."""
+    lex = make_lexicon(
+        n_words=3000, n_lemmas=1300, n_stop=20, n_frequent=120, seed=40 + seed
+    )
+    toks, offs = generate_part(lex, n_docs=60, avg_doc_len=120, doc0=0,
+                               seed=60 + seed)
+    cfg = IndexSetConfig(
+        strategy=StrategyConfig.set2(cluster_size=1024),
+        fl_area_clusters=64,
+    )
+    ts = TextIndexSet(cfg, lex, seed=0)
+    ts.add_documents(toks, offs, 0)
+    pools = {
+        cls: words_of_class(lex, cls) for cls in (STOP, FREQUENT, OTHER)
+    }
+    services = {b: SearchService(ts, window=3, backend=b) for b in BACKENDS}
+    return lex, toks, pools, services
+
+
+def _spec_to_query(spec, lex, toks, pools):
+    kind, i, j, l, tpos, win, ph = spec
+    stop, freq, other = pools[STOP], pools[FREQUENT], pools[OTHER]
+    window = win if ph == 0 else None
+    if kind == 0:
+        return Query((stop[i], stop[j]), window)
+    if kind == 1:
+        return Query((stop[i], stop[j], stop[l]), window)
+    if kind == 2:
+        return Query((freq[i], other[j]), window)
+    if kind == 3:
+        return Query((other[i], other[j], other[l]), window)
+    # phrase queries lifted from the real token stream (so they hit)
+    L = 3 + (kind == 5) * (1 + l % 2)  # 3, 4 or 5 words
+    s = tpos % (toks.shape[0] - L)
+    return Query(tuple(int(t) for t in toks[s : s + L]), phrase=True)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.sampled_from((0, 1)),
+    st.lists(
+        st.tuples(
+            st.integers(0, 5),        # query kind
+            st.integers(0, 11),       # word pool picks
+            st.integers(0, 11),
+            st.integers(0, 11),
+            st.integers(0, 100_000),  # phrase anchor in the token stream
+            st.integers(1, 3),        # window
+            st.integers(0, 1),        # phrase-kind randomizer
+        ),
+        min_size=0,
+        max_size=10,
+    ),
+)
+def test_cross_backend_equivalence_all_routes(world_seed, specs):
+    """Property: numpy, jax and pallas return element-wise identical
+    docs/witnesses/lookups for every planner route.  Each batch carries a
+    fixed core hitting all four routes plus the drawn random queries."""
+    lex, toks, pools, services = _equiv_world(world_seed)
+    stop, freq, other = pools[STOP], pools[FREQUENT], pools[OTHER]
+    core = [
+        Query((stop[0], stop[1])),
+        Query((stop[2], stop[3], stop[4])),
+        Query((freq[0], other[0])),
+        Query((other[1], other[2])),
+        Query(tuple(int(t) for t in toks[5:8]), phrase=True),
+        Query(tuple(int(t) for t in toks[9:13]), phrase=True),
+    ]
+    queries = core + [_spec_to_query(s, lex, toks, pools) for s in specs]
+    results = {b: services[b].search_batch(queries) for b in BACKENDS}
+    routes = set()
+    for qi, q in enumerate(queries):
+        ref = results["numpy"][qi]
+        routes.add(ref.route)
+        for b in ("jax", "pallas"):
+            got = results[b][qi]
+            assert got.route == ref.route, (b, q)
+            assert np.array_equal(ref.docs, got.docs), (b, q)
+            assert np.array_equal(ref.witnesses, got.witnesses), (b, q)
+            assert ref.lookups == got.lookups, (b, q)
+            assert ref.postings_scanned == got.postings_scanned, (b, q)
+    assert routes >= {ROUTE_STOPSEQ, ROUTE_WV, ROUTE_ORDINARY, ROUTE_MULTI}
 
 
 def test_index_reader_own_device(small_world):
