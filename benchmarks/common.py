@@ -63,36 +63,59 @@ def generate_cached(lex, n_docs, avg_len, doc0, seed):
     return _GEN_CACHE[key]
 
 
-def build_index_set(
-    world: World,
+def bench_index_config(
     setname: str,
     cluster_size: int = 1024,
     build_ordinary_all: bool = False,
     fl_area_clusters: int = 4096,
     multi_k=3,
     **strategy_kw,
-) -> TextIndexSet:
+) -> IndexSetConfig:
     """Benchmark geometry: the CI corpus is ~10^4x smaller than the paper's
     71.5 GB, so the cluster geometry is scaled to keep the *postings-per-key
     vs cluster-size* regime comparable (1 KB clusters, 16 B EM limit, 64 B
     SR blocks, 2 KB TAG extraction).  All ratios between strategy sets are
-    geometry-consistent with the paper's 32 KB/64 B/128 B/8 KB settings."""
+    geometry-consistent with the paper's 32 KB/64 B/128 B/8 KB settings.
+
+    The ONE config builder for sharded and unsharded benchmark substrates:
+    benches that compare the two (``search_speed --shards``) rely on both
+    being constructed from an identical ``IndexSetConfig``."""
     strategy_kw.setdefault("em_limit", 16)
     strategy_kw.setdefault("sr_block", 64)
     strategy_kw.setdefault("tag_extract_bytes", 2048)
     strategy = getattr(StrategyConfig, setname)(
         cluster_size=cluster_size, **strategy_kw
     )
-    cfg = IndexSetConfig(
+    return IndexSetConfig(
         strategy=strategy,
         build_ordinary_all=build_ordinary_all,
         fl_area_clusters=fl_area_clusters,
         multi_k=multi_k,
     )
-    ts = TextIndexSet(cfg, world.lexicon, seed=0)
+
+
+def build_index_set(world: World, setname: str, **cfg_kw) -> TextIndexSet:
+    ts = TextIndexSet(bench_index_config(setname, **cfg_kw), world.lexicon,
+                      seed=0)
     for (toks, offs), doc0 in zip(world.parts, world.doc_starts):
         ts.add_documents(toks, offs, doc0)
     return ts
+
+
+def build_sharded_index_set(world: World, setname: str, n_shards: int,
+                            **cfg_kw):
+    """Identical :func:`bench_index_config` geometry as
+    :func:`build_index_set`, partitioned by doc hash across ``n_shards``
+    full per-shard substrates."""
+    from repro.core.sharded_set import ShardedTextIndexSet
+
+    sts = ShardedTextIndexSet(
+        bench_index_config(setname, **cfg_kw), world.lexicon,
+        n_shards=n_shards, seed=0,
+    )
+    for (toks, offs), doc0 in zip(world.parts, world.doc_starts):
+        sts.add_documents(toks, offs, doc0)
+    return sts
 
 
 def timeit(fn, *args, repeats: int = 3, **kw) -> Tuple[float, object]:

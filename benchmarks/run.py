@@ -9,6 +9,7 @@ Benches:
     lifecycle     — Fig. 8 stream state distribution
     search_speed  — section 6.1 additional-index speedups
     search_batched — batched SearchService qps vs per-query loop
+    search_sharded — 4-shard scatter/gather vs unsharded (qps + read bytes)
     paged_kv      — TPU adaptation: paged KV allocator behaviour
     kernels       — Pallas kernel microbenches (interpret mode) vs refs
 """
@@ -77,6 +78,18 @@ def _bench_search_batched(scale):
     ]
 
 
+def _bench_search_sharded(scale):
+    from benchmarks import search_speed
+
+    rows = search_speed.run_sharded(min(scale, 0.5), n_shards=4)
+    agg = rows[-1]
+    ok = agg["identical"] and agg["bytes_ratio"] <= 1.1
+    return rows, [
+        f"{'PASS' if ok else 'FAIL'}  4-shard scatter/gather identical to "
+        f"unsharded (read-bytes ratio {agg['bytes_ratio']:.3f} <= 1.1)"
+    ]
+
+
 def _bench_paged_kv(scale):
     from benchmarks import paged_kv_bench
 
@@ -95,6 +108,7 @@ BENCHES = {
     "lifecycle": _bench_lifecycle,
     "search_speed": _bench_search_speed,
     "search_batched": _bench_search_batched,
+    "search_sharded": _bench_search_sharded,
     "paged_kv": _bench_paged_kv,
     "kernels": _bench_kernels,
 }

@@ -15,6 +15,14 @@ against the ordinary-index join path on a stream of k-word phrase
 queries: same results, strictly fewer posting bytes read (the k-word key
 fetches only the phrase's own occurrences; the join path drags in every
 occurrence of every queried lemma).
+
+``--shards N`` runs the same batched mixed stream through a
+``ShardedTextIndexSet`` (document-hash sharding, scatter/gather
+``SearchService``) vs the unsharded set, reporting per-shard and
+aggregate queries/sec and read bytes.  The acceptance gate: sharding
+must NOT inflate aggregate read I/O (per-shard posting subsets usually
+land in *cheaper* storage tiers, so the sharded aggregate tends to come
+in below the unsharded bytes).
 """
 
 from __future__ import annotations
@@ -24,7 +32,12 @@ from typing import Dict, List
 
 import numpy as np
 
-from benchmarks.common import World, build_index_set, make_world
+from benchmarks.common import (
+    World,
+    build_index_set,
+    build_sharded_index_set,
+    make_world,
+)
 from repro.core.lexicon import FREQUENT, OTHER, STOP
 from repro.core.proximity import ProximityEngine
 from repro.search import ROUTE_MULTI, Query, SearchService
@@ -269,6 +282,113 @@ def main_multi(scale: float = 0.5, n_queries: int = 64) -> None:
     print("PASS  multi route matches the ordinary join and reads fewer bytes")
 
 
+# ------------------------------------------------------ sharded substrate --
+def run_sharded(
+    scale: float = 0.5,
+    world: World = None,
+    n_shards: int = 4,
+    n_queries: int = 64,
+    backend: str = "jax",
+    repeats: int = 3,
+) -> List[Dict]:
+    """Sharded scatter/gather serving vs the unsharded set, same stream.
+
+    Both services run with the posting cache disabled so the search-device
+    deltas are the true per-batch posting traffic of each substrate; the
+    sharded service uses the pipelined prefetch fetch stage (its default).
+    """
+    if n_shards < 1:
+        raise ValueError(f"--shards must be >= 1, got {n_shards}")
+    if n_queries < 1:
+        raise ValueError(f"--queries must be >= 1, got {n_queries}")
+    world = world or make_world(scale)
+    ts = build_index_set(world, "set2", build_ordinary_all=False,
+                         multi_k=None)  # mixed stream has no phrase queries
+    sts = build_sharded_index_set(world, "set2", n_shards=n_shards,
+                                  multi_k=None)
+    queries = _mixed_stream(world.lexicon, n_queries, np.random.RandomState(7))
+
+    svc_u = SearchService(ts, window=3, backend=backend, cache_bytes=0)
+    svc_s = SearchService(sts, window=3, backend=backend, cache_bytes=0)
+
+    b0 = _read_bytes(ts)
+    ref = svc_u.search_batch(queries)  # also warms jit
+    unsharded_bytes = _read_bytes(ts) - b0
+    b0 = _read_bytes(sts)
+    got = svc_s.search_batch(queries)
+    sharded_bytes = _read_bytes(sts) - b0
+    per_shard_bytes = [
+        sum(s.read_bytes for s in shard_io.values())
+        for shard_io in sts.search_io_per_shard()
+    ]
+
+    identical = all(
+        np.array_equal(r.docs, g.docs)
+        and np.array_equal(r.witnesses, g.witnesses)
+        and r.lookups == g.lookups
+        and r.postings_scanned == g.postings_scanned
+        for r, g in zip(ref, got)
+    )
+    t_u = min(_timed(lambda: svc_u.search_batch(queries))
+              for _ in range(repeats))
+    t_s = min(_timed(lambda: svc_s.search_batch(queries))
+              for _ in range(repeats))
+    # per-shard serving rate: the batch size over the seconds THAT shard's
+    # device fetches took inside the pipelined scatter stage (traced by the
+    # service) — the balance view across shards
+    shard_fetch_s = svc_s.last_trace.get("shard_fetch_s", [0.0] * n_shards)
+    rows: List[Dict] = [
+        {
+            "bench": "search_speed_sharded",
+            "shard": s,
+            "n_shards": n_shards,
+            "queries": len(queries),
+            "shard_qps": len(queries) / max(1e-9, shard_fetch_s[s]),
+            "read_bytes": int(per_shard_bytes[s]),
+        }
+        for s in range(n_shards)
+    ]
+    rows.append(
+        {
+            "bench": "search_speed_sharded",
+            "shard": "aggregate",
+            "n_shards": n_shards,
+            "queries": len(queries),
+            "sharded_qps": len(queries) / t_s,
+            "unsharded_qps": len(queries) / t_u,
+            "sharded_read_bytes": int(sharded_bytes),
+            "unsharded_read_bytes": int(unsharded_bytes),
+            "bytes_ratio": sharded_bytes / max(1, unsharded_bytes),
+            "prefetched_waves": svc_s.last_trace.get("prefetched_waves", 0),
+            "identical": identical,
+        }
+    )
+    return rows
+
+
+def main_sharded(scale: float = 0.5, n_queries: int = 64,
+                 n_shards: int = 4, backend: str = "jax") -> None:
+    rows = run_sharded(scale, n_shards=n_shards, n_queries=n_queries,
+                       backend=backend)
+    agg = rows[-1]
+    print(f"{'shard':>9s} {'qps':>12s} {'read_bytes':>12s}")
+    for r in rows[:-1]:
+        print(f"{r['shard']:>9d} {r['shard_qps']:>12,.0f} "
+              f"{r['read_bytes']:>12,}")
+    print(f"{'aggregate':>9s} {agg['sharded_qps']:>12,.0f} "
+          f"{agg['sharded_read_bytes']:>12,}")
+    print(f"unsharded baseline: {agg['unsharded_qps']:,.0f} qps, "
+          f"{agg['unsharded_read_bytes']:,} read bytes "
+          f"(sharded/unsharded bytes ratio {agg['bytes_ratio']:.3f}, "
+          f"{agg['prefetched_waves']} prefetched waves)")
+    assert agg["identical"], "sharded results diverged from unsharded"
+    assert agg["bytes_ratio"] <= 1.1, (
+        f"sharding must not inflate read I/O: ratio {agg['bytes_ratio']:.3f}"
+    )
+    print(f"PASS  {n_shards}-shard scatter/gather matches unsharded results "
+          "without inflating read bytes")
+
+
 def main_batched(scale: float = 0.5, n_queries: int = 64) -> None:
     rows = run_batched(scale, n_queries=n_queries)
     print(f"{'backend':8s} {'queries':>8s} {'loop_qps':>10s} {'batch_qps':>10s} "
@@ -315,9 +435,22 @@ if __name__ == "__main__":
     ap.add_argument("--multi", action="store_true",
                     help="multi-component key route vs ordinary join "
                          "on phrase queries")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="N-shard scatter/gather SearchService vs the "
+                         "unsharded set, both through search_batch; "
+                         "composes with --batched (the sharded bench IS "
+                         "the batched comparison)")
+    ap.add_argument("--backend", default="jax",
+                    help="join backend for --shards (numpy/jax/pallas)")
     ap.add_argument("--queries", type=int, default=64)
     args = ap.parse_args()
-    if args.batched:
+    if args.shards:
+        # --shards compares batched serving on both substrates, so
+        # `--shards N --batched` is the canonical spelling; --batched
+        # alone keeps its loop-vs-batch meaning below
+        main_sharded(args.scale, n_queries=args.queries,
+                     n_shards=args.shards, backend=args.backend)
+    elif args.batched:
         main_batched(args.scale, n_queries=args.queries)
     elif args.multi:
         main_multi(args.scale, n_queries=args.queries)

@@ -3,4 +3,10 @@
 # Keep in sync with ROADMAP.md ("Tier-1 verify").
 set -euo pipefail
 cd "$(dirname "$0")/.."
+# tiny-corpus smoke of the sharded scatter/gather serving path (--shards
+# composes with --batched: both substrates run through search_batch):
+# asserts sharded results stay identical to unsharded and read I/O does
+# not inflate
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.search_speed \
+  --shards 2 --batched --scale 0.05 --queries 16
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -x -q "$@"

@@ -27,7 +27,7 @@ from typing import List
 import numpy as np
 
 from repro.core.lexicon import STOP
-from repro.core.text_index import TextIndexSet
+from repro.core.text_index import IndexSetLike
 from repro.search.join import (
     JOIN_BACKENDS,
     jax_window_join,
@@ -56,7 +56,7 @@ class ProximityEngine:
     to the service as the join backend for the ordinary route.
     """
 
-    def __init__(self, index_set: TextIndexSet, window: int = 3,
+    def __init__(self, index_set: IndexSetLike, window: int = 3,
                  join=numpy_window_join, cache_bytes: int = 8 << 20):
         self.idx = index_set
         self.lex = index_set.lexicon

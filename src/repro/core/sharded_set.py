@@ -1,0 +1,205 @@
+"""Sharded index substrate: N per-shard :class:`TextIndexSet` partitions.
+
+The paper's easily updatable index is built for a growing collection;
+serving production traffic additionally needs the collection *partitioned*
+so shards can be fetched (and eventually updated and replicated)
+independently.  :class:`ShardedTextIndexSet` partitions documents by a
+multiplicative hash of the doc id across ``n_shards`` full
+:class:`~repro.core.text_index.TextIndexSet` substrates:
+
+  * every shard owns complete build/search/dictionary devices, so the
+    paper's I/O tables report **per shard and in aggregate** (the
+    ``*_per_shard`` variants vs the merged defaults);
+  * postings keep their **global** doc ids — a shard stores the doc-subset
+    of every key's posting list, sorted by (doc, pos) exactly like the
+    unsharded list.  Document-hash sharding therefore preserves the
+    property all four planner routes rely on: per-key posting fetches are
+    independent across documents, so a whole-set lookup is the disjoint
+    union of per-shard lookups and gathers **losslessly** by merge;
+  * extraction runs ONCE per part (same vectorized pass as unsharded) and
+    the resulting posting maps are scattered row-wise by doc hash, so a
+    sharded build indexes byte-for-byte the same postings as an unsharded
+    one.
+
+The read side lives in :mod:`repro.search.reader`
+(``ShardedIndexSetReader``) and :mod:`repro.search.service` (the
+plan → scatter-fetch → join → gather pipeline).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Hashable, List
+
+import numpy as np
+
+from repro.core.inverted_index import InvertedIndex
+from repro.core.io_sim import IOStats
+from repro.core.lexicon import Lexicon
+from repro.core.text_index import (
+    MULTI_INDEX,
+    IndexSetConfig,
+    IndexSetLike,
+    TextIndexSet,
+)
+from repro.data.corpus import extract_postings
+
+_EMPTY = np.zeros((0, 2), dtype=np.int64)
+
+# Fibonacci multiplier (2^64 / phi, odd): a multiplicative mix so shard
+# assignment is insensitive to doc-id striding (plain modulo would send
+# every even doc of a 2-part collection to the same shard, say)
+_MIX = 0x9E3779B97F4A7C15
+_MASK64 = (1 << 64) - 1
+
+
+def shard_of(doc_id: int, n_shards: int) -> int:
+    """Shard owning one doc id (deterministic multiplicative hash)."""
+    return int(((doc_id * _MIX) & _MASK64) >> 33) % n_shards
+
+
+def shard_of_docs(doc_ids: np.ndarray, n_shards: int) -> np.ndarray:
+    """Vectorized :func:`shard_of` over a doc-id column."""
+    d = np.asarray(doc_ids).astype(np.uint64)
+    mixed = (d * np.uint64(_MIX)) >> np.uint64(33)
+    return (mixed % np.uint64(n_shards)).astype(np.int64)
+
+
+def merge_io_reports(dicts: List[Dict[str, IOStats]]) -> Dict[str, IOStats]:
+    """Fold per-shard {index name → IOStats} reports into one aggregate
+    (the shared merge for set- and reader-side per-shard reporting)."""
+    out: Dict[str, IOStats] = {}
+    for d in dicts:
+        for name, st in d.items():
+            out[name] = out[name].merged(st) if name in out else st
+    return out
+
+
+def merge_shard_postings(arrs: List[np.ndarray]) -> np.ndarray:
+    """Gather per-shard (N,2) posting/witness arrays into the unsharded
+    order.
+
+    Shard doc sets are disjoint and each per-shard array is the
+    (doc, pos)-ordered subsequence of the unsharded array, so a STABLE
+    sort on the doc column alone reconstructs the unsharded array
+    element-wise (within-doc row order is preserved from the owning
+    shard)."""
+    arrs = [a for a in arrs if a.shape[0]]
+    if not arrs:
+        return _EMPTY
+    if len(arrs) == 1:
+        return arrs[0]
+    cat = np.concatenate(arrs, axis=0)
+    return cat[np.argsort(cat[:, 0], kind="stable")]
+
+
+class ShardedTextIndexSet(IndexSetLike):
+    """N document-hash shards, each a full :class:`TextIndexSet`."""
+
+    def __init__(
+        self,
+        cfg: IndexSetConfig,
+        lexicon: Lexicon,
+        n_shards: int = 4,
+        seed: int = 0,
+    ):
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        self.cfg = cfg
+        self.lexicon = lexicon
+        self.n_shards = int(n_shards)
+        # identical seed per shard: dictionaries group keys identically, so
+        # one shard-agnostic planner group_of serves the whole set
+        self.shards: List[TextIndexSet] = [
+            TextIndexSet(cfg, lexicon, seed=seed) for _ in range(n_shards)
+        ]
+        for s, shard in enumerate(self.shards):
+            for idx in shard.indexes.values():
+                idx.mgr.device.name = f"s{s}/{idx.mgr.device.name}"
+            for dev in list(shard.dict_devices.values()) + list(
+                shard.search_devices.values()
+            ):
+                dev.name = f"s{s}/{dev.name}"
+
+    # the planner/service capability view: all shards share index kinds,
+    # key packing and multi_k, so shard 0 answers every capability question
+    @property
+    def indexes(self) -> Dict[str, InvertedIndex]:
+        return self.shards[0].indexes
+
+    # ------------------------------------------------------------- building --
+    def add_documents(
+        self, tokens: np.ndarray, offsets: np.ndarray, doc0: int
+    ) -> None:
+        """Index one collection part: extract once, scatter rows by doc
+        hash, run every shard's in-place update."""
+        if self.n_shards == 1:
+            self.shards[0].add_documents(tokens, offsets, doc0)
+            return
+        maps = extract_postings(
+            self.lexicon, tokens, offsets, doc0, self.cfg.max_distance
+        )
+        if MULTI_INDEX in self.indexes:
+            maps[MULTI_INDEX] = self.indexes[MULTI_INDEX].extract_part(
+                self.lexicon, tokens, offsets, doc0
+            )
+        shard_maps: List[Dict[str, Dict[Hashable, np.ndarray]]] = [
+            {name: {} for name in maps} for _ in range(self.n_shards)
+        ]
+        for name, by_key in maps.items():
+            for key, arr in by_key.items():
+                owner = shard_of_docs(arr[:, 0], self.n_shards)
+                for s in range(self.n_shards):
+                    rows = arr[owner == s]
+                    if rows.size:
+                        shard_maps[s][name][key] = rows
+        for s, shard in enumerate(self.shards):
+            for name, index in shard.indexes.items():
+                index.add_part(shard_maps[s][name])
+
+    # -------------------------------------------------------------- queries --
+    def lookup(self, index_name: str, key: Hashable) -> np.ndarray:
+        """Whole-set lookup: scatter to every shard, gather by merge."""
+        return merge_shard_postings(
+            [shard.lookup(index_name, key) for shard in self.shards]
+        )
+
+    def reader(self, cache_bytes: int = 8 << 20):
+        """Per-shard readers behind ONE byte-budgeted posting cache
+        (namespaced by (shard, index, key) — see ``repro.search.reader``)."""
+        from repro.search.reader import ShardedIndexSetReader
+
+        return ShardedIndexSetReader(self, cache_bytes=cache_bytes)
+
+    # -------------------------------------------------------------- reports --
+    def build_io_per_shard(self) -> List[Dict[str, IOStats]]:
+        return [shard.build_io() for shard in self.shards]
+
+    def build_io(self) -> Dict[str, IOStats]:
+        return merge_io_reports(self.build_io_per_shard())
+
+    def search_io_per_shard(self) -> List[Dict[str, IOStats]]:
+        return [shard.search_io() for shard in self.shards]
+
+    def search_io(self) -> Dict[str, IOStats]:
+        return merge_io_reports(self.search_io_per_shard())
+
+    def table_rows_per_shard(self) -> List[Dict[str, Dict[str, int]]]:
+        return [shard.table_rows() for shard in self.shards]
+
+    def table_rows(self) -> Dict[str, Dict[str, int]]:
+        rows: Dict[str, Dict[str, int]] = {}
+        for shard_rows in self.table_rows_per_shard():
+            for name, row in shard_rows.items():
+                agg = rows.setdefault(name, {k: 0 for k in row})
+                for k, v in row.items():
+                    agg[k] += v
+        return rows
+
+    def census(self) -> Dict[str, Dict[str, int]]:
+        out: Dict[str, Dict[str, int]] = {}
+        for shard in self.shards:
+            for name, counters in shard.census().items():
+                agg = out.setdefault(name, {})
+                for k, v in counters.items():
+                    agg[k] = agg.get(k, 0) + v
+        return out

@@ -26,6 +26,7 @@ conflated.
 
 from __future__ import annotations
 
+import abc
 import dataclasses
 from typing import Dict, Hashable, Optional
 
@@ -67,7 +68,62 @@ class IndexSetConfig:
     multi_k: Optional[int] = 3
 
 
-class TextIndexSet:
+class IndexSetLike(abc.ABC):
+    """The capability surface the read stack (``repro.search``) consumes.
+
+    Both the single-substrate :class:`TextIndexSet` and the sharded
+    :class:`~repro.core.sharded_set.ShardedTextIndexSet` implement it, so
+    every consumer — readers, planner glue, ``SearchService``, benchmarks —
+    is substrate-agnostic.  Implementations expose:
+
+      * ``cfg`` / ``lexicon``     — configuration and word classification,
+      * ``indexes``               — a capability view mapping index name to
+        an :class:`InvertedIndex` (for a sharded set this is one shard's
+        view: every shard shares the same index kinds, key packing and
+        ``multi_k``, which is all the planner reads from it),
+      * ``add_documents``         — index one collection part in place,
+      * ``lookup``                — whole-set posting lookup (merged across
+        shards for a sharded set), charging search-device I/O,
+      * ``reader()``              — the read-only snapshot view feeding
+        :class:`~repro.search.service.SearchService`,
+      * ``build_io``/``search_io``/``census`` — the paper's I/O tables.
+    """
+
+    cfg: IndexSetConfig
+    lexicon: Lexicon
+    # index-name → writer view (shard-representative when sharded); an
+    # attribute/property in implementations, not enforced as abstract so
+    # TextIndexSet can keep it a plain instance dict
+    indexes: Dict[str, InvertedIndex]
+
+    @abc.abstractmethod
+    def add_documents(
+        self, tokens: np.ndarray, offsets: np.ndarray, doc0: int
+    ) -> None:
+        """Index one collection part (build or in-place update)."""
+
+    @abc.abstractmethod
+    def lookup(self, index_name: str, key: Hashable) -> np.ndarray:
+        """Posting lookup charging I/O to search devices."""
+
+    @abc.abstractmethod
+    def reader(self, cache_bytes: int = 8 << 20):
+        """Read-only snapshot view with a posting-list LRU cache."""
+
+    @abc.abstractmethod
+    def build_io(self) -> Dict[str, IOStats]:
+        """Construction I/O per index (aggregate when sharded)."""
+
+    @abc.abstractmethod
+    def search_io(self) -> Dict[str, IOStats]:
+        """Search I/O per index (aggregate when sharded)."""
+
+    @abc.abstractmethod
+    def census(self) -> Dict[str, Dict[str, int]]:
+        """Stream-state census per index (aggregate when sharded)."""
+
+
+class TextIndexSet(IndexSetLike):
     def __init__(self, cfg: IndexSetConfig, lexicon: Lexicon, seed: int = 0):
         self.cfg = cfg
         self.lexicon = lexicon

@@ -7,8 +7,10 @@ Layering (DESIGN_SEARCH.md):
   * :mod:`repro.search.plan`    — typed ``Query → QueryPlan`` routing over
     the four lookup paths (the paper's three + the multi-component
     k-word route), batched and vectorized,
-  * :mod:`repro.search.service` — ``SearchService.search_batch``: grouped
-    fetches + bucketed JAX/Pallas window joins,
+  * :mod:`repro.search.service` — ``SearchService.search_batch``: the
+    plan → scatter-fetch → join → gather pipeline (pipelined reader
+    prefetch, bucketed JAX/Pallas window joins, lossless per-shard
+    gather over a sharded substrate),
   * :mod:`repro.search.join`    — the interchangeable join backends.
 """
 
@@ -41,6 +43,7 @@ from repro.search.reader import (
     IndexReader,
     IndexSetReader,
     PostingCache,
+    ShardedIndexSetReader,
 )
 from repro.search.service import SearchService
 
@@ -69,5 +72,6 @@ __all__ = [
     "IndexReader",
     "IndexSetReader",
     "PostingCache",
+    "ShardedIndexSetReader",
     "SearchService",
 ]

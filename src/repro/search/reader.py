@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import OrderedDict
-from typing import Dict, Hashable, Optional, Tuple
+from typing import Dict, Hashable, List, Optional, Tuple
 
 import numpy as np
 
@@ -33,7 +33,8 @@ from repro.core.io_sim import BlockDevice, IOStats
 class CacheStats:
     hits: int = 0
     misses: int = 0
-    evictions: int = 0
+    evictions: int = 0      # capacity pressure: LRU victims only
+    invalidations: int = 0  # correctness drops: writer-generation changes
     bytes_used: int = 0
 
     @property
@@ -97,10 +98,17 @@ class PostingCache:
             self.stats.evictions += 1
 
     def drop_index(self, index_name: str) -> None:
-        """Invalidate every entry of one index (writer advanced)."""
+        """Invalidate every entry of one index namespace (writer advanced).
+
+        Counted as ``invalidations`` — NOT ``evictions``, which stay a pure
+        capacity-pressure signal — and each entry reclaims the same
+        ``_charge`` (nbytes with the ``MIN_CHARGE`` floor) it was admitted
+        at, so ``bytes_used`` returns exactly to its pre-admission level
+        even for floor-charged (e.g. negative-cache) entries."""
         stale = [k for k in self._map if k[0] == index_name]
         for k in stale:
             self.stats.bytes_used -= self._charge(self._map.pop(k))
+            self.stats.invalidations += 1
 
     def __len__(self) -> int:
         return len(self._map)
@@ -118,12 +126,17 @@ class IndexReader:
         index: InvertedIndex,
         device: Optional[BlockDevice] = None,
         cache: Optional[PostingCache] = None,
+        cache_ns: Optional[str] = None,
     ):
         self.index = index
         self.device = device if device is not None else BlockDevice(
             cluster_size=index.cfg.cluster_size, name=f"{index.name}-read"
         )
         self.cache = cache
+        # cache namespace: defaults to the index name; a sharded reader
+        # passes "s{shard}:{name}" so the shared cache is keyed by
+        # (shard, index, key) and shards can never answer for each other
+        self.cache_ns = cache_ns if cache_ns is not None else index.name
         self._generation = index.n_parts
 
     # ------------------------------------------------------------ lookups --
@@ -131,7 +144,7 @@ class IndexReader:
         if self.index.n_parts != self._generation:
             self.refresh()
         if self.cache is not None:
-            hit = self.cache.get(self.index.name, key)
+            hit = self.cache.get(self.cache_ns, key)
             if hit is not None:
                 return hit
         posts = self.index.lookup(key, device=self.device)
@@ -140,7 +153,7 @@ class IndexReader:
         # must fail loudly instead of corrupting other queries' results
         posts.flags.writeable = False
         if self.cache is not None:
-            self.cache.put(self.index.name, key, posts)
+            self.cache.put(self.cache_ns, key, posts)
         return posts
 
     def lookup_ops(self, key: Hashable) -> int:
@@ -152,9 +165,15 @@ class IndexReader:
 
     # ------------------------------------------------------------- state --
     def refresh(self) -> None:
-        """Re-snapshot after the writer indexed more parts."""
+        """Re-snapshot after the writer indexed more parts.
+
+        A no-op when the writer's generation is unchanged: cached postings
+        are still valid, and dropping them would turn every periodic
+        refresh sweep into a full cold restart of the posting cache."""
+        if self.index.n_parts == self._generation:
+            return
         if self.cache is not None:
-            self.cache.drop_index(self.index.name)
+            self.cache.drop_index(self.cache_ns)
         self._generation = self.index.n_parts
 
     def io_stats(self) -> IOStats:
@@ -168,6 +187,10 @@ class IndexSetReader:
     ``TextIndexSet.search_io()`` reporting keeps aggregating reader
     traffic.
     """
+
+    # the executor's scatter surface: an unsharded reader is the 1-shard
+    # degenerate case, so SearchService has exactly one fetch/gather path
+    n_shards = 1
 
     def __init__(self, index_set, cache_bytes: int = 8 << 20):
         self.index_set = index_set
@@ -183,6 +206,11 @@ class IndexSetReader:
     def lookup(self, index_name: str, key: Hashable) -> np.ndarray:
         return self.readers[index_name].lookup(key)
 
+    def lookup_shard(self, shard: int, index_name: str, key: Hashable) -> np.ndarray:
+        if shard != 0:
+            raise IndexError(f"unsharded reader has one shard, got {shard}")
+        return self.readers[index_name].lookup(key)
+
     def group_of(self, index_name: str, key: Hashable) -> int:
         return self.readers[index_name].group_of(key)
 
@@ -192,6 +220,84 @@ class IndexSetReader:
 
     def io_stats(self) -> Dict[str, IOStats]:
         return {name: r.io_stats() for name, r in self.readers.items()}
+
+    @property
+    def cache_stats(self) -> Optional[CacheStats]:
+        return self.cache.stats if self.cache is not None else None
+
+
+class ShardedIndexSetReader:
+    """Per-shard :class:`IndexReader` fabric over a
+    :class:`~repro.core.sharded_set.ShardedTextIndexSet`.
+
+    One byte-budgeted :class:`PostingCache` is shared by ALL shards'
+    readers, namespaced ``s{shard}:{index}`` so entries are keyed by
+    (shard, index, key): hot keys of a hot shard may claim most of the
+    budget (global LRU), but shards can never answer for each other, and
+    a single shard's writer advancing invalidates ONLY that shard's
+    entries.  Each per-shard reader charges the owning shard's search
+    devices, so ``ShardedTextIndexSet.search_io_per_shard()`` keeps
+    reporting true per-shard read traffic.
+    """
+
+    def __init__(self, sharded_set, cache_bytes: int = 8 << 20):
+        self.index_set = sharded_set
+        self.cache = PostingCache(cache_bytes) if cache_bytes > 0 else None
+        self.shard_readers: List[Dict[str, IndexReader]] = [
+            {
+                name: IndexReader(
+                    idx,
+                    device=shard.search_devices[name],
+                    cache=self.cache,
+                    cache_ns=f"s{s}:{name}",
+                )
+                for name, idx in shard.indexes.items()
+            }
+            for s, shard in enumerate(sharded_set.shards)
+        ]
+        self.lexicon = sharded_set.lexicon
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.shard_readers)
+
+    # ------------------------------------------------------------ lookups --
+    def lookup_shard(self, shard: int, index_name: str, key: Hashable) -> np.ndarray:
+        """One shard's posting subset for a key (the scatter primitive)."""
+        return self.shard_readers[shard][index_name].lookup(key)
+
+    def lookup(self, index_name: str, key: Hashable) -> np.ndarray:
+        """Whole-set lookup: scatter to every shard, gather by merge."""
+        from repro.core.sharded_set import merge_shard_postings
+
+        return merge_shard_postings(
+            [
+                readers[index_name].lookup(key)
+                for readers in self.shard_readers
+            ]
+        )
+
+    def group_of(self, index_name: str, key: Hashable) -> int:
+        # dictionary grouping is shard-invariant (identical seeds): the
+        # planner stays shard-agnostic by asking shard 0
+        return self.shard_readers[0][index_name].group_of(key)
+
+    # ------------------------------------------------------------- state --
+    def refresh(self) -> None:
+        for readers in self.shard_readers:
+            for r in readers.values():
+                r.refresh()
+
+    def io_stats_per_shard(self) -> List[Dict[str, IOStats]]:
+        return [
+            {name: r.io_stats() for name, r in readers.items()}
+            for readers in self.shard_readers
+        ]
+
+    def io_stats(self) -> Dict[str, IOStats]:
+        from repro.core.sharded_set import merge_io_reports
+
+        return merge_io_reports(self.io_stats_per_shard())
 
     @property
     def cache_stats(self) -> Optional[CacheStats]:

@@ -1,30 +1,49 @@
-"""Batched proximity-search execution over planned queries.
+"""Batched proximity-search execution: plan → scatter-fetch → join → gather.
 
-``SearchService`` is the read-side query processor: it plans a batch of
-queries (:mod:`repro.search.plan`), fetches every unique posting list
-once through the reader layer (:mod:`repro.search.reader`) in
-(index, dictionary-group) order so group-mates amortize dictionary
-visits, and then runs the ordinary-route window joins through one of
-the join backends (:mod:`repro.search.join`).
+``SearchService`` is the read-side query processor, restructured as four
+explicit stages so the same code path serves an unsharded
+:class:`~repro.core.text_index.TextIndexSet` (the 1-shard degenerate
+case) and a :class:`~repro.core.sharded_set.ShardedTextIndexSet`:
 
-The ``jax`` backend is the batched fast path: join jobs from the whole
-batch are padded into power-of-two ``(B, N, M)`` buckets and each bucket
-runs as ONE jit-compiled vmapped kernel launch — a batch of 64 queries
-costs a handful of launches instead of 64+ per-query dispatches.
-``pallas`` routes each join through the TPU intersect kernel's doc-level
-prefilter.  All backends return results element-wise identical to the
-numpy oracle.
+  1. **plan** — the batch is planned ONCE (:mod:`repro.search.plan`);
+     the lexicon/planner layer is shard-agnostic because document-hash
+     sharding never changes which (index, key) lookups a query needs.
+  2. **scatter-fetch** — the plan's unique lookups are walked in
+     (index, dictionary-group) waves so group-mates amortize dictionary
+     visits; every lookup is scattered to all shards of the reader.  A
+     single-worker *prefetch pipeline* overlaps the NEXT wave's device
+     fetches with the CURRENT wave's host-side join work: as soon as a
+     query's last lookup lands, its phrase-chain / single-lookup result
+     is finalized on the main thread while the worker is already reading
+     the next (index, group) wave.  (One worker means exactly one thread
+     ever touches the readers and the shared posting cache.)
+  3. **join** — ordinary-route window joins from ALL (query, shard) jobs
+     are executed together: with the ``jax`` backend they land in the
+     same power-of-two ``(B, N, M)`` buckets, so sharding *increases*
+     bucket occupancy (bigger launches) instead of multiplying kernel
+     dispatches.  ``pallas`` routes each join through the TPU intersect
+     kernel's doc-level prefilter; ``numpy`` is the exact host oracle.
+  4. **gather** — per-shard results concatenate losslessly: shard doc
+     sets are disjoint and per-shard arrays are (doc, pos)-ordered
+     subsequences, so a stable merge on the doc column reconstructs the
+     unsharded result element-wise.
+
+All backends and all shard counts return results element-wise identical
+to the unsharded numpy oracle.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
+from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 import jax.numpy as jnp
 
+from repro.core.sharded_set import merge_shard_postings
 from repro.search.join import (
     JOIN_BACKENDS,
     _jax_dtype_for,
@@ -37,17 +56,21 @@ from repro.search.join import (
 from repro.search.plan import (
     ROUTE_MULTI,
     ROUTE_ORDINARY,
+    KeyLookup,
     MultiKeySpec,
     Query,
     QueryPlan,
     QueryResult,
     plan_batch,
 )
-from repro.search.reader import IndexSetReader
+from repro.search.reader import IndexSetReader, ShardedIndexSetReader
 
 _EMPTY = np.zeros((0, 2), dtype=np.int64)
 
 QueryLike = Union[Query, Sequence[int]]
+
+# per-shard posting lists of one fetched (index, key), in shard order
+ShardPosts = List[np.ndarray]
 
 
 def _as_query(q: QueryLike) -> Query:
@@ -57,10 +80,15 @@ def _as_query(q: QueryLike) -> Query:
 
 
 class SearchService:
-    """Planned, batched query execution over a :class:`TextIndexSet`.
+    """Planned, batched query execution over a (possibly sharded) index set.
 
-    ``backend`` is ``"numpy"`` | ``"jax"`` | ``"pallas"`` or any callable
-    ``join(a, b, window) -> rows of a`` (executed per pair).
+    ``source`` is a ``TextIndexSet``/``ShardedTextIndexSet`` (a reader is
+    built over it) or an existing ``IndexSetReader``/
+    ``ShardedIndexSetReader``.  ``backend`` is ``"numpy"`` | ``"jax"`` |
+    ``"pallas"`` or any callable ``join(a, b, window) -> rows of a``
+    (executed per (query, shard) pair).  ``prefetch=False`` disables the
+    pipelined fetch worker (pure in-order fetching — same results, used
+    by the equivalence tests as the sequential oracle).
     """
 
     def __init__(
@@ -70,14 +98,19 @@ class SearchService:
         backend: Union[str, Callable] = "numpy",
         cache_bytes: int = 8 << 20,
         use_multi: bool = True,
+        prefetch: bool = True,
     ):
-        if isinstance(source, IndexSetReader):
+        if isinstance(source, (IndexSetReader, ShardedIndexSetReader)):
             self.reader = source
         else:
-            self.reader = IndexSetReader(source, cache_bytes=cache_bytes)
+            self.reader = source.reader(cache_bytes=cache_bytes)
         self.index_set = self.reader.index_set
         self.lexicon = self.reader.lexicon
         self.window = min(window, self.index_set.cfg.max_distance)
+        self.prefetch = prefetch
+        # observability for the pipeline stage: wave/overlap counters and
+        # per-shard fetch seconds of the LAST search_batch call
+        self.last_trace: Dict[str, object] = {}
         # multi-component route: available when the set built the multi
         # index and the caller did not opt out (use_multi=False forces
         # phrase queries down the ordinary path — the benchmark baseline)
@@ -94,6 +127,10 @@ class SearchService:
                 f"unknown backend {backend!r}; expected one of "
                 f"{sorted(JOIN_BACKENDS)} or a callable"
             )
+
+    @property
+    def n_shards(self) -> int:
+        return self.reader.n_shards
 
     # ------------------------------------------------------------ planning --
     def plan(self, queries: Sequence[QueryLike]) -> QueryPlan:
@@ -120,31 +157,128 @@ class SearchService:
         return self.search_batch([q])[0]
 
     def search_batch(self, queries: Sequence[QueryLike]) -> List[QueryResult]:
-        plan = self.plan(queries)
-        posts = self._fetch(plan)
+        plan = self.plan(queries)                               # stage 1
         results: List[Optional[QueryResult]] = [None] * len(plan.queries)
-        ordinary: List[Tuple[int, List[np.ndarray]]] = []
+        ordinary: List[Tuple[int, List[ShardPosts]]] = []
+        posts: Dict[Tuple[str, int], ShardPosts] = {}
+
+        # countdown of unlanded lookups per query, so each query finalizes
+        # the moment its last wave lands (overlapping the next fetch wave)
+        pending = [len({(lk.index, lk.key) for lk in pq.lookups})
+                   for pq in plan.queries]
+        waiting: Dict[Tuple[str, int], List[int]] = {}
         for i, pq in enumerate(plan.queries):
-            fetched = [posts[(lk.index, lk.key)] for lk in pq.lookups]
-            log = [(lk.index, lk.key) for lk in pq.lookups]
-            scanned = sum(f.shape[0] for f in fetched)
-            if pq.route == ROUTE_ORDINARY and not pq.query.phrase:
-                ordinary.append((i, fetched))
-                results[i] = QueryResult(_EMPTY[:, 0], _EMPTY, log, scanned,
-                                         pq.route)
-            elif pq.route == ROUTE_MULTI or pq.route == ROUTE_ORDINARY:
-                # phrase reconstruction: lookup j's records must sit at
-                # start+j (multi: k-gram at word offset j; ordinary
-                # phrase: word j itself) — staged exact host joins
-                acc = self._phrase_chain(fetched)
-                results[i] = QueryResult(np.unique(acc[:, 0]), acc, log,
-                                         scanned, pq.route)
-            else:
-                p = fetched[0]
-                results[i] = QueryResult(np.unique(p[:, 0]), p, log, scanned,
-                                         pq.route)
-        self._execute_ordinary(plan, ordinary, results)
+            for lk in pq.lookups:
+                waiting.setdefault((lk.index, lk.key), [])
+                if i not in waiting[(lk.index, lk.key)]:
+                    waiting[(lk.index, lk.key)].append(i)
+
+        def on_landed(idents: List[Tuple[str, int]]) -> int:
+            done = 0
+            for ident in idents:
+                for qi in waiting.get(ident, ()):
+                    pending[qi] -= 1
+                    if pending[qi] == 0:
+                        self._finalize(plan, qi, posts, results, ordinary)
+                        done += 1
+            return done
+
+        self._scatter_fetch(plan, posts, on_landed)             # stage 2
+        self._execute_ordinary(plan, ordinary, results)         # stages 3+4
         return results
+
+    # --------------------------------------------- stage 2: scatter-fetch --
+    def _scatter_fetch(
+        self,
+        plan: QueryPlan,
+        posts: Dict[Tuple[str, int], ShardPosts],
+        on_landed: Callable[[List[Tuple[str, int]]], int],
+    ) -> None:
+        """Fetch each unique (index, key) once from every shard, walking
+        (index, group) waves in order so lookups of the same dictionary
+        group run back to back.  With ``prefetch`` on, wave ``i+1``'s
+        device reads run on a worker thread while wave ``i``'s completed
+        queries finalize (host joins) on this thread."""
+        S = self.n_shards
+        shard_s = [0.0] * S
+        trace = {"waves": 0, "prefetched_waves": 0,
+                 "overlapped_finalizes": 0, "shard_fetch_s": shard_s}
+        waves = [plan.grouped[k] for k in sorted(plan.grouped)]
+        trace["waves"] = len(waves)
+
+        def fetch_wave(wave: List[KeyLookup]) -> List[Tuple[Tuple[str, int], ShardPosts]]:
+            out = []
+            for lk in wave:
+                per_shard: ShardPosts = []
+                for s in range(S):
+                    t0 = time.perf_counter()
+                    per_shard.append(
+                        self.reader.lookup_shard(s, lk.index, lk.key)
+                    )
+                    shard_s[s] += time.perf_counter() - t0
+                out.append(((lk.index, lk.key), per_shard))
+            return out
+
+        def land(fetched, overlapping: bool) -> None:
+            for ident, per_shard in fetched:
+                posts[ident] = per_shard
+            n = on_landed([ident for ident, _ in fetched])
+            if overlapping:
+                trace["overlapped_finalizes"] += n
+
+        if not self.prefetch or len(waves) <= 1:
+            for wave in waves:
+                land(fetch_wave(wave), overlapping=False)
+        else:
+            # exactly ONE worker: the readers and the shared posting cache
+            # are only ever touched from the worker thread during the
+            # pipeline, while this thread runs the finalize joins
+            with ThreadPoolExecutor(max_workers=1) as pool:
+                fut = pool.submit(fetch_wave, waves[0])
+                for i in range(len(waves)):
+                    fetched = fut.result()
+                    overlapping = i + 1 < len(waves)
+                    if overlapping:
+                        fut = pool.submit(fetch_wave, waves[i + 1])
+                        trace["prefetched_waves"] += 1
+                    land(fetched, overlapping)
+        self.last_trace = trace
+
+    # --------------------------------------- per-query assembly + gather --
+    def _finalize(
+        self,
+        plan: QueryPlan,
+        qi: int,
+        posts: Dict[Tuple[str, int], ShardPosts],
+        results: List[Optional[QueryResult]],
+        ordinary: List[Tuple[int, List[ShardPosts]]],
+    ) -> None:
+        """All lookups of query ``qi`` have landed: finalize every route
+        except the ordinary window join, which is deferred so all
+        (query, shard) jobs share the stage-3 buckets."""
+        pq = plan.queries[qi]
+        fetched = [posts[(lk.index, lk.key)] for lk in pq.lookups]
+        log = [(lk.index, lk.key) for lk in pq.lookups]
+        scanned = sum(a.shape[0] for per_shard in fetched for a in per_shard)
+        if pq.route == ROUTE_ORDINARY and not pq.query.phrase:
+            ordinary.append((qi, fetched))
+            results[qi] = QueryResult(_EMPTY[:, 0], _EMPTY, log, scanned,
+                                      pq.route)
+        elif pq.route == ROUTE_MULTI or pq.route == ROUTE_ORDINARY:
+            # phrase reconstruction: lookup j's records must sit at
+            # start+j (multi: k-gram at word offset j; ordinary phrase:
+            # word j itself) — staged exact host joins, chained per shard
+            # (disjoint doc sets) and gathered by stable doc merge
+            acc = merge_shard_postings([
+                self._phrase_chain([f[s] for f in fetched])
+                for s in range(self.n_shards)
+            ])
+            results[qi] = QueryResult(np.unique(acc[:, 0]), acc, log,
+                                      scanned, pq.route)
+        else:
+            p = merge_shard_postings(fetched[0])
+            results[qi] = QueryResult(np.unique(p[:, 0]), p, log, scanned,
+                                      pq.route)
 
     @staticmethod
     def _phrase_chain(fetched: List[np.ndarray]) -> np.ndarray:
@@ -153,35 +287,35 @@ class SearchService:
             acc = numpy_phrase_join(acc, nxt, dist)
         return acc
 
-    def _fetch(self, plan: QueryPlan) -> Dict[Tuple[str, int], np.ndarray]:
-        """Fetch each unique (index, key) once, walking (index, group) in
-        order so lookups of the same dictionary group run back to back."""
-        out: Dict[Tuple[str, int], np.ndarray] = {}
-        for index, _group in sorted(plan.grouped):
-            for lk in plan.grouped[(index, _group)]:
-                out[(lk.index, lk.key)] = self.reader.lookup(lk.index, lk.key)
-        return out
-
-    # ordinary route: staged window joins -----------------------------------
-    def _execute_ordinary(self, plan, jobs, results) -> None:
-        # state per job: accumulator + posting lists still to join
-        accs: Dict[int, np.ndarray] = {}
-        rest: Dict[int, List[np.ndarray]] = {}
-        for i, fetched in jobs:
-            accs[i] = fetched[0]
-            rest[i] = fetched[1:]
+    # ---------------------- stage 3: bucketed window joins, stage 4: gather --
+    def _execute_ordinary(
+        self,
+        plan: QueryPlan,
+        jobs: List[Tuple[int, List[ShardPosts]]],
+        results: List[Optional[QueryResult]],
+    ) -> None:
+        # state per (query, shard) job: accumulator + lists still to join.
+        # Every shard of every query joins in the same rounds, so one jax
+        # bucket holds jobs from the whole batch AND all shards.
+        S = self.n_shards
+        accs: Dict[Tuple[int, int], np.ndarray] = {}
+        rest: Dict[Tuple[int, int], List[np.ndarray]] = {}
+        for qi, fetched in jobs:
+            for s in range(S):
+                accs[(qi, s)] = fetched[0][s]
+                rest[(qi, s)] = [f[s] for f in fetched[1:]]
         while any(rest.values()):
-            round_ids = [i for i in accs if rest[i]]
+            round_ids = [k for k in accs if rest[k]]
             pairs = [
-                (accs[i], rest[i].pop(0), plan.queries[i].window)
-                for i in round_ids
+                (accs[k], rest[k].pop(0), plan.queries[k[0]].window)
+                for k in round_ids
             ]
-            for i, joined in zip(round_ids, self._join_many(pairs)):
-                accs[i] = joined
-        for i, _ in jobs:
-            acc = accs[i]
-            r = results[i]
-            results[i] = QueryResult(
+            for k, joined in zip(round_ids, self._join_many(pairs)):
+                accs[k] = joined
+        for qi, _ in jobs:
+            acc = merge_shard_postings([accs[(qi, s)] for s in range(S)])
+            r = results[qi]
+            results[qi] = QueryResult(
                 np.unique(acc[:, 0]), acc, r.lookups, r.postings_scanned,
                 r.route,
             )

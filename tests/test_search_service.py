@@ -187,6 +187,52 @@ def test_per_query_window_clamped_to_max_distance(small_world):
     assert np.array_equal(wide.witnesses, default.witnesses)
 
 
+def test_refresh_noop_preserves_cache(small_world):
+    """Regression: refresh() used to drop every cached posting even when
+    the writer's generation was unchanged, turning periodic refresh
+    sweeps into full cache cold-starts.  A no-op refresh must keep cache
+    hits alive and charge zero new device I/O."""
+    lex, ts = small_world
+    reader = ts.reader()
+    key = next(iter(ts.indexes["known"].dict.entries))
+    first = reader.lookup("known", key)
+    io0 = {n: s.total_ops for n, s in reader.io_stats().items()}
+    reader.refresh()  # no writer advance: must be a no-op
+    assert len(reader.cache) > 0
+    assert reader.cache.stats.invalidations == 0
+    h0 = reader.cache.stats.hits
+    again = reader.lookup("known", key)
+    assert np.array_equal(again, first)
+    assert not again.flags.writeable  # served from the immutable cache slot
+    assert reader.cache.stats.hits == h0 + 1
+    assert {n: s.total_ops for n, s in reader.io_stats().items()} == io0
+
+
+def test_drop_index_counts_invalidations_and_reclaims_floor():
+    """Regression: drop_index used to shrink the cache silently — no
+    stats trace — which skewed eviction-rate dashboards.  Invalidations
+    are counted separately from capacity evictions, and every dropped
+    entry reclaims the same MIN_CHARGE-floored charge it was admitted
+    at (bytes_used returns exactly to zero, even for floor-charged
+    negative-cache entries)."""
+    cache = PostingCache(budget_bytes=1 << 16)
+    empty = np.zeros((0, 2), np.int64)      # floor-charged entries
+    small = np.zeros((4, 2), np.int64)      # real-charge entries
+    for k in range(3):
+        cache.put("a", k, empty)
+        cache.put("b", k, small)
+    assert cache.stats.bytes_used == 3 * cache.MIN_CHARGE + 3 * small.nbytes
+    cache.drop_index("a")
+    assert cache.stats.invalidations == 3
+    assert cache.stats.evictions == 0, "drops are not capacity evictions"
+    assert cache.stats.bytes_used == 3 * small.nbytes
+    assert len(cache) == 3
+    cache.drop_index("b")
+    assert cache.stats.invalidations == 6
+    assert cache.stats.bytes_used == 0
+    assert len(cache) == 0
+
+
 def test_negative_cache_entries_stay_bounded():
     cache = PostingCache(budget_bytes=PostingCache.MIN_CHARGE * 8)
     empty = np.zeros((0, 2), np.int64)

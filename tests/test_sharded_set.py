@@ -1,0 +1,341 @@
+"""Sharded index substrate: document-hash builds partition the unsharded
+postings exactly, scatter/gather serving is element-wise identical to the
+unsharded set across all four planner routes and all three join backends,
+the shared posting cache is namespaced by (shard, index, key), and the
+pipelined prefetch stage changes scheduling — never results."""
+
+import functools
+
+import numpy as np
+import pytest
+
+from tests._hypothesis_compat import given, settings, strategies as st
+
+from repro.core.lexicon import FREQUENT, OTHER, STOP, make_lexicon
+from repro.core.sharded_set import (
+    ShardedTextIndexSet,
+    merge_shard_postings,
+    shard_of,
+    shard_of_docs,
+)
+from repro.core.strategies import StrategyConfig
+from repro.core.text_index import IndexSetConfig, IndexSetLike, TextIndexSet
+from repro.data.corpus import generate_part
+from repro.search import (
+    ROUTE_MULTI,
+    ROUTE_ORDINARY,
+    ROUTE_STOPSEQ,
+    ROUTE_WV,
+    Query,
+    SearchService,
+    ShardedIndexSetReader,
+)
+from tests.test_search_service import mixed_queries, words_of_class
+
+BACKENDS = ("numpy", "jax", "pallas")
+SHARD_COUNTS = (1, 2, 4)
+
+
+def _cfg(**kw):
+    return IndexSetConfig(
+        strategy=StrategyConfig.set2(cluster_size=1024),
+        fl_area_clusters=64,
+        **kw,
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _worlds():
+    """One small two-part collection indexed unsharded and at every shard
+    count (cached: the substrates are immutable across tests that only
+    read)."""
+    lex = make_lexicon(
+        n_words=3000, n_lemmas=1300, n_stop=20, n_frequent=120, seed=40
+    )
+    parts = [
+        generate_part(lex, n_docs=60, avg_doc_len=120, doc0=0, seed=60),
+        generate_part(lex, n_docs=60, avg_doc_len=120, doc0=60, seed=61),
+    ]
+    ts = TextIndexSet(_cfg(), lex, seed=0)
+    sharded = {
+        n: ShardedTextIndexSet(_cfg(), lex, n_shards=n, seed=0)
+        for n in SHARD_COUNTS
+    }
+    for s in [ts] + list(sharded.values()):
+        s.add_documents(*parts[0], 0)
+        s.add_documents(*parts[1], 60)
+    toks = parts[0][0]
+    pools = {c: words_of_class(lex, c) for c in (STOP, FREQUENT, OTHER)}
+    return lex, toks, pools, ts, sharded
+
+
+@functools.lru_cache(maxsize=None)
+def _services():
+    """Reference numpy service over the unsharded set + one service per
+    (shard count, backend) over the sharded substrates."""
+    lex, toks, pools, ts, sharded = _worlds()
+    ref = SearchService(ts, window=3, backend="numpy")
+    svcs = {
+        (n, b): SearchService(sharded[n], window=3, backend=b)
+        for n in SHARD_COUNTS
+        for b in BACKENDS
+    }
+    return ref, svcs
+
+
+# ----------------------------------------------------------- the substrate --
+def test_shard_hash_deterministic_and_in_range():
+    docs = np.arange(5000, dtype=np.int64)
+    for n in SHARD_COUNTS:
+        vec = shard_of_docs(docs, n)
+        assert vec.min() >= 0 and vec.max() < n
+        for d in (0, 1, 2, 63, 64, 4999):
+            assert shard_of(d, n) == vec[d]
+        if n > 1:
+            # the multiplicative mix must not starve any shard on the
+            # contiguous doc-id ranges real collections produce
+            counts = np.bincount(vec, minlength=n)
+            assert counts.min() > 0
+
+
+def test_sharded_set_implements_index_set_interface():
+    _, _, _, ts, sharded = _worlds()
+    assert isinstance(ts, IndexSetLike)
+    for sts in sharded.values():
+        assert isinstance(sts, IndexSetLike)
+        assert sts.cfg is ts.cfg or sts.cfg == ts.cfg
+        assert set(sts.indexes) == set(ts.indexes)
+
+
+def test_sharded_build_partitions_unsharded_postings():
+    """Every key's per-shard posting lists are exactly the doc-hash row
+    subsets of the unsharded list, and their merge reconstructs it."""
+    _, _, _, ts, sharded = _worlds()
+    for n, sts in sharded.items():
+        for name, idx in ts.indexes.items():
+            keys = list(idx.dict.entries)[:25]
+            assert keys, name
+            for key in keys:
+                ref = idx.lookup(key)
+                per_shard = [sh.indexes[name].lookup(key)
+                             for sh in sts.shards]
+                owner = shard_of_docs(ref[:, 0], n)
+                for s, arr in enumerate(per_shard):
+                    assert np.array_equal(arr, ref[owner == s]), (n, name, key)
+                assert np.array_equal(merge_shard_postings(per_shard), ref)
+
+
+def test_whole_set_lookup_merges_across_shards():
+    _, _, _, ts, sharded = _worlds()
+    key = next(iter(ts.indexes["known"].dict.entries))
+    ref = ts.indexes["known"].lookup(key)
+    for sts in sharded.values():
+        assert np.array_equal(sts.lookup("known", key), ref)
+
+
+def test_per_shard_io_reports_sum_to_aggregate():
+    _, _, _, _, sharded = _worlds()
+    sts = sharded[4]
+    per_shard = sts.build_io_per_shard()
+    assert len(per_shard) == 4
+    agg = sts.build_io()
+    for name in sts.indexes:
+        total = sum(d[name].total_bytes for d in per_shard)
+        ops = sum(d[name].total_ops for d in per_shard)
+        assert agg[name].total_bytes == total > 0
+        assert agg[name].total_ops == ops > 0
+    rows = sts.table_rows()
+    by_shard = sts.table_rows_per_shard()
+    for name, row in rows.items():
+        for col, v in row.items():
+            assert v == sum(r[name][col] for r in by_shard)
+
+
+# --------------------------------------------- scatter/gather equivalence --
+def _spec_to_query(spec, toks, pools):
+    kind, i, j, l, tpos, win, ph = spec
+    stop, freq, other = pools[STOP], pools[FREQUENT], pools[OTHER]
+    window = win if ph == 0 else None
+    if kind == 0:
+        return Query((stop[i], stop[j]), window)
+    if kind == 1:
+        return Query((stop[i], stop[j], stop[l]), window)
+    if kind == 2:
+        return Query((freq[i], other[j]), window)
+    if kind == 3:
+        return Query((other[i], other[j], other[l]), window)
+    # phrase queries lifted from the real token stream (so they hit)
+    L = 3 + (kind == 5) * (1 + l % 2)  # 3, 4 or 5 words
+    s = tpos % (toks.shape[0] - L)
+    return Query(tuple(int(t) for t in toks[s : s + L]), phrase=True)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    st.lists(
+        st.tuples(
+            st.integers(0, 5),        # query kind
+            st.integers(0, 11),       # word pool picks
+            st.integers(0, 11),
+            st.integers(0, 11),
+            st.integers(0, 100_000),  # phrase anchor in the token stream
+            st.integers(1, 3),        # window
+            st.integers(0, 1),        # phrase-kind randomizer
+        ),
+        min_size=0,
+        max_size=8,
+    ),
+)
+def test_sharded_equivalence_all_routes_all_backends(specs):
+    """Property: ShardedTextIndexSet(n_shards ∈ {1,2,4}) returns
+    element-wise identical QueryResults to the unsharded set across all
+    four routes and all three join backends.  Each batch carries a fixed
+    core hitting every route plus the drawn random queries."""
+    lex, toks, pools, ts, _ = _worlds()
+    ref_svc, svcs = _services()
+    stop, freq, other = pools[STOP], pools[FREQUENT], pools[OTHER]
+    core = [
+        Query((stop[0], stop[1])),
+        Query((stop[2], stop[3], stop[4])),
+        Query((freq[0], other[0])),
+        Query((other[1], other[2])),
+        Query(tuple(int(t) for t in toks[5:8]), phrase=True),
+        Query(tuple(int(t) for t in toks[9:13]), phrase=True),
+    ]
+    queries = core + [_spec_to_query(s, toks, pools) for s in specs]
+    ref = ref_svc.search_batch(queries)
+    routes = {r.route for r in ref}
+    assert routes >= {ROUTE_STOPSEQ, ROUTE_WV, ROUTE_ORDINARY, ROUTE_MULTI}
+    for (n, backend), svc in svcs.items():
+        got = svc.search_batch(queries)
+        for q, r, g in zip(queries, ref, got):
+            assert g.route == r.route, (n, backend, q)
+            assert np.array_equal(r.docs, g.docs), (n, backend, q)
+            assert np.array_equal(r.witnesses, g.witnesses), (n, backend, q)
+            assert r.lookups == g.lookups, (n, backend, q)
+            assert r.postings_scanned == g.postings_scanned, (n, backend, q)
+
+
+def test_prefetch_changes_scheduling_not_results():
+    """The pipelined fetch stage must be a pure scheduling optimization:
+    identical results with prefetch on and off, and the trace shows every
+    non-final wave was prefetched while the previous one landed."""
+    lex, toks, pools, _, sharded = _worlds()
+    queries = mixed_queries(lex, n=32, seed=9)
+    on = SearchService(sharded[4], window=3, backend="jax", prefetch=True)
+    off = SearchService(sharded[4], window=3, backend="jax", prefetch=False)
+    got_on = on.search_batch(queries)
+    got_off = off.search_batch(queries)
+    for a, b in zip(got_on, got_off):
+        assert np.array_equal(a.docs, b.docs)
+        assert np.array_equal(a.witnesses, b.witnesses)
+        assert a.lookups == b.lookups
+    tr = on.last_trace
+    assert tr["waves"] >= 2
+    assert tr["prefetched_waves"] == tr["waves"] - 1
+    assert len(tr["shard_fetch_s"]) == 4
+    assert off.last_trace["prefetched_waves"] == 0
+    # single-lookup and phrase routes finalized while later waves fetched
+    assert tr["overlapped_finalizes"] > 0
+
+
+def test_sharded_read_bytes_do_not_inflate():
+    """Scatter-fetch across 4 shards must stay within 10% of the
+    unsharded read bytes on the same query stream (cache disabled so the
+    device deltas are the true posting traffic)."""
+    lex, toks, pools, ts, sharded = _worlds()
+    queries = mixed_queries(lex, n=48, seed=3)
+    svc_u = SearchService(ts, window=3, backend="numpy", cache_bytes=0)
+    svc_s = SearchService(sharded[4], window=3, backend="numpy",
+                          cache_bytes=0)
+
+    def read_bytes(index_set):
+        return sum(s.read_bytes for s in index_set.search_io().values())
+
+    b0 = read_bytes(ts)
+    svc_u.search_batch(queries)
+    unsharded = read_bytes(ts) - b0
+    b0 = read_bytes(sharded[4])
+    svc_s.search_batch(queries)
+    sharded_bytes = read_bytes(sharded[4]) - b0
+    assert unsharded > 0
+    assert sharded_bytes <= 1.1 * unsharded, (sharded_bytes, unsharded)
+
+
+# --------------------------------------------------- reader/cache fabric --
+def test_shard_cache_namespacing():
+    """One shared cache, keyed by (shard, index, key): shards never answer
+    for each other, and dropping one shard's namespace leaves the rest."""
+    _, _, _, ts, sharded = _worlds()
+    sts = sharded[2]
+    reader = sts.reader(cache_bytes=1 << 20)
+    # a key with postings in both shards
+    key = None
+    for k in list(ts.indexes["known"].dict.entries)[:200]:
+        if all(sh.indexes["known"].lookup(k).shape[0] for sh in sts.shards):
+            key = k
+            break
+    assert key is not None
+    a0 = reader.lookup_shard(0, "known", key)
+    a1 = reader.lookup_shard(1, "known", key)
+    assert not np.array_equal(a0, a1)
+    assert len(reader.cache) == 2  # two slots for the same (index, key)
+    h0 = reader.cache.stats.hits
+    assert np.array_equal(reader.lookup_shard(0, "known", key), a0)
+    assert np.array_equal(reader.lookup_shard(1, "known", key), a1)
+    assert reader.cache.stats.hits == h0 + 2
+    reader.cache.drop_index("s0:known")
+    assert reader.cache.get("s0:known", key) is None
+    assert np.array_equal(reader.cache.get("s1:known", key), a1)
+
+
+def test_sharded_reader_refresh_and_read_your_writes():
+    """A no-op refresh keeps every shard's cache entries; a real writer
+    advance invalidates and re-reads fresh merged postings."""
+    lex = make_lexicon(
+        n_words=3000, n_lemmas=1300, n_stop=20, n_frequent=120, seed=41
+    )
+    sts = ShardedTextIndexSet(_cfg(multi_k=None), lex, n_shards=2, seed=0)
+    t1, o1 = generate_part(lex, n_docs=50, avg_doc_len=120, doc0=0, seed=70)
+    t2, o2 = generate_part(lex, n_docs=50, avg_doc_len=120, doc0=50, seed=71)
+    sts.add_documents(t1, o1, 0)
+    reader = sts.reader()
+    assert isinstance(reader, ShardedIndexSetReader)
+    key = next(iter(sts.shards[0].indexes["known"].dict.entries))
+    before = reader.lookup("known", key).copy()
+    reader.refresh()  # generations unchanged: caches must survive
+    assert reader.cache.stats.invalidations == 0
+    h0 = reader.cache.stats.hits
+    reader.lookup("known", key)
+    assert reader.cache.stats.hits > h0
+    sts.add_documents(t2, o2, 50)  # writers advance: entries stale
+    after = reader.lookup("known", key)
+    assert reader.cache.stats.invalidations > 0
+    fresh = merge_shard_postings(
+        [sh.indexes["known"].lookup(key) for sh in sts.shards]
+    )
+    assert np.array_equal(after, fresh)
+    assert after.shape[0] >= before.shape[0]
+
+
+def test_merge_shard_postings_edge_cases():
+    empty = np.zeros((0, 2), np.int64)
+    assert merge_shard_postings([]).shape == (0, 2)
+    assert merge_shard_postings([empty, empty]).shape == (0, 2)
+    one = np.asarray([[3, 1], [5, 2]], np.int64)
+    one.flags.writeable = False
+    out = merge_shard_postings([empty, one, empty])
+    assert out is one  # single survivor passes through (read-only intact)
+    a = np.asarray([[0, 5], [2, 1], [2, 4]], np.int64)
+    b = np.asarray([[1, 9], [3, 0]], np.int64)
+    merged = merge_shard_postings([a, b])
+    assert np.array_equal(
+        merged,
+        [[0, 5], [1, 9], [2, 1], [2, 4], [3, 0]],
+    )
+
+
+def test_bad_shard_counts_rejected():
+    lex, *_ = _worlds()
+    with pytest.raises(ValueError):
+        ShardedTextIndexSet(_cfg(), lex, n_shards=0)
