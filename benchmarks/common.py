@@ -51,6 +51,37 @@ def make_world(scale: float = 1.0, seed: int = 0, n_parts: int = 2) -> World:
     return World(lexicon=lex, parts=parts, doc_starts=doc_starts)
 
 
+# hot-regime index geometry for the top-k early-termination bench AND the
+# tier-1 effectiveness regression (tests/test_topk.py): small clusters and
+# EM limit push the hot keys' lists into multi-chunk stream storage even at
+# CI corpus sizes — the ONE definition both consumers share, so tuning the
+# regime can never silently leave the other un-tuned
+HOT_GEOMETRY = dict(cluster_size=256, em_limit=8, tag_extract_bytes=512)
+
+
+def make_hot_world(scale: float = 1.0, seed: int = 0, n_parts: int = 2) -> World:
+    """A *hot-vocabulary* collection for the top-k early-termination bench:
+    a tiny lexicon makes every k-word tuple recur across many documents, so
+    multi-component keys carry long stream-backed posting lists — the
+    regime where a best-k search can stop far before the lists end.  (The
+    standard :func:`make_world` vocabulary is so large that phrase keys
+    rarely repeat, which leaves nothing for early termination to skip.)"""
+    lex = make_lexicon(
+        n_words=8, n_lemmas=5, n_stop=1, n_frequent=2,
+        unknown_fraction=0.15, seed=7 + seed,
+    )
+    n_docs = max(80, int(800 * scale))
+    parts = []
+    doc_starts = []
+    doc0 = 0
+    for p in range(n_parts):
+        toks, offs = generate_cached(lex, n_docs, 250, doc0, seed=300 + p)
+        parts.append((toks, offs))
+        doc_starts.append(doc0)
+        doc0 += n_docs
+    return World(lexicon=lex, parts=parts, doc_starts=doc_starts)
+
+
 _GEN_CACHE: Dict[tuple, Tuple[np.ndarray, np.ndarray]] = {}
 
 

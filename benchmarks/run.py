@@ -10,6 +10,7 @@ Benches:
     search_speed  — section 6.1 additional-index speedups
     search_batched — batched SearchService qps vs per-query loop
     search_sharded — 4-shard scatter/gather vs unsharded (qps + read bytes)
+    search_topk   — top-k early-termination vs exhaustive (read-bytes ratio)
     paged_kv      — TPU adaptation: paged KV allocator behaviour
     kernels       — Pallas kernel microbenches (interpret mode) vs refs
 """
@@ -90,6 +91,23 @@ def _bench_search_sharded(scale):
     ]
 
 
+def _bench_search_topk(scale):
+    from benchmarks import search_speed
+
+    rows = search_speed.run_topk(min(scale, 0.5), top_k=10, n_queries=32)
+    r = rows[0]
+    ok = (
+        r["identical"]
+        and r["chunks_skipped"] > 0
+        and r["topk_read_bytes"] < r["ex_read_bytes"]
+    )
+    return rows, [
+        f"{'PASS' if ok else 'FAIL'}  top-10 streaming head identical to "
+        f"exhaustive at {r['bytes_ratio']:.3f}x read bytes "
+        f"({r['chunks_skipped']} chunks skipped)"
+    ]
+
+
 def _bench_paged_kv(scale):
     from benchmarks import paged_kv_bench
 
@@ -109,6 +127,7 @@ BENCHES = {
     "search_speed": _bench_search_speed,
     "search_batched": _bench_search_batched,
     "search_sharded": _bench_search_sharded,
+    "search_topk": _bench_search_topk,
     "paged_kv": _bench_paged_kv,
     "kernels": _bench_kernels,
 }

@@ -16,6 +16,12 @@ queries: same results, strictly fewer posting bytes read (the k-word key
 fetches only the phrase's own occurrences; the join path drags in every
 occurrence of every queried lemma).
 
+``--topk N`` measures the top-k early-termination streaming executor
+(arXiv:2009.02684) against the exhaustive multi route on a
+hot-vocabulary phrase stream: identical best-k heads (verified across
+join backends and shard counts), strictly fewer posting bytes read, and
+the chunks-skipped ledger from ``last_trace``.
+
 ``--shards N`` runs the same batched mixed stream through a
 ``ShardedTextIndexSet`` (document-hash sharding, scatter/gather
 ``SearchService``) vs the unsharded set, reporting per-shard and
@@ -33,9 +39,11 @@ from typing import Dict, List
 import numpy as np
 
 from benchmarks.common import (
+    HOT_GEOMETRY,
     World,
     build_index_set,
     build_sharded_index_set,
+    make_hot_world,
     make_world,
 )
 from repro.core.lexicon import FREQUENT, OTHER, STOP
@@ -282,6 +290,135 @@ def main_multi(scale: float = 0.5, n_queries: int = 64) -> None:
     print("PASS  multi route matches the ordinary join and reads fewer bytes")
 
 
+# ------------------------------------------------- top-k early termination --
+def run_topk(
+    scale: float = 0.5,
+    world: World = None,
+    n_queries: int = 64,
+    top_k: int = 10,
+    repeats: int = 3,
+    verify_backends=("numpy", "jax", "pallas"),
+    verify_shards=(1, 2, 4),
+) -> List[Dict]:
+    """``Query(top_k=N)`` streaming execution vs the exhaustive multi
+    route on a hot-vocabulary phrase stream (arXiv:2009.02684).
+
+    Both services run the numpy oracle backend with the posting cache
+    disabled, so the reader ``search_io`` deltas are the true per-batch
+    posting traffic; the acceptance gate is read bytes STRICTLY below the
+    exhaustive path (early termination must actually skip chunks, not
+    degrade to a full scan), with the top-k head element-wise identical
+    across every join backend and shard count in ``verify_*``.
+    """
+    if n_queries < 1:
+        raise ValueError(f"--queries must be >= 1, got {n_queries}")
+    if top_k < 1:
+        raise ValueError(f"--topk must be >= 1, got {top_k}")
+    world = world or make_hot_world(scale)
+    # hot-corpus geometry: small clusters/EM limit keep per-key lists
+    # spanning several cursor chunks even at CI scale
+    cfg_kw = HOT_GEOMETRY
+    ts = build_index_set(world, "set2", **cfg_kw)
+    k = ts.indexes["multi"].k
+    base = _phrase_stream(world, n_queries, k, np.random.RandomState(11))
+    topk_queries = [
+        Query(q.words, phrase=True, top_k=top_k) for q in base
+    ]
+
+    svc_topk = SearchService(ts, window=3, backend="numpy", cache_bytes=0)
+    svc_ex = SearchService(ts, window=3, backend="numpy", cache_bytes=0)
+
+    b0 = _read_bytes(ts)
+    res_topk = svc_topk.search_batch(topk_queries)
+    topk_bytes = _read_bytes(ts) - b0
+    trace = dict(svc_topk.last_trace["topk"])
+    b0 = _read_bytes(ts)
+    res_ex = svc_ex.search_batch(base)
+    ex_bytes = _read_bytes(ts) - b0
+
+    # the streamed head must equal the exhaustive head element-wise
+    identical = all(
+        rt.route == ROUTE_MULTI
+        and np.array_equal(rt.docs, re.docs[:top_k])
+        and np.array_equal(
+            rt.witnesses,
+            re.witnesses[np.isin(re.witnesses[:, 0], re.docs[:top_k])],
+        )
+        and np.array_equal(rt.scores, re.scores[:top_k])
+        for rt, re in zip(res_topk, res_ex)
+    )
+
+    # ... and stay identical across join backends and shard counts
+    verify_queries = topk_queries[: min(len(topk_queries), 16)]
+    ref = res_topk[: len(verify_queries)]
+    for n_shards in verify_shards:
+        if n_shards == 1:
+            substrate = ts
+        else:
+            substrate = build_sharded_index_set(
+                world, "set2", n_shards=n_shards, **cfg_kw
+            )
+        for backend in verify_backends:
+            svc = SearchService(substrate, window=3, backend=backend,
+                                cache_bytes=0)
+            got = svc.search_batch(verify_queries)
+            identical &= all(
+                np.array_equal(r.docs, g.docs)
+                and np.array_equal(r.witnesses, g.witnesses)
+                and np.array_equal(r.scores, g.scores)
+                for r, g in zip(ref, got)
+            )
+
+    t_topk = min(
+        _timed(lambda: svc_topk.search_batch(topk_queries))
+        for _ in range(repeats)
+    )
+    t_ex = min(
+        _timed(lambda: svc_ex.search_batch(base)) for _ in range(repeats)
+    )
+    return [
+        {
+            "bench": "search_speed_topk",
+            "queries": len(base),
+            "top_k": top_k,
+            "topk_qps": len(base) / t_topk,
+            "ex_qps": len(base) / t_ex,
+            "topk_read_bytes": int(topk_bytes),
+            "ex_read_bytes": int(ex_bytes),
+            "bytes_ratio": topk_bytes / max(1, ex_bytes),
+            "chunks_fetched": trace["chunks_fetched"],
+            "chunks_skipped": trace["chunks_skipped"],
+            "early_terminated": trace["early_terminated"],
+            "identical": identical,
+        }
+    ]
+
+
+def main_topk(scale: float = 0.5, n_queries: int = 64,
+              top_k: int = 10) -> None:
+    r = run_topk(scale, n_queries=n_queries, top_k=top_k)[0]
+    print(f"{'mode':10s} {'qps':>10s} {'read_bytes':>12s}")
+    print(f"{'top-' + str(r['top_k']):10s} {r['topk_qps']:>10,.0f} "
+          f"{r['topk_read_bytes']:>12,}")
+    print(f"{'exhaustive':10s} {r['ex_qps']:>10,.0f} "
+          f"{r['ex_read_bytes']:>12,}")
+    print(f"{r['queries']} phrase queries; read-bytes ratio "
+          f"topk/exhaustive = {r['bytes_ratio']:.3f}; "
+          f"{r['chunks_skipped']} chunks skipped "
+          f"({r['early_terminated']} queries early-terminated)")
+    assert r["identical"], (
+        "top-k head diverged from the exhaustive sorted head"
+    )
+    assert r["chunks_skipped"] > 0, (
+        "early termination must skip chunks, not degrade to a full scan"
+    )
+    assert r["topk_read_bytes"] < r["ex_read_bytes"], (
+        "top-k must read strictly fewer posting bytes than exhaustive"
+    )
+    print("PASS  top-k head identical to exhaustive with strictly fewer "
+          "read bytes")
+
+
 # ------------------------------------------------------ sharded substrate --
 def run_sharded(
     scale: float = 0.5,
@@ -435,6 +572,11 @@ if __name__ == "__main__":
     ap.add_argument("--multi", action="store_true",
                     help="multi-component key route vs ordinary join "
                          "on phrase queries")
+    ap.add_argument("--topk", type=int, default=0,
+                    help="N: top-k early-termination streaming executor "
+                         "vs the exhaustive multi route on a hot phrase "
+                         "stream (qps + read-bytes ratio; verifies the "
+                         "head across backends and shard counts)")
     ap.add_argument("--shards", type=int, default=0,
                     help="N-shard scatter/gather SearchService vs the "
                          "unsharded set, both through search_batch; "
@@ -454,5 +596,7 @@ if __name__ == "__main__":
         main_batched(args.scale, n_queries=args.queries)
     elif args.multi:
         main_multi(args.scale, n_queries=args.queries)
+    elif args.topk:
+        main_topk(args.scale, n_queries=args.queries, top_k=args.topk)
     else:
         main(args.scale)

@@ -15,7 +15,7 @@ from repro.core.sharded_set import ShardedTextIndexSet
 from repro.core.strategies import StrategyConfig
 from repro.core.text_index import IndexSetConfig, TextIndexSet
 from repro.data.corpus import generate_part
-from repro.search import SearchService
+from repro.search import Query, SearchService
 
 
 def words_of(lex, cls, n=6):
@@ -99,6 +99,23 @@ def main():
     print(f"phrase {phrase} -> {len(r.docs)} docs via route '{r.route}',"
           f" scanning {r.postings_scanned:,} postings"
           f" (ordinary join path: {r_ord.postings_scanned:,})")
+
+    # best-k serving: Query(top_k=N) streams each key's postings through
+    # lazy chunked cursors in (doc, start) order and STOPS fetching once
+    # the N best documents are provably settled — the head is element-wise
+    # identical to the exhaustive result's first N docs, at a fraction of
+    # the read bytes (last_trace reports chunks and bytes skipped).  A hot
+    # stop pair matches hundreds of docs, so top-3 settles almost at once.
+    hot = (stop[0], stop[1])
+    svc_cold = SearchService(ts, window=3, cache_bytes=0)  # cold: real I/O
+    r_all = svc_cold.search_batch([Query(hot)])[0]
+    r_top = svc_cold.search_batch([Query(hot, top_k=3)])[0]
+    assert np.array_equal(r_top.docs, r_all.docs[:3])
+    tk = svc_cold.last_trace["topk"]
+    print(f"top-3 of the hot stop pair -> docs {r_top.docs.tolist()} "
+          f"(scores {r_top.scores.tolist()}) out of {len(r_all.docs)} "
+          f"matching docs, skipping {tk['chunks_skipped']} posting chunks "
+          f"({tk['bytes_skipped']:,} bytes never read)")
 
     # production scale-out: the SAME collection partitioned by doc hash
     # across 4 shards, served by the scatter/gather SearchService — the

@@ -9,4 +9,10 @@ cd "$(dirname "$0")/.."
 # not inflate
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.search_speed \
   --shards 2 --batched --scale 0.05 --queries 16
+# tiny-corpus smoke of the top-k streaming executor: asserts the best-k
+# head stays element-wise identical to the exhaustive path (across
+# backends and shard counts) while reading strictly fewer posting bytes
+# with chunks actually skipped
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.search_speed \
+  --topk 10 --scale 0.05 --queries 12
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -x -q "$@"

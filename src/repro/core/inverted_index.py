@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import defaultdict
-from typing import Dict, Hashable, Iterable, List, Optional, Tuple
+from typing import Callable, Dict, Hashable, Iterable, List, Optional, Tuple
 
 import numpy as np
 
@@ -37,11 +37,98 @@ from repro.core.dictionary import (
     stable_hash,
 )
 from repro.core.io_sim import BlockDevice, IOStats
-from repro.core.postings import decode_postings, encode_postings
+from repro.core.postings import PostingDecoder, decode_postings, encode_postings
 from repro.core.strategies import StrategyConfig
 from repro.core.stream import StreamManager
 
 _EMPTY = np.zeros((0, 2), dtype=np.int64)
+
+# default cursor granularity: at most this many clusters fetched per chunk,
+# so a lazy reader can stop inside a large contiguous segment
+CURSOR_CHUNK_CLUSTERS = 4
+
+
+class PostingCursor:
+    """Lazy chunked reader over one key's (doc, pos)-sorted posting list.
+
+    ``next_chunk()`` returns the next slice of the list (possibly empty
+    when a storage unit ends mid-record) and charges the owning device
+    only for the storage units actually fetched; ``None`` once exhausted.
+    Fetching every chunk charges exactly the bytes ``lookup`` would, so
+    ``bytes_total - bytes_fetched`` is the read traffic an early stop
+    saved.  ``settled_bound`` is the exclusive doc-id bound below which
+    the delivered rows are final: postings are stored sorted by
+    (doc, pos), so every future chunk carries docs ``>= last delivered
+    doc`` (the last doc itself may continue into the next chunk).
+    """
+
+    def __init__(self, thunks: List[Tuple[int, Callable[[], np.ndarray]]]):
+        self._thunks = thunks
+        self._i = 0
+        self.chunks_total = len(thunks)
+        self.chunks_fetched = 0
+        self.bytes_total = sum(nb for nb, _ in thunks)
+        self.bytes_fetched = 0
+        self.postings_delivered = 0
+        self.last_doc: Optional[int] = None
+
+    @classmethod
+    def from_array(cls, arr: np.ndarray) -> "PostingCursor":
+        """Single-chunk cursor over pre-decoded rows (EM/TAG/absent keys:
+        their whole-list read was charged — or costs nothing — at open)."""
+        if arr.shape[0] == 0:
+            return cls([])
+        return cls([(0, lambda: arr)])
+
+    @property
+    def exhausted(self) -> bool:
+        return self._i >= len(self._thunks)
+
+    @property
+    def settled_bound(self) -> float:
+        """Docs strictly below this bound can gain no further postings."""
+        if self.exhausted:
+            return float("inf")
+        if self.last_doc is None:
+            return float("-inf")
+        return float(self.last_doc)
+
+    @property
+    def chunks_skipped(self) -> int:
+        return self.chunks_total - self.chunks_fetched
+
+    @property
+    def bytes_skipped(self) -> int:
+        return self.bytes_total - self.bytes_fetched
+
+    def next_chunk(self) -> Optional[np.ndarray]:
+        if self.exhausted:
+            return None
+        nbytes, thunk = self._thunks[self._i]
+        self._i += 1
+        arr = thunk()
+        self.chunks_fetched += 1
+        self.bytes_fetched += nbytes
+        if arr.shape[0]:
+            self.last_doc = int(arr[-1, 0])
+            self.postings_delivered += arr.shape[0]
+        if arr.flags.writeable:
+            arr = arr.view()
+            arr.flags.writeable = False
+        return arr
+
+    def read_all(self) -> np.ndarray:
+        """Drain the cursor; the concatenation of every chunk."""
+        parts = []
+        while True:
+            chunk = self.next_chunk()
+            if chunk is None:
+                break
+            if chunk.shape[0]:
+                parts.append(chunk)
+        if not parts:
+            return _EMPTY
+        return parts[0] if len(parts) == 1 else np.concatenate(parts, axis=0)
 
 
 class InvertedIndex:
@@ -282,6 +369,63 @@ class InvertedIndex:
             return mine[order]
         posts, _ = decode_postings(data)
         return posts
+
+    def open_cursor(
+        self,
+        key: Hashable,
+        device: Optional[BlockDevice] = None,
+        chunk_clusters: int = CURSOR_CHUNK_CLUSTERS,
+    ) -> PostingCursor:
+        """Lazy chunked :meth:`lookup`: the dictionary entry is read now,
+        each posting storage unit only when the cursor fetches it.
+
+        EM keys (list inline in the dictionary) and TAG keys (bucket
+        streams interleave keys, so a partial read cannot isolate one
+        key's sorted rows) degenerate to single-chunk cursors; dedicated
+        (OWN) streams — where the large lists live — are fetched unit by
+        unit in payload order, large segments split into ranges of at
+        most ``chunk_clusters`` clusters.  Draining the cursor charges
+        exactly the device bytes ``lookup`` charges.
+        """
+        e = self.dict.get(key)
+        dev = device if device is not None else self.mgr.device
+        if e is None:
+            dev.read_small(ENTRY_FIXED_BYTES)
+            return PostingCursor.from_array(_EMPTY)
+        dev.read_small(ENTRY_FIXED_BYTES + len(key_bytes(key)) + len(e.data))
+        if e.kind == K_EM:
+            posts, _ = decode_postings(bytes(e.data))
+            return PostingCursor.from_array(posts)
+        if e.kind == K_TAG:
+            # one deferred chunk: charged only if the cursor is consumed
+            units = self.mgr.stream_read_units(e.sid)
+            charge_bytes = sum(cb for _, cb, _ in units)
+
+            def read_tagged(sid=e.sid, tag=e.tag):
+                data = self.mgr.read_stream(sid, device=dev)
+                posts, tags = decode_postings(data, tagged=True, zigzag=True)
+                mine = posts[tags == tag]
+                order = np.lexsort((mine[:, 1], mine[:, 0]))
+                return mine[order]
+
+            return PostingCursor([(charge_bytes, read_tagged)])
+        # K_OWN: unit-by-unit fetch + incremental decode
+        st = self.mgr.streams[e.sid]
+        units = self.mgr.stream_read_units(e.sid, chunk_clusters=chunk_clusters)
+        decoder = PostingDecoder()
+        thunks: List[Tuple[int, Callable[[], np.ndarray]]] = []
+        off = 0
+        for payload_nb, charge_nb, charge in units:
+            lo, hi = off, off + payload_nb
+            off = hi
+
+            def fetch(lo=lo, hi=hi, charge=charge):
+                charge(dev)
+                posts, _ = decoder.feed(bytes(st.data[lo:hi]))
+                return posts
+
+            thunks.append((charge_nb, fetch))
+        return PostingCursor(thunks)
 
     def lookup_ops(self, key: Hashable) -> int:
         """Device ops one search of this key costs (paper 5.7.3 criterion)."""

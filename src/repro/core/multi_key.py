@@ -32,7 +32,7 @@ never collide with a numerically equal extended ``(w, v)`` key.
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -66,6 +66,20 @@ def unpack_components(key: int, k: int, bits: int) -> Tuple[int, ...]:
     mask = (1 << bits) - 1
     out = [(key >> (bits * (k - 1 - j))) & mask for j in range(k)]
     return tuple(out)
+
+
+def phrase_cover_keys(pack, k: int, lemmas: Sequence[int]) -> List[int]:
+    """Overlapping k-word key cover of a phrase's lemma sequence — THE
+    single derivation shared by :meth:`MultiKeyIndex.cover_keys` and the
+    planner's :class:`~repro.search.plan.MultiKeySpec` fallback, so the
+    two can never drift.  Key ``j`` is the k-gram at word offset ``j``."""
+    if len(lemmas) < k:
+        raise ValueError(
+            f"phrase of {len(lemmas)} lemmas cannot be covered by "
+            f"{k}-word keys"
+        )
+    return [int(pack(lemmas[off : off + k]))
+            for off in range(len(lemmas) - k + 1)]
 
 
 def extract_multi_postings(
@@ -157,6 +171,18 @@ class MultiKeyIndex(InvertedIndex):
 
     def unpack(self, key: int) -> Tuple[int, ...]:
         return unpack_components(key, self.k, self.component_bits)
+
+    def cover_keys(self, lemmas: Sequence[int]) -> List[int]:
+        """Overlapping k-word key cover of a phrase's lemma sequence.
+
+        Key ``j`` is the k-gram at word offset ``j``; its NSW-style
+        records sit at ``start + j`` of every phrase match, which is how
+        the executor (batch phrase chain and streaming top-k alike)
+        reconstructs the match from start positions alone.  The records
+        of every cover key are (doc, start)-sorted — the invariant the
+        lazy cursor's settled-doc bound relies on.
+        """
+        return phrase_cover_keys(self.pack, self.k, lemmas)
 
     # ---------------------------------------------------------- extraction --
     def extract_part(

@@ -231,6 +231,71 @@ def decode_postings(
     return out, np.asarray(tags, dtype=np.int64)
 
 
+class PostingDecoder:
+    """Incremental decoder over a posting byte stream fed in chunks.
+
+    The lazy read path (``InvertedIndex.open_cursor``) fetches a stream's
+    storage units one at a time; a unit boundary may split a varint or a
+    whole record, so the decoder keeps the undecodable tail bytes and the
+    delta-continuation state (previous doc/pos) between ``feed`` calls.
+    Feeding the full stream in any chunking decodes exactly the rows
+    ``decode_postings`` would return on the concatenated bytes.
+    """
+
+    def __init__(self, tagged: bool = False, zigzag: bool = False):
+        self.tagged = tagged
+        self.zigzag = zigzag
+        self._rem = b""
+        self._prev_doc = 0
+        self._prev_pos = 0
+        self._any = False
+
+    @property
+    def pending_bytes(self) -> int:
+        """Tail bytes buffered until the next feed completes their record."""
+        return len(self._rem)
+
+    def feed(self, data: bytes) -> Tuple[np.ndarray, np.ndarray]:
+        """Decode every complete record of ``rem + data``; buffer the rest."""
+        buf = self._rem + bytes(data)
+        docs: List[int] = []
+        poss: List[int] = []
+        tags: List[int] = []
+        offset = 0
+        n = len(buf)
+        while offset < n:
+            start = offset
+            try:
+                if self.tagged:
+                    tag, offset = decode_varint(buf, offset)
+                else:
+                    tag = 0
+                dd, offset = decode_varint(buf, offset)
+                pd, offset = decode_varint(buf, offset)
+            except IndexError:  # record truncated at the chunk boundary
+                offset = start
+                break
+            if self.zigzag:
+                dd = _unzigzag(dd)
+                pd = _unzigzag(pd)
+            if self._any and dd == 0:
+                doc = self._prev_doc
+                pos = self._prev_pos + pd
+            else:
+                doc = self._prev_doc + dd
+                pos = pd
+            docs.append(doc)
+            poss.append(pos)
+            tags.append(tag)
+            self._prev_doc, self._prev_pos = doc, pos
+            self._any = True
+        self._rem = buf[offset:]
+        out = np.empty((len(docs), 2), dtype=np.int64)
+        out[:, 0] = docs
+        out[:, 1] = poss
+        return out, np.asarray(tags, dtype=np.int64)
+
+
 def encoded_size(postings: Sequence[Posting] | np.ndarray,
                  tags: Sequence[int] | np.ndarray | None = None) -> int:
     return len(encode_postings(postings, tags))

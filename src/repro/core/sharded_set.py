@@ -92,6 +92,27 @@ def merge_shard_postings(arrs: List[np.ndarray]) -> np.ndarray:
     return cat[np.argsort(cat[:, 0], kind="stable")]
 
 
+def merge_shard_chunks(chunk_runs: List[List[np.ndarray]]) -> np.ndarray:
+    """Gather per-shard lazy-cursor chunk runs into unsharded (doc, pos)
+    order — the scatter/gather-aware merge of the streaming top-k stage.
+
+    Each inner list is the chunks ONE shard's cursor has delivered so
+    far; their concatenation is a (doc, pos)-sorted run (sequential
+    slices of that shard's posting list), and the runs merge across
+    shards exactly like :func:`merge_shard_postings`: shard doc sets are
+    disjoint, so a stable sort on the doc column reconstructs the
+    unsharded prefix element-wise."""
+    runs: List[np.ndarray] = []
+    for chunks in chunk_runs:
+        chunks = [c for c in chunks if c.shape[0]]
+        if not chunks:
+            continue
+        runs.append(
+            chunks[0] if len(chunks) == 1 else np.concatenate(chunks, axis=0)
+        )
+    return merge_shard_postings(runs)
+
+
 class ShardedTextIndexSet(IndexSetLike):
     """N document-hash shards, each a full :class:`TextIndexSet`."""
 

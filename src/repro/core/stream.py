@@ -44,7 +44,7 @@ against a posting-level oracle in the tests.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, List, Optional, Tuple
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
 
@@ -667,6 +667,105 @@ class StreamManager:
         if st.has_fl and st.fl_bytes:
             dev.read_sequential(self.cluster_size)  # FL cluster: one op
         return bytes(st.data)
+
+    def stream_read_units(
+        self, sid: int, chunk_clusters: int = 0
+    ) -> List[Tuple[int, int, "Callable[[BlockDevice], None]"]]:
+        """Payload-ordered storage units of one stream, for lazy cursors.
+
+        Returns ``[(payload_bytes, charge_bytes, charge), ...]`` covering
+        the stream's byte payload in order: segments first (the stream's
+        oldest bytes), then the SR record and FL cluster tails.  ``charge``
+        performs exactly the device accounting a read of that unit costs
+        and ``charge_bytes`` is the read bytes it will add — reading every
+        unit charges the same bytes as :meth:`read_stream`, so a caller
+        that stops early saves exactly the remaining units' bytes.
+        ``chunk_clusters > 0`` splits contiguous segments into ranges of
+        at most that many clusters so a cursor can stop mid-segment.
+        """
+        st = self.streams[sid]
+        units: List[Tuple[int, int, "Callable[[BlockDevice], None]"]] = []
+        if st.total_bytes == 0:
+            return units
+        if st.state == EM:
+            # dictionary-resident: the entry read already covered the bytes
+            units.append((st.total_bytes, 0, lambda dev: None))
+            return units
+        if st.state == SR0:
+            nb = _blocks(st.sr_bytes, self.cfg.sr_block)
+            units.append(
+                (st.total_bytes, nb, lambda dev, nb=nb: dev.read_small(nb))
+            )
+            return units
+        if st.state == PART:
+            cid = st.part_cluster
+            units.append((
+                st.total_bytes, self.cluster_size,
+                lambda dev, cid=cid: dev.read_clusters([cid]),
+            ))
+            return units
+        # CH / S: payload = segment bytes (in list order) + SR/FL tail
+        covered = (
+            st.segment_bytes()
+            + (st.sr_bytes if st.has_sr else 0)
+            + (st.fl_bytes if st.has_fl else 0)
+        )
+        if covered != st.total_bytes:
+            # unknown layout (defensive): one unit with read_stream charges
+            def charge_all(dev, st=st):
+                for seg in st.segments:
+                    dev.read_clusters(seg.ids)
+                if st.has_sr and st.sr_bytes:
+                    dev.read_small(_blocks(st.sr_bytes, self.cfg.sr_block))
+                if st.has_fl and st.fl_bytes:
+                    dev.read_sequential(self.cluster_size)
+
+            nb = sum(s.nclusters for s in st.segments) * self.cluster_size
+            if st.has_sr and st.sr_bytes:
+                nb += _blocks(st.sr_bytes, self.cfg.sr_block)
+            if st.has_fl and st.fl_bytes:
+                nb += self.cluster_size
+            units.append((st.total_bytes, nb, charge_all))
+            return units
+        cs = self.cluster_size
+        for seg in st.segments:
+            if seg.used <= 0:
+                continue
+            if chunk_clusters and seg.nclusters > chunk_clusters:
+                off = 0
+                c0 = 0
+                while c0 < seg.nclusters and off < seg.used:
+                    c1 = min(seg.nclusters, c0 + chunk_clusters)
+                    hi = min(seg.used, c1 * cs)
+                    if hi >= seg.used:
+                        # the payload ends inside this chunk: absorb the
+                        # segment's trailing allocated clusters so a
+                        # drained cursor charges exactly what a whole-
+                        # segment read_clusters(seg.ids) charges
+                        c1 = seg.nclusters
+                    ids = range(seg.start + c0, seg.start + c1)
+                    units.append((
+                        hi - off, len(ids) * cs,
+                        lambda dev, ids=ids: dev.read_clusters(ids),
+                    ))
+                    off = hi
+                    c0 = c1
+            else:
+                units.append((
+                    seg.used, seg.nclusters * cs,
+                    lambda dev, ids=seg.ids: dev.read_clusters(ids),
+                ))
+        if st.has_sr and st.sr_bytes:
+            nb = _blocks(st.sr_bytes, self.cfg.sr_block)
+            units.append(
+                (st.sr_bytes, nb, lambda dev, nb=nb: dev.read_small(nb))
+            )
+        if st.has_fl and st.fl_bytes:
+            units.append((
+                st.fl_bytes, cs,
+                lambda dev: dev.read_sequential(self.cluster_size),
+            ))
+        return units
 
     def read_ops_estimate(self, sid: int) -> int:
         """Number of device operations a search of this stream costs."""

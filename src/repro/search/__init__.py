@@ -43,9 +43,10 @@ from repro.search.reader import (
     IndexReader,
     IndexSetReader,
     PostingCache,
+    ReaderCursor,
     ShardedIndexSetReader,
 )
-from repro.search.service import SearchService
+from repro.search.service import SearchService, TraceIncompleteError
 
 __all__ = [
     "JOIN_BACKENDS",
@@ -72,6 +73,8 @@ __all__ = [
     "IndexReader",
     "IndexSetReader",
     "PostingCache",
+    "ReaderCursor",
     "ShardedIndexSetReader",
     "SearchService",
+    "TraceIncompleteError",
 ]

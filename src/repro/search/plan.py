@@ -47,12 +47,29 @@ MAX_PHRASE_WORDS = 8
 
 @dataclasses.dataclass(frozen=True)
 class MultiKeySpec:
-    """Planner view of the multi-component key index: tuple width ``k``
-    and the key packing, both owned by the index itself."""
+    """Planner view of the multi-component key index: tuple width ``k``,
+    the key packing, and the phrase cover — all owned by the index itself
+    (:meth:`~repro.core.multi_key.MultiKeyIndex.cover_keys`)."""
 
     k: int
     pack: Callable[[Sequence[int]], int]
     name: str = "multi"
+    cover: Optional[Callable[[Sequence[int]], List[int]]] = None
+
+    def cover_keys(self, lemmas: Sequence[int]) -> List[int]:
+        if self.cover is not None:
+            if len(lemmas) < self.k:
+                # the index's cover validates too; fail here so a bad
+                # call can never surface later as a zero-lookup plan
+                raise ValueError(
+                    f"phrase of {len(lemmas)} lemmas cannot be covered "
+                    f"by {self.k}-word keys"
+                )
+            return list(self.cover(lemmas))
+        # fallback for specs built without a cover: the shared derivation
+        from repro.core.multi_key import phrase_cover_keys
+
+        return phrase_cover_keys(self.pack, self.k, lemmas)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,11 +80,22 @@ class Query:
     start+j) — the stop-sequence index's semantics extended to arbitrary
     words; ``window`` is ignored for phrase queries.  Proximity queries
     are 2-3 words; phrase queries may be up to ``MAX_PHRASE_WORDS``.
+
+    ``top_k=N`` asks for the *best-k result mode*: only the N best
+    matching documents (ascending doc id — the collection is indexed in
+    arrival order, so the lowest doc ids are the canonical head) with
+    their witness postings and per-doc proximity scores (match-occurrence
+    counts).  The executor serves it through the streaming stage: per-key
+    posting records are consumed in sorted (doc, start) order via lazy
+    cursors and fetching stops once the top-k set is provably settled —
+    the returned head is element-wise identical to the exhaustive path's
+    first N documents.
     """
 
     words: Tuple[int, ...]
     window: Optional[int] = None
     phrase: bool = False
+    top_k: Optional[int] = None
 
     def __post_init__(self):
         if self.phrase:
@@ -78,6 +106,8 @@ class Query:
                 )
         elif not 2 <= len(self.words) <= 3:
             raise ValueError(f"queries are 2-3 words, got {len(self.words)}")
+        if self.top_k is not None and self.top_k < 1:
+            raise ValueError(f"top_k must be >= 1, got {self.top_k}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,6 +125,10 @@ class PlannedQuery:
     route: str
     lookups: List[KeyLookup]
     window: int
+    # best-k result mode: set when the query asked for top_k — the
+    # executor routes these lookups down the streaming (lazy cursor)
+    # stage instead of the batch scatter-fetch waves
+    top_k: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -123,6 +157,10 @@ class QueryResult:
     lookups: List[Tuple[str, int]]   # (index, key) lookups performed
     postings_scanned: int            # total postings decoded
     route: Optional[str] = None      # which planner route produced this
+    # per-doc proximity score, aligned with ``docs``: the number of match
+    # occurrences (witness rows) in that document.  Top-k results carry
+    # the scores of the returned head; exhaustive results of the full set.
+    scores: Optional[np.ndarray] = None
 
     def __eq__(self, other) -> bool:  # element-wise identity for tests
         return (
@@ -131,6 +169,13 @@ class QueryResult:
             and np.array_equal(self.witnesses, other.witnesses)
             and self.lookups == other.lookups
             and self.postings_scanned == other.postings_scanned
+            # scores participate when both sides carry them (results from
+            # older single-query facades may omit them)
+            and (
+                self.scores is None
+                or other.scores is None
+                or np.array_equal(self.scores, other.scores)
+            )
         )
 
 
@@ -177,16 +222,19 @@ def plan_query(
                 (lem[0] << (2 * SEQ_SHIFT)) | (lem[1] << SEQ_SHIFT) | lem[2]
             )
         lk = KeyLookup("stopseq", key, group_of("stopseq", key))
-        return PlannedQuery(query, ROUTE_STOPSEQ, [lk], window)
+        return PlannedQuery(query, ROUTE_STOPSEQ, [lk], window,
+                            top_k=query.top_k)
 
     if query.phrase and multi is not None and len(lem) >= multi.k:
-        # cover the phrase with L-k+1 overlapping k-word keys; the
+        # cover the phrase with L-k+1 overlapping k-word keys (the cover
+        # is owned by the index: key j's records sit at start+j); the
         # executor intersects them at their fixed start-position offsets
-        lookups = []
-        for off in range(len(lem) - multi.k + 1):
-            key = int(multi.pack(lem[off : off + multi.k]))
-            lookups.append(KeyLookup(multi.name, key, group_of(multi.name, key)))
-        return PlannedQuery(query, ROUTE_MULTI, lookups, window)
+        lookups = [
+            KeyLookup(multi.name, key, group_of(multi.name, key))
+            for key in multi.cover_keys(lem)
+        ]
+        return PlannedQuery(query, ROUTE_MULTI, lookups, window,
+                            top_k=query.top_k)
 
     freq_i = next((i for i, c in enumerate(cls) if c == FREQUENT), None)
     if (
@@ -205,13 +253,14 @@ def plan_query(
         key = int((w << PAIR_SHIFT) | v)
         name = "wv_kk" if v < lexicon.n_lemmas else "wv_ku"
         lk = KeyLookup(name, key, group_of(name, key))
-        return PlannedQuery(query, ROUTE_WV, [lk], window)
+        return PlannedQuery(query, ROUTE_WV, [lk], window, top_k=query.top_k)
 
     lookups = []
     for lemma in lem:
         name = "unknown" if lemma >= lexicon.n_lemmas else "known"
         lookups.append(KeyLookup(name, lemma, group_of(name, lemma)))
-    return PlannedQuery(query, ROUTE_ORDINARY, lookups, window)
+    return PlannedQuery(query, ROUTE_ORDINARY, lookups, window,
+                        top_k=query.top_k)
 
 
 def plan_batch(

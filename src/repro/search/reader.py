@@ -21,11 +21,15 @@ from __future__ import annotations
 
 import dataclasses
 from collections import OrderedDict
-from typing import Dict, Hashable, List, Optional, Tuple
+from typing import Callable, Dict, Hashable, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.inverted_index import InvertedIndex
+from repro.core.inverted_index import (
+    CURSOR_CHUNK_CLUSTERS,
+    InvertedIndex,
+    PostingCursor,
+)
 from repro.core.io_sim import BlockDevice, IOStats
 
 
@@ -114,6 +118,76 @@ class PostingCache:
         return len(self._map)
 
 
+class ReaderCursor:
+    """Cache-aware lazy cursor over one (index, key) posting list.
+
+    A cache hit serves the whole cached list as ONE zero-I/O chunk; a
+    miss wraps the index's chunked :class:`PostingCursor` and — only if
+    the cursor drains completely — assembles the full list and admits it
+    to the cache, so the next reader of the key pays nothing.  An
+    early-terminated cursor never caches a partial list (a later lookup
+    must re-read; serving a truncated list would be silent corruption).
+    """
+
+    def __init__(
+        self,
+        inner: PostingCursor,
+        on_complete: Optional[Callable[[np.ndarray], None]] = None,
+    ):
+        self._inner = inner
+        self._on_complete = on_complete
+        self._parts: List[np.ndarray] = []
+        self._completed = False
+
+    def next_chunk(self) -> Optional[np.ndarray]:
+        chunk = self._inner.next_chunk()
+        if chunk is None:
+            self._complete()
+            return None
+        if chunk.shape[0] and self._on_complete is not None:
+            self._parts.append(chunk)
+        if self._inner.exhausted:
+            # the consumer has every chunk: admit the full list NOW — a
+            # caller that stops polling at `exhausted` (the streaming
+            # executor does) must still warm the cache
+            self._complete()
+        return chunk
+
+    def _complete(self) -> None:
+        if self._completed:
+            return
+        self._completed = True
+        if self._on_complete is not None:
+            if not self._parts:
+                full = np.zeros((0, 2), dtype=np.int64)
+            elif len(self._parts) == 1:
+                full = self._parts[0]
+            else:
+                full = np.concatenate(self._parts, axis=0)
+            self._on_complete(full)
+
+    def read_all(self) -> np.ndarray:
+        """Drain the remaining chunks through :meth:`next_chunk` (NEVER
+        the inner cursor's ``read_all``, which would bypass the
+        accumulation above and let a later completion admit a truncated
+        list to the cache)."""
+        parts: List[np.ndarray] = []
+        while True:
+            chunk = self.next_chunk()
+            if chunk is None:
+                break
+            if chunk.shape[0]:
+                parts.append(chunk)
+        if not parts:
+            return np.zeros((0, 2), dtype=np.int64)
+        return parts[0] if len(parts) == 1 else np.concatenate(parts, axis=0)
+
+    def __getattr__(self, name):
+        # the counter/bound surface (exhausted, settled_bound, chunks_*,
+        # bytes_*, postings_delivered) delegates to the underlying cursor
+        return getattr(self._inner, name)
+
+
 class IndexReader:
     """Read-only access to one :class:`InvertedIndex` snapshot.
 
@@ -155,6 +229,28 @@ class IndexReader:
         if self.cache is not None:
             self.cache.put(self.cache_ns, key, posts)
         return posts
+
+    def open_cursor(
+        self, key: Hashable, chunk_clusters: int = CURSOR_CHUNK_CLUSTERS
+    ) -> ReaderCursor:
+        """Lazy chunked :meth:`lookup` — the streaming executor's fetch
+        primitive.  Cache hits serve one zero-I/O chunk; misses read the
+        key's storage units on demand and cache the full list only if the
+        cursor drains completely."""
+        if self.index.n_parts != self._generation:
+            self.refresh()
+        if self.cache is not None:
+            hit = self.cache.get(self.cache_ns, key)
+            if hit is not None:
+                return ReaderCursor(PostingCursor.from_array(hit))
+        inner = self.index.open_cursor(
+            key, device=self.device, chunk_clusters=chunk_clusters
+        )
+        on_complete = None
+        if self.cache is not None:
+            def on_complete(full, key=key):
+                self.cache.put(self.cache_ns, key, full)
+        return ReaderCursor(inner, on_complete)
 
     def lookup_ops(self, key: Hashable) -> int:
         return self.index.lookup_ops(key)
@@ -211,6 +307,15 @@ class IndexSetReader:
             raise IndexError(f"unsharded reader has one shard, got {shard}")
         return self.readers[index_name].lookup(key)
 
+    def open_cursor_shard(
+        self, shard: int, index_name: str, key: Hashable
+    ) -> ReaderCursor:
+        """Lazy cursor over one shard's posting subset (the streaming
+        executor's scatter primitive; shard 0 is the whole set here)."""
+        if shard != 0:
+            raise IndexError(f"unsharded reader has one shard, got {shard}")
+        return self.readers[index_name].open_cursor(key)
+
     def group_of(self, index_name: str, key: Hashable) -> int:
         return self.readers[index_name].group_of(key)
 
@@ -265,6 +370,14 @@ class ShardedIndexSetReader:
     def lookup_shard(self, shard: int, index_name: str, key: Hashable) -> np.ndarray:
         """One shard's posting subset for a key (the scatter primitive)."""
         return self.shard_readers[shard][index_name].lookup(key)
+
+    def open_cursor_shard(
+        self, shard: int, index_name: str, key: Hashable
+    ) -> ReaderCursor:
+        """Lazy cursor over one shard's posting subset.  Per-shard cursors
+        share the set-wide posting cache under the shard's namespace, so a
+        fully drained cursor warms exactly the slot ``lookup_shard`` uses."""
+        return self.shard_readers[shard][index_name].open_cursor(key)
 
     def lookup(self, index_name: str, key: Hashable) -> np.ndarray:
         """Whole-set lookup: scatter to every shard, gather by merge."""

@@ -43,7 +43,7 @@ import numpy as np
 
 import jax.numpy as jnp
 
-from repro.core.sharded_set import merge_shard_postings
+from repro.core.sharded_set import merge_shard_chunks, merge_shard_postings
 from repro.search.join import (
     JOIN_BACKENDS,
     _jax_dtype_for,
@@ -56,6 +56,8 @@ from repro.search.join import (
 from repro.search.plan import (
     ROUTE_MULTI,
     ROUTE_ORDINARY,
+    ROUTE_STOPSEQ,
+    ROUTE_WV,
     KeyLookup,
     MultiKeySpec,
     Query,
@@ -63,9 +65,20 @@ from repro.search.plan import (
     QueryResult,
     plan_batch,
 )
+from repro.core.inverted_index import PostingCursor
 from repro.search.reader import IndexSetReader, ShardedIndexSetReader
 
 _EMPTY = np.zeros((0, 2), dtype=np.int64)
+_INF = float("inf")
+
+
+class TraceIncompleteError(RuntimeError):
+    """The executor's trace failed the completeness invariant: a planned
+    fetch wave / lookup / cursor chunk is neither recorded as executed nor
+    as explicitly skipped.  Raised by
+    :meth:`SearchService.check_trace_complete` — the guard that keeps the
+    route-census/trace observability honest (an optimization that silently
+    drops accounting would otherwise look like saved I/O)."""
 
 QueryLike = Union[Query, Sequence[int]]
 
@@ -117,7 +130,8 @@ class SearchService:
         self.multi: Optional[MultiKeySpec] = None
         if use_multi and "multi" in self.index_set.indexes:
             mi = self.index_set.indexes["multi"]
-            self.multi = MultiKeySpec(k=mi.k, pack=mi.pack)
+            self.multi = MultiKeySpec(k=mi.k, pack=mi.pack,
+                                      cover=mi.cover_keys)
         if callable(backend):
             self.backend: Union[str, Callable] = backend
         elif backend in JOIN_BACKENDS:
@@ -152,8 +166,10 @@ class SearchService:
         words: Sequence[int],
         window: Optional[int] = None,
         phrase: bool = False,
+        top_k: Optional[int] = None,
     ) -> QueryResult:
-        q = Query(tuple(int(w) for w in words), window, phrase=phrase)
+        q = Query(tuple(int(w) for w in words), window, phrase=phrase,
+                  top_k=top_k)
         return self.search_batch([q])[0]
 
     def search_batch(self, queries: Sequence[QueryLike]) -> List[QueryResult]:
@@ -162,12 +178,29 @@ class SearchService:
         ordinary: List[Tuple[int, List[ShardPosts]]] = []
         posts: Dict[Tuple[str, int], ShardPosts] = {}
 
-        # countdown of unlanded lookups per query, so each query finalizes
-        # the moment its last wave lands (overlapping the next fetch wave)
-        pending = [len({(lk.index, lk.key) for lk in pq.lookups})
-                   for pq in plan.queries]
+        # best-k queries take the streaming (lazy cursor) stage; their
+        # lookups are deferred out of the batch scatter-fetch waves unless
+        # a batch query also needs the same (index, key)
+        streaming = [i for i, pq in enumerate(plan.queries)
+                     if pq.top_k is not None]
+        batch_idents = {
+            (lk.index, lk.key)
+            for pq in plan.queries if pq.top_k is None
+            for lk in pq.lookups
+        }
+
+        # countdown of unlanded lookups per batch query, so each query
+        # finalizes the moment its last wave lands (overlapping the next
+        # fetch wave); streaming queries never enter the countdown
+        pending = [
+            len({(lk.index, lk.key) for lk in pq.lookups})
+            if pq.top_k is None else -1
+            for pq in plan.queries
+        ]
         waiting: Dict[Tuple[str, int], List[int]] = {}
         for i, pq in enumerate(plan.queries):
+            if pq.top_k is not None:
+                continue
             for lk in pq.lookups:
                 waiting.setdefault((lk.index, lk.key), [])
                 if i not in waiting[(lk.index, lk.key)]:
@@ -183,8 +216,10 @@ class SearchService:
                         done += 1
             return done
 
-        self._scatter_fetch(plan, posts, on_landed)             # stage 2
+        self._scatter_fetch(plan, posts, on_landed, batch_idents)  # stage 2
         self._execute_ordinary(plan, ordinary, results)         # stages 3+4
+        self._execute_streaming(plan, streaming, results, posts)  # top-k stage
+        self.check_trace_complete(plan)
         return results
 
     # --------------------------------------------- stage 2: scatter-fetch --
@@ -193,18 +228,43 @@ class SearchService:
         plan: QueryPlan,
         posts: Dict[Tuple[str, int], ShardPosts],
         on_landed: Callable[[List[Tuple[str, int]]], int],
+        batch_idents: Optional[set] = None,
     ) -> None:
         """Fetch each unique (index, key) once from every shard, walking
         (index, group) waves in order so lookups of the same dictionary
         group run back to back.  With ``prefetch`` on, wave ``i+1``'s
         device reads run on a worker thread while wave ``i``'s completed
-        queries finalize (host joins) on this thread."""
+        queries finalize (host joins) on this thread.
+
+        Lookups needed ONLY by best-k queries are *deferred* to the
+        streaming stage (recorded, never silently dropped): a wave whose
+        lookups all defer is an explicitly ``skipped_wave``.  The trace
+        invariant ``waves == executed_waves + skipped_waves`` and
+        ``lookups_planned == lookups_fetched + lookups_deferred`` is
+        enforced by :meth:`check_trace_complete` after every batch."""
         S = self.n_shards
         shard_s = [0.0] * S
-        trace = {"waves": 0, "prefetched_waves": 0,
+        trace = {"waves": 0, "executed_waves": 0, "skipped_waves": 0,
+                 "lookups_planned": plan.n_unique_lookups,
+                 "lookups_fetched": 0, "lookups_deferred": 0,
+                 "prefetched_waves": 0,
                  "overlapped_finalizes": 0, "shard_fetch_s": shard_s}
-        waves = [plan.grouped[k] for k in sorted(plan.grouped)]
-        trace["waves"] = len(waves)
+        waves = []
+        for gkey in sorted(plan.grouped):
+            wave = plan.grouped[gkey]
+            if batch_idents is not None:
+                keep = [lk for lk in wave
+                        if (lk.index, lk.key) in batch_idents]
+            else:
+                keep = wave
+            trace["waves"] += 1
+            trace["lookups_deferred"] += len(wave) - len(keep)
+            if not keep:
+                trace["skipped_waves"] += 1
+                continue
+            trace["executed_waves"] += 1
+            trace["lookups_fetched"] += len(keep)
+            waves.append(keep)
 
         def fetch_wave(wave: List[KeyLookup]) -> List[Tuple[Tuple[str, int], ShardPosts]]:
             out = []
@@ -273,12 +333,14 @@ class SearchService:
                 self._phrase_chain([f[s] for f in fetched])
                 for s in range(self.n_shards)
             ])
-            results[qi] = QueryResult(np.unique(acc[:, 0]), acc, log,
-                                      scanned, pq.route)
+            docs, counts = np.unique(acc[:, 0], return_counts=True)
+            results[qi] = QueryResult(docs, acc, log, scanned, pq.route,
+                                      counts)
         else:
             p = merge_shard_postings(fetched[0])
-            results[qi] = QueryResult(np.unique(p[:, 0]), p, log, scanned,
-                                      pq.route)
+            docs, counts = np.unique(p[:, 0], return_counts=True)
+            results[qi] = QueryResult(docs, p, log, scanned, pq.route,
+                                      counts)
 
     @staticmethod
     def _phrase_chain(fetched: List[np.ndarray]) -> np.ndarray:
@@ -315,9 +377,9 @@ class SearchService:
         for qi, _ in jobs:
             acc = merge_shard_postings([accs[(qi, s)] for s in range(S)])
             r = results[qi]
+            docs, counts = np.unique(acc[:, 0], return_counts=True)
             results[qi] = QueryResult(
-                np.unique(acc[:, 0]), acc, r.lookups, r.postings_scanned,
-                r.route,
+                docs, acc, r.lookups, r.postings_scanned, r.route, counts,
             )
 
     def _join_many(
@@ -369,3 +431,211 @@ class SearchService:
             for r, (idx, a, _akey, _bkey, _w) in enumerate(jobs):
                 out[idx] = a[mask[r, : a.shape[0]]]
         return out
+
+    # ------------------------------- streaming top-k stage (lazy cursors) --
+    def _execute_streaming(
+        self,
+        plan: QueryPlan,
+        streaming: List[int],
+        results: List[Optional[QueryResult]],
+        posts: Optional[Dict[Tuple[str, int], ShardPosts]] = None,
+    ) -> None:
+        """Serve every best-k query through lazy cursors, aggregating the
+        chunks-fetched/skipped and bytes-saved observability into
+        ``last_trace['topk']``.  ``posts`` carries the batch stage's
+        already-fetched lookups: a key shared with a batch query streams
+        from those rows at zero extra device I/O instead of re-reading."""
+        if not streaming:
+            return
+        t = {"queries": len(streaming), "early_terminated": 0,
+             "chunks_planned": 0, "chunks_fetched": 0, "chunks_skipped": 0,
+             "bytes_planned": 0, "bytes_fetched": 0, "bytes_skipped": 0}
+        for qi in streaming:
+            results[qi] = self._search_topk(plan.queries[qi], t,
+                                            posts or {})
+        self.last_trace["topk"] = t
+
+    def _search_topk(
+        self,
+        pq,
+        trace: Dict[str, int],
+        posts: Dict[Tuple[str, int], ShardPosts],
+    ) -> QueryResult:
+        """Best-k execution of one query over per-(lookup, shard) cursors.
+
+        Every cursor delivers its key's postings in (doc, pos) order, so a
+        cursor's *settled bound* — the doc id of its last delivered row
+        (``+inf`` once exhausted) — is a lower bound on everything it has
+        not delivered yet: no future chunk of any cursor can produce a
+        match in a doc strictly below the minimum bound over all cursors.
+        The loop joins the settled prefix, and stops fetching the moment
+        ``k`` matching docs lie below the global bound (the bounded best-k
+        set is provably final — remaining chunks are skipped), or when
+        every cursor is exhausted (``top_k >= total matches``: the result
+        degenerates to the exhaustive answer).  Per-shard cursors merge by
+        this same global bound, so scatter/gather and the 1-shard case
+        share one code path.
+        """
+        k = pq.top_k
+        S = self.n_shards
+        # one cursor per unique (index, key) — a repeated lookup inside
+        # one query (e.g. a periodic phrase's cover) shares the stream
+        idents: List[KeyLookup] = []
+        slot: Dict[Tuple[str, int], int] = {}
+        for lk in pq.lookups:
+            ident = (lk.index, lk.key)
+            if ident not in slot:
+                slot[ident] = len(idents)
+                idents.append(lk)
+        lookup_slots = [slot[(lk.index, lk.key)] for lk in pq.lookups]
+
+        def open_cursor(s: int, lk: KeyLookup):
+            fetched = posts.get((lk.index, lk.key))
+            if fetched is not None:
+                # the batch waves already read this key: stream its rows
+                # as one zero-I/O chunk (same shape as a cache hit)
+                return PostingCursor.from_array(fetched[s])
+            return self.reader.open_cursor_shard(s, lk.index, lk.key)
+
+        cursors = [
+            [open_cursor(s, lk) for s in range(S)]
+            for lk in idents
+        ]
+        flat = [c for row in cursors for c in row]
+
+        # incremental settled-region execution: matches are per-doc (no
+        # join crosses a doc boundary), so joining ONLY the newly settled
+        # [prev_bound, bound) rows each round and appending reproduces the
+        # full-prefix join — every delivered row is merged and joined once
+        pending: List[np.ndarray] = [_EMPTY] * len(idents)
+        fresh: List[List[List[np.ndarray]]] = [
+            [[] for _ in range(S)] for _ in idents
+        ]
+        acc_parts: List[np.ndarray] = []
+        n_docs = 0
+        prev_bound = -_INF
+        while True:
+            bound = min(c.settled_bound for c in flat)
+            if bound > prev_bound:
+                region = []
+                for i in range(len(idents)):
+                    merged = merge_shard_chunks([[pending[i]]] + fresh[i])
+                    fresh[i] = [[] for _ in range(S)]
+                    if bound < _INF:
+                        cut = int(np.searchsorted(merged[:, 0], bound))
+                        region.append(merged[:cut])
+                        pending[i] = merged[cut:]
+                    else:
+                        region.append(merged)
+                        pending[i] = _EMPTY
+                part = self._streaming_join(
+                    pq, [region[i] for i in lookup_slots]
+                )
+                if part.shape[0]:
+                    acc_parts.append(part)
+                    n_docs += int(np.unique(part[:, 0]).shape[0])
+                prev_bound = bound
+                if n_docs >= k or bound == _INF:
+                    break
+            elif bound == _INF:  # nothing newly settled and all drained
+                break
+            # advance the laggards: every cursor sitting at the bound is
+            # fetched until it clears it (every such chunk is required
+            # before the global bound can rise), so the bound strictly
+            # increases per round
+            for i, row in enumerate(cursors):
+                for s, c in enumerate(row):
+                    while not c.exhausted and c.settled_bound <= bound:
+                        chunk = c.next_chunk()
+                        if chunk is not None and chunk.shape[0]:
+                            fresh[i][s].append(chunk)
+
+        acc = (
+            acc_parts[0] if len(acc_parts) == 1
+            else np.concatenate(acc_parts, axis=0) if acc_parts
+            else _EMPTY
+        )
+        docs, counts = np.unique(acc[:, 0], return_counts=True)
+
+        trace["early_terminated"] += any(not c.exhausted for c in flat)
+        for c in flat:
+            trace["chunks_planned"] += c.chunks_total
+            trace["chunks_fetched"] += c.chunks_fetched
+            trace["chunks_skipped"] += c.chunks_skipped
+            trace["bytes_planned"] += c.bytes_total
+            trace["bytes_fetched"] += c.bytes_fetched
+            trace["bytes_skipped"] += c.bytes_skipped
+
+        top_docs = docs[:k]
+        witnesses = acc[np.isin(acc[:, 0], top_docs)] if acc.shape[0] else acc
+        log = [(lk.index, lk.key) for lk in pq.lookups]
+        # count delivered postings per LOOKUP OCCURRENCE (a duplicated
+        # cover key streams once but is scanned by both positions), so a
+        # full drain reports exactly the batch stage's postings_scanned
+        per_ident = [sum(c.postings_delivered for c in row)
+                     for row in cursors]
+        scanned = sum(per_ident[i] for i in lookup_slots)
+        return QueryResult(top_docs, witnesses, log, scanned, pq.route,
+                           counts[:k])
+
+    def _streaming_join(
+        self, pq, prefix: List[np.ndarray]
+    ) -> np.ndarray:
+        """Join the settled prefix of every lookup — the same staged exact
+        joins as the batch stage, on the numpy oracle path (prefixes are
+        small by construction: the loop stops at ~k matching docs)."""
+        if pq.route in (ROUTE_STOPSEQ, ROUTE_WV):
+            return prefix[0]
+        acc = prefix[0]
+        if pq.route == ROUTE_MULTI or pq.query.phrase:
+            for dist, nxt in enumerate(prefix[1:], start=1):
+                acc = numpy_phrase_join(acc, nxt, dist)
+        else:
+            for nxt in prefix[1:]:
+                acc = numpy_window_join(acc, nxt, pq.window)
+        return acc
+
+    # ------------------------------------------- trace completeness guard --
+    def check_trace_complete(self, plan: Optional[QueryPlan] = None) -> None:
+        """Assert every planned fetch was either executed or explicitly
+        skipped/deferred in ``last_trace`` (and, for the streaming stage,
+        every cursor chunk either fetched or skipped).  Runs after every
+        ``search_batch``; raises :class:`TraceIncompleteError` so a future
+        edit that drops a wave without accounting for it fails loudly
+        instead of masquerading as saved I/O."""
+        tr = self.last_trace
+        if tr.get("waves", 0) != (
+            tr.get("executed_waves", 0) + tr.get("skipped_waves", 0)
+        ):
+            raise TraceIncompleteError(
+                f"waves {tr.get('waves')} != executed "
+                f"{tr.get('executed_waves')} + skipped "
+                f"{tr.get('skipped_waves')}"
+            )
+        if tr.get("lookups_planned", 0) != (
+            tr.get("lookups_fetched", 0) + tr.get("lookups_deferred", 0)
+        ):
+            raise TraceIncompleteError(
+                f"lookups planned {tr.get('lookups_planned')} != fetched "
+                f"{tr.get('lookups_fetched')} + deferred "
+                f"{tr.get('lookups_deferred')}"
+            )
+        if plan is not None and tr.get("lookups_planned") != plan.n_unique_lookups:
+            raise TraceIncompleteError(
+                f"trace covers {tr.get('lookups_planned')} lookups, plan "
+                f"has {plan.n_unique_lookups}"
+            )
+        tk = tr.get("topk")
+        if tk is not None:
+            if tk["chunks_planned"] != tk["chunks_fetched"] + tk["chunks_skipped"]:
+                raise TraceIncompleteError(
+                    f"cursor chunks planned {tk['chunks_planned']} != "
+                    f"fetched {tk['chunks_fetched']} + skipped "
+                    f"{tk['chunks_skipped']}"
+                )
+            if tk["bytes_planned"] != tk["bytes_fetched"] + tk["bytes_skipped"]:
+                raise TraceIncompleteError(
+                    f"cursor bytes planned {tk['bytes_planned']} != "
+                    f"fetched {tk['bytes_fetched']} + skipped "
+                    f"{tk['bytes_skipped']}"
+                )

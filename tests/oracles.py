@@ -1,0 +1,201 @@
+"""Shared correctness scaffolding for the read-stack test suites.
+
+One home for the oracles and equivalence helpers that were duplicated
+across ``test_multi_key.py``, ``test_search_service.py`` and
+``test_sharded_set.py`` — so every future route/executor lands
+pre-verified against the same brute-force references:
+
+  * :func:`oracle_phrase` — the token-stream phrase oracle: scans the raw
+    corpus, no index involved, honoring every lemma reading;
+  * :func:`words_of_class` / :func:`mixed_queries` — per-class word pools
+    and the canonical mixed multi-route query stream;
+  * :func:`spec_to_query` / :data:`QUERY_SPEC` — the hypothesis query
+    strategy shared by the cross-backend and cross-shard property suites;
+  * :func:`assert_results_identical` — the element-wise QueryResult
+    equivalence check (docs, witnesses, lookups, scanned, route, scores);
+  * :func:`topk_head` — the exhaustive executor's sorted head, i.e. what
+    a ``Query(top_k=N)`` result must equal element-wise.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from tests._hypothesis_compat import strategies as st
+
+from repro.core.lexicon import FREQUENT, OTHER, STOP
+from repro.search import Query, QueryResult
+
+
+# --------------------------------------------------------- lemma readings --
+def readings(lex, token) -> set:
+    """Every lemma id a token can read as (primary, secondary, unknown)."""
+    token = int(token)
+    if token >= lex.known_cutoff:
+        return {lex.n_lemmas + token}
+    out = {int(lex.lemma1[token])}
+    if lex.lemma2[token] >= 0:
+        out.add(int(lex.lemma2[token]))
+    return out
+
+
+def word_for_lemma(lex) -> dict:
+    """lemma id -> some word whose PRIMARY reading is that lemma."""
+    inv = {}
+    for w in range(lex.n_words):
+        l = int(lex.lemma1[w])
+        if l >= 0 and l not in inv:
+            inv[l] = w
+    for w in range(lex.known_cutoff, lex.n_words):
+        inv[lex.n_lemmas + w] = w
+    return inv
+
+
+# --------------------------------------------------- brute-force oracles --
+def oracle_phrase(lex, parts, words, doc0: int = 0) -> set:
+    """Scan the raw token stream: every (doc, start) where word j's
+    primary lemma is among the readings of token start+j."""
+    lemmas, _ = lex.classify_words(np.asarray(words, np.int64))
+    hits = set()
+    base = doc0
+    for toks, offs in parts:
+        for d in range(offs.shape[0] - 1):
+            s, e = int(offs[d]), int(offs[d + 1])
+            for p in range(e - s - len(words) + 1):
+                if all(
+                    int(lemmas[j]) in readings(lex, toks[s + p + j])
+                    for j in range(len(words))
+                ):
+                    hits.add((base + d, p))
+        base += offs.shape[0] - 1
+    return hits
+
+
+# ---------------------------------------------------------- query streams --
+def words_of_class(lex, cls, n: int = 12) -> List[int]:
+    out = []
+    for w in range(lex.n_words):
+        l = lex.lemma1[w]
+        if l >= 0 and lex.lemma_class[l] == cls:
+            out.append(int(w))
+            if len(out) == n:
+                break
+    return out
+
+
+def class_pools(lex) -> dict:
+    """The {STOP, FREQUENT, OTHER} word pools the query builders draw on."""
+    return {cls: words_of_class(lex, cls) for cls in (STOP, FREQUENT, OTHER)}
+
+
+def mixed_queries(lex, n: int = 64, seed: int = 5) -> List[List[int]]:
+    """>= n queries hitting all three proximity planner routes, with
+    repeats so a batch exercises lookup dedup and the posting cache."""
+    rng = np.random.RandomState(seed)
+    stop = words_of_class(lex, STOP)
+    freq = words_of_class(lex, FREQUENT)
+    other = words_of_class(lex, OTHER)
+    qs = []
+    while len(qs) < n:
+        kind = len(qs) % 4
+        if kind == 0:
+            qs.append([rng.choice(stop), rng.choice(stop)])
+        elif kind == 1:
+            qs.append([rng.choice(stop), rng.choice(stop), rng.choice(stop)])
+        elif kind == 2:
+            qs.append([rng.choice(freq), rng.choice(other)])
+        else:
+            pool = rng.choice(other, size=rng.randint(2, 4), replace=False)
+            qs.append([int(w) for w in pool])
+    return [[int(w) for w in q] for q in qs]
+
+
+# hypothesis strategy for one drawn query: (kind, pool picks, phrase
+# anchor, window, phrase-kind randomizer) — decoded by spec_to_query
+QUERY_SPEC = st.tuples(
+    st.integers(0, 5),        # query kind
+    st.integers(0, 11),       # word pool picks
+    st.integers(0, 11),
+    st.integers(0, 11),
+    st.integers(0, 100_000),  # phrase anchor in the token stream
+    st.integers(1, 3),        # window
+    st.integers(0, 1),        # phrase-kind randomizer
+)
+
+
+def spec_to_query(spec, toks, pools) -> Query:
+    """Decode one :data:`QUERY_SPEC` draw against a corpus + word pools.
+
+    Kinds 0-3 are the proximity routes (stop pair/triple, freq+other,
+    other pair/triple); kinds 4-5 lift 3-5 word phrases from the real
+    token stream so they have occurrences."""
+    kind, i, j, l, tpos, win, ph = spec
+    stop, freq, other = pools[STOP], pools[FREQUENT], pools[OTHER]
+    window = win if ph == 0 else None
+    if kind == 0:
+        return Query((stop[i], stop[j]), window)
+    if kind == 1:
+        return Query((stop[i], stop[j], stop[l]), window)
+    if kind == 2:
+        return Query((freq[i], other[j]), window)
+    if kind == 3:
+        return Query((other[i], other[j], other[l]), window)
+    L = 3 + (kind == 5) * (1 + l % 2)  # 3, 4 or 5 words
+    s = tpos % (toks.shape[0] - L)
+    return Query(tuple(int(t) for t in toks[s : s + L]), phrase=True)
+
+
+def core_queries(toks, pools) -> List[Query]:
+    """The fixed batch core guaranteeing all four planner routes appear."""
+    stop, freq, other = pools[STOP], pools[FREQUENT], pools[OTHER]
+    return [
+        Query((stop[0], stop[1])),
+        Query((stop[2], stop[3], stop[4])),
+        Query((freq[0], other[0])),
+        Query((other[1], other[2])),
+        Query(tuple(int(t) for t in toks[5:8]), phrase=True),
+        Query(tuple(int(t) for t in toks[9:13]), phrase=True),
+    ]
+
+
+# --------------------------------------------------- equivalence helpers --
+def assert_results_identical(
+    ref: QueryResult, got: QueryResult, ctx=None, check_route: bool = True
+) -> None:
+    """Element-wise QueryResult identity: docs, witnesses, lookups,
+    postings_scanned, route and (when both carry them) scores."""
+    if check_route:
+        assert got.route == ref.route, (ctx, ref.route, got.route)
+    assert np.array_equal(ref.docs, got.docs), ctx
+    assert np.array_equal(ref.witnesses, got.witnesses), ctx
+    assert ref.lookups == got.lookups, ctx
+    assert ref.postings_scanned == got.postings_scanned, ctx
+    if ref.scores is not None and got.scores is not None:
+        assert np.array_equal(ref.scores, got.scores), ctx
+
+
+def topk_head(
+    ref: QueryResult, k: int
+) -> Tuple[np.ndarray, np.ndarray, Optional[np.ndarray]]:
+    """The exhaustive executor's sorted head: what ``Query(top_k=k)``
+    must return — the first k docs (ascending doc id), their witness
+    rows, and their per-doc scores."""
+    docs = ref.docs[:k]
+    wits = ref.witnesses[np.isin(ref.witnesses[:, 0], docs)]
+    scores = None if ref.scores is None else ref.scores[:k]
+    return docs, wits, scores
+
+
+def assert_topk_matches_head(
+    ref: QueryResult, got: QueryResult, k: int, ctx=None
+) -> None:
+    """``got`` (a top-k result) equals the exhaustive ``ref``'s head."""
+    docs, wits, scores = topk_head(ref, k)
+    assert got.route == ref.route, (ctx, ref.route, got.route)
+    assert np.array_equal(got.docs, docs), (ctx, k)
+    assert np.array_equal(got.witnesses, wits), (ctx, k)
+    if scores is not None and got.scores is not None:
+        assert np.array_equal(got.scores, scores), (ctx, k)
+    assert got.lookups == ref.lookups, (ctx, k)

@@ -1,5 +1,8 @@
 """Multi-component (k-word) key index: brute-force oracle equivalence,
-storage-tier coverage, key packing, and I/O accounting rows."""
+storage-tier coverage, key packing, and I/O accounting rows.
+
+The token-stream oracle and lemma-reading helpers live in
+``tests/oracles.py`` (shared with the service/sharded suites)."""
 
 import numpy as np
 import pytest
@@ -17,6 +20,7 @@ from repro.core.strategies import StrategyConfig
 from repro.core.text_index import IndexSetConfig, TextIndexSet
 from repro.data.corpus import generate_part
 from repro.search import ROUTE_MULTI, Query, SearchService
+from tests.oracles import oracle_phrase, readings, word_for_lemma
 
 
 # a tiny, hot vocabulary: trigram keys repeat heavily, so with a tiny
@@ -45,47 +49,6 @@ def tiered_world():
         ts.add_documents(toks, offs, doc0)
         doc0 += offs.shape[0] - 1
     return lex, parts, ts
-
-
-def _readings(lex, token):
-    token = int(token)
-    if token >= lex.known_cutoff:
-        return {lex.n_lemmas + token}
-    out = {int(lex.lemma1[token])}
-    if lex.lemma2[token] >= 0:
-        out.add(int(lex.lemma2[token]))
-    return out
-
-
-def oracle_phrase(lex, parts, words, doc0=0):
-    """Scan the raw token stream: every (doc, start) where word j's
-    primary lemma is among the readings of token start+j."""
-    lemmas, _ = lex.classify_words(np.asarray(words, np.int64))
-    hits = set()
-    base = doc0
-    for toks, offs in parts:
-        for d in range(offs.shape[0] - 1):
-            s, e = int(offs[d]), int(offs[d + 1])
-            for p in range(e - s - len(words) + 1):
-                if all(
-                    int(lemmas[j]) in _readings(lex, toks[s + p + j])
-                    for j in range(len(words))
-                ):
-                    hits.add((base + d, p))
-        base += offs.shape[0] - 1
-    return hits
-
-
-def _word_for_lemma(lex):
-    """lemma id -> some word whose PRIMARY reading is that lemma."""
-    inv = {}
-    for w in range(lex.n_words):
-        l = int(lex.lemma1[w])
-        if l >= 0 and l not in inv:
-            inv[l] = w
-    for w in range(lex.known_cutoff, lex.n_words):
-        inv[lex.n_lemmas + w] = w
-    return inv
 
 
 # ----------------------------------------------------------- oracle tests --
@@ -120,7 +83,7 @@ def test_oracle_holds_across_storage_tiers(tiered_world):
     assert K_EM in kinds, "tiny keys should stay inline in the dictionary"
     assert streams_used - {"em"}, f"no stream-backed tiers populated: {census}"
 
-    inv = _word_for_lemma(lex)
+    inv = word_for_lemma(lex)
     svc = SearchService(ts, window=3)
     covered = set()
     for key, e in mi.dict.entries.items():
@@ -212,7 +175,7 @@ def test_extraction_postings_are_exact_windows():
         for doc, pos in posts.tolist():
             s = int(offs[doc])
             assert all(
-                lemmas[j] in _readings(lex, toks[s + pos + j]) for j in range(3)
+                lemmas[j] in readings(lex, toks[s + pos + j]) for j in range(3)
             )
             n_checked += 1
         # sorted, unique rows

@@ -1,6 +1,10 @@
 """Reader/Planner/Executor stack: batched results identical to per-query
 search, cache hits free, joins exact beyond int32 packing, and all four
-planner routes element-wise identical across join backends."""
+planner routes element-wise identical across join backends.
+
+Query streams, the hypothesis query strategy and the element-wise
+equivalence assertion live in ``tests/oracles.py`` (shared with the
+multi-key and sharded suites)."""
 
 import functools
 
@@ -27,6 +31,15 @@ from repro.search import (
     numpy_window_join,
     pos_scale,
 )
+from tests.oracles import (
+    QUERY_SPEC,
+    assert_results_identical,
+    class_pools,
+    core_queries,
+    mixed_queries,
+    spec_to_query,
+    words_of_class,
+)
 
 BACKENDS = ("numpy", "jax", "pallas")
 
@@ -47,39 +60,6 @@ def small_world():
     ts.add_documents(t1, o1, 0)
     ts.add_documents(t2, o2, 150)
     return lex, ts
-
-
-def words_of_class(lex, cls, n=12):
-    out = []
-    for w in range(lex.n_words):
-        l = lex.lemma1[w]
-        if l >= 0 and lex.lemma_class[l] == cls:
-            out.append(int(w))
-            if len(out) == n:
-                break
-    return out
-
-
-def mixed_queries(lex, n=64, seed=5):
-    """>= n queries hitting all three planner routes, with repeats so the
-    batch exercises lookup dedup and the posting cache."""
-    rng = np.random.RandomState(seed)
-    stop = words_of_class(lex, STOP)
-    freq = words_of_class(lex, FREQUENT)
-    other = words_of_class(lex, OTHER)
-    qs = []
-    while len(qs) < n:
-        kind = len(qs) % 4
-        if kind == 0:
-            qs.append([rng.choice(stop), rng.choice(stop)])
-        elif kind == 1:
-            qs.append([rng.choice(stop), rng.choice(stop), rng.choice(stop)])
-        elif kind == 2:
-            qs.append([rng.choice(freq), rng.choice(other)])
-        else:
-            pool = rng.choice(other, size=rng.randint(2, 4), replace=False)
-            qs.append([int(w) for w in pool])
-    return [[int(w) for w in q] for q in qs]
 
 
 # ------------------------------------------------------------ the planner --
@@ -123,10 +103,7 @@ def test_batched_identical_to_per_query(small_world, backend):
     for q, r in zip(qs, batch):
         ref = eng.search(q)
         routes.add(r.route)
-        assert np.array_equal(ref.docs, r.docs), (backend, q)
-        assert np.array_equal(ref.witnesses, r.witnesses), (backend, q)
-        assert ref.lookups == r.lookups, (backend, q)
-        assert ref.postings_scanned == r.postings_scanned, (backend, q)
+        assert_results_identical(ref, r, ctx=(backend, q))
     assert routes == {ROUTE_STOPSEQ, ROUTE_WV, ROUTE_ORDINARY}
 
 
@@ -425,75 +402,31 @@ def _equiv_world(seed: int):
     )
     ts = TextIndexSet(cfg, lex, seed=0)
     ts.add_documents(toks, offs, 0)
-    pools = {
-        cls: words_of_class(lex, cls) for cls in (STOP, FREQUENT, OTHER)
-    }
+    pools = class_pools(lex)
     services = {b: SearchService(ts, window=3, backend=b) for b in BACKENDS}
     return lex, toks, pools, services
-
-
-def _spec_to_query(spec, lex, toks, pools):
-    kind, i, j, l, tpos, win, ph = spec
-    stop, freq, other = pools[STOP], pools[FREQUENT], pools[OTHER]
-    window = win if ph == 0 else None
-    if kind == 0:
-        return Query((stop[i], stop[j]), window)
-    if kind == 1:
-        return Query((stop[i], stop[j], stop[l]), window)
-    if kind == 2:
-        return Query((freq[i], other[j]), window)
-    if kind == 3:
-        return Query((other[i], other[j], other[l]), window)
-    # phrase queries lifted from the real token stream (so they hit)
-    L = 3 + (kind == 5) * (1 + l % 2)  # 3, 4 or 5 words
-    s = tpos % (toks.shape[0] - L)
-    return Query(tuple(int(t) for t in toks[s : s + L]), phrase=True)
 
 
 @settings(max_examples=15, deadline=None)
 @given(
     st.sampled_from((0, 1)),
-    st.lists(
-        st.tuples(
-            st.integers(0, 5),        # query kind
-            st.integers(0, 11),       # word pool picks
-            st.integers(0, 11),
-            st.integers(0, 11),
-            st.integers(0, 100_000),  # phrase anchor in the token stream
-            st.integers(1, 3),        # window
-            st.integers(0, 1),        # phrase-kind randomizer
-        ),
-        min_size=0,
-        max_size=10,
-    ),
+    st.lists(QUERY_SPEC, min_size=0, max_size=10),
 )
 def test_cross_backend_equivalence_all_routes(world_seed, specs):
     """Property: numpy, jax and pallas return element-wise identical
     docs/witnesses/lookups for every planner route.  Each batch carries a
     fixed core hitting all four routes plus the drawn random queries."""
     lex, toks, pools, services = _equiv_world(world_seed)
-    stop, freq, other = pools[STOP], pools[FREQUENT], pools[OTHER]
-    core = [
-        Query((stop[0], stop[1])),
-        Query((stop[2], stop[3], stop[4])),
-        Query((freq[0], other[0])),
-        Query((other[1], other[2])),
-        Query(tuple(int(t) for t in toks[5:8]), phrase=True),
-        Query(tuple(int(t) for t in toks[9:13]), phrase=True),
+    queries = core_queries(toks, pools) + [
+        spec_to_query(s, toks, pools) for s in specs
     ]
-    queries = core + [_spec_to_query(s, lex, toks, pools) for s in specs]
     results = {b: services[b].search_batch(queries) for b in BACKENDS}
     routes = set()
     for qi, q in enumerate(queries):
         ref = results["numpy"][qi]
         routes.add(ref.route)
         for b in ("jax", "pallas"):
-            got = results[b][qi]
-            assert got.route == ref.route, (b, q)
-            assert np.array_equal(ref.docs, got.docs), (b, q)
-            assert np.array_equal(ref.witnesses, got.witnesses), (b, q)
-            assert ref.lookups == got.lookups, (b, q)
-            assert ref.postings_scanned == got.postings_scanned, (b, q)
+            assert_results_identical(ref, results[b][qi], ctx=(b, q))
     assert routes >= {ROUTE_STOPSEQ, ROUTE_WV, ROUTE_ORDINARY, ROUTE_MULTI}
 
 

@@ -30,7 +30,15 @@ from repro.search import (
     SearchService,
     ShardedIndexSetReader,
 )
-from tests.test_search_service import mixed_queries, words_of_class
+from tests.oracles import (
+    QUERY_SPEC,
+    assert_results_identical,
+    class_pools,
+    core_queries,
+    mixed_queries,
+    spec_to_query,
+    words_of_class,
+)
 
 BACKENDS = ("numpy", "jax", "pallas")
 SHARD_COUNTS = (1, 2, 4)
@@ -65,7 +73,7 @@ def _worlds():
         s.add_documents(*parts[0], 0)
         s.add_documents(*parts[1], 60)
     toks = parts[0][0]
-    pools = {c: words_of_class(lex, c) for c in (STOP, FREQUENT, OTHER)}
+    pools = class_pools(lex)
     return lex, toks, pools, ts, sharded
 
 
@@ -152,40 +160,8 @@ def test_per_shard_io_reports_sum_to_aggregate():
 
 
 # --------------------------------------------- scatter/gather equivalence --
-def _spec_to_query(spec, toks, pools):
-    kind, i, j, l, tpos, win, ph = spec
-    stop, freq, other = pools[STOP], pools[FREQUENT], pools[OTHER]
-    window = win if ph == 0 else None
-    if kind == 0:
-        return Query((stop[i], stop[j]), window)
-    if kind == 1:
-        return Query((stop[i], stop[j], stop[l]), window)
-    if kind == 2:
-        return Query((freq[i], other[j]), window)
-    if kind == 3:
-        return Query((other[i], other[j], other[l]), window)
-    # phrase queries lifted from the real token stream (so they hit)
-    L = 3 + (kind == 5) * (1 + l % 2)  # 3, 4 or 5 words
-    s = tpos % (toks.shape[0] - L)
-    return Query(tuple(int(t) for t in toks[s : s + L]), phrase=True)
-
-
 @settings(max_examples=12, deadline=None)
-@given(
-    st.lists(
-        st.tuples(
-            st.integers(0, 5),        # query kind
-            st.integers(0, 11),       # word pool picks
-            st.integers(0, 11),
-            st.integers(0, 11),
-            st.integers(0, 100_000),  # phrase anchor in the token stream
-            st.integers(1, 3),        # window
-            st.integers(0, 1),        # phrase-kind randomizer
-        ),
-        min_size=0,
-        max_size=8,
-    ),
-)
+@given(st.lists(QUERY_SPEC, min_size=0, max_size=8))
 def test_sharded_equivalence_all_routes_all_backends(specs):
     """Property: ShardedTextIndexSet(n_shards ∈ {1,2,4}) returns
     element-wise identical QueryResults to the unsharded set across all
@@ -193,27 +169,16 @@ def test_sharded_equivalence_all_routes_all_backends(specs):
     core hitting every route plus the drawn random queries."""
     lex, toks, pools, ts, _ = _worlds()
     ref_svc, svcs = _services()
-    stop, freq, other = pools[STOP], pools[FREQUENT], pools[OTHER]
-    core = [
-        Query((stop[0], stop[1])),
-        Query((stop[2], stop[3], stop[4])),
-        Query((freq[0], other[0])),
-        Query((other[1], other[2])),
-        Query(tuple(int(t) for t in toks[5:8]), phrase=True),
-        Query(tuple(int(t) for t in toks[9:13]), phrase=True),
+    queries = core_queries(toks, pools) + [
+        spec_to_query(s, toks, pools) for s in specs
     ]
-    queries = core + [_spec_to_query(s, toks, pools) for s in specs]
     ref = ref_svc.search_batch(queries)
     routes = {r.route for r in ref}
     assert routes >= {ROUTE_STOPSEQ, ROUTE_WV, ROUTE_ORDINARY, ROUTE_MULTI}
     for (n, backend), svc in svcs.items():
         got = svc.search_batch(queries)
         for q, r, g in zip(queries, ref, got):
-            assert g.route == r.route, (n, backend, q)
-            assert np.array_equal(r.docs, g.docs), (n, backend, q)
-            assert np.array_equal(r.witnesses, g.witnesses), (n, backend, q)
-            assert r.lookups == g.lookups, (n, backend, q)
-            assert r.postings_scanned == g.postings_scanned, (n, backend, q)
+            assert_results_identical(r, g, ctx=(n, backend, q))
 
 
 def test_prefetch_changes_scheduling_not_results():

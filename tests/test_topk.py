@@ -1,0 +1,483 @@
+"""Top-k early-termination search: the streaming (lazy cursor) executor.
+
+Pins the tentpole contract from every side:
+
+  * property: ``Query(top_k=N)`` returns the exhaustive executor's sorted
+    head — docs, witnesses AND scores — element-wise, across
+    numpy/jax/pallas and n_shards {1, 2, 4};
+  * monotonicity: raising ``top_k`` only extends the result list;
+  * effectiveness: on a seeded hot corpus the streaming stage skips
+    chunks and reads strictly fewer device bytes than the exhaustive
+    path (the optimization cannot silently degrade to a full scan);
+  * observability: the trace-completeness invariant (every planned fetch
+    wave / lookup / cursor chunk executed or explicitly skipped) holds
+    and is enforced loudly;
+  * the cursor substrate: chunked reads reconstruct ``lookup`` exactly at
+    identical drained byte cost, and the cache only ever learns complete
+    lists.
+"""
+
+import dataclasses
+import functools
+
+import numpy as np
+import pytest
+
+from tests._hypothesis_compat import given, settings, strategies as st
+
+from repro.core.io_sim import BlockDevice
+from repro.core.lexicon import make_lexicon
+from repro.core.sharded_set import ShardedTextIndexSet, merge_shard_chunks
+from repro.core.strategies import StrategyConfig
+from repro.core.text_index import IndexSetConfig, TextIndexSet
+from repro.data.corpus import generate_part
+from repro.search import Query, SearchService, TraceIncompleteError
+from tests.oracles import (
+    QUERY_SPEC,
+    assert_results_identical,
+    assert_topk_matches_head,
+    class_pools,
+    core_queries,
+    mixed_queries,
+    spec_to_query,
+)
+
+BACKENDS = ("numpy", "jax", "pallas")
+SHARD_COUNTS = (1, 2, 4)
+
+
+# ------------------------------------------------------------- the worlds --
+@functools.lru_cache(maxsize=None)
+def _equiv_worlds():
+    """A small mixed-route collection, unsharded + sharded {1,2,4}."""
+    lex = make_lexicon(
+        n_words=3000, n_lemmas=1300, n_stop=20, n_frequent=120, seed=43
+    )
+    cfg = IndexSetConfig(
+        strategy=StrategyConfig.set2(cluster_size=1024),
+        fl_area_clusters=64,
+    )
+    parts = [
+        generate_part(lex, n_docs=60, avg_doc_len=120, doc0=0, seed=80),
+        generate_part(lex, n_docs=60, avg_doc_len=120, doc0=60, seed=81),
+    ]
+    ts = TextIndexSet(cfg, lex, seed=0)
+    sharded = {
+        n: ShardedTextIndexSet(cfg, lex, n_shards=n, seed=0)
+        for n in SHARD_COUNTS
+    }
+    for s in [ts] + list(sharded.values()):
+        s.add_documents(*parts[0], 0)
+        s.add_documents(*parts[1], 60)
+    return lex, parts[0][0], class_pools(lex), ts, sharded
+
+
+@functools.lru_cache(maxsize=None)
+def _equiv_services():
+    lex, toks, pools, ts, sharded = _equiv_worlds()
+    ref = SearchService(ts, window=3, backend="numpy")
+    svcs = {
+        (n, b): SearchService(sharded[n], window=3, backend=b)
+        for n in SHARD_COUNTS
+        for b in BACKENDS
+    }
+    return ref, svcs
+
+
+@pytest.fixture(scope="module")
+def hot_world():
+    """A tiny, hot vocabulary: every trigram repeats across many docs, so
+    multi keys are stream-backed multi-chunk lists and a small top_k
+    settles long before the lists end — the early-termination regime.
+    The corpus AND index geometry are the bench's own
+    (``benchmarks.common.make_hot_world`` / ``HOT_GEOMETRY``), so this
+    regression and ``search_speed --topk`` can never drift into pinning
+    different regimes."""
+    from benchmarks.common import HOT_GEOMETRY, build_index_set, make_hot_world
+
+    world = make_hot_world(scale=0.05)
+    ts = build_index_set(world, "set2", **HOT_GEOMETRY)
+    return world.lexicon, world.parts, ts
+
+
+def _hot_phrases(lex, toks, n=8, width=3, seed=3, ts=None):
+    """Non-all-stop phrases lifted from the hot token stream.  With
+    ``ts`` given, only phrases whose multi key is a multi-chunk
+    stream-backed list are kept — the lists early termination can
+    actually stop inside."""
+    rng = np.random.RandomState(seed)
+    out, seen = [], set()
+    for _ in range(4000):
+        if len(out) >= n:
+            break
+        s = int(rng.randint(0, toks.shape[0] - width))
+        words = tuple(int(t) for t in toks[s : s + width])
+        if words in seen:
+            continue
+        seen.add(words)
+        _, cls = lex.classify_words(np.asarray(words, np.int64))
+        if all(int(c) == 0 for c in cls):
+            continue  # all-stop: stopseq route, single tiny lookup
+        if ts is not None:
+            mi = ts.indexes["multi"]
+            lemmas, _ = lex.classify_words(np.asarray(words, np.int64))
+            key = mi.pack([int(x) for x in lemmas])
+            probe = mi.open_cursor(
+                key, device=BlockDevice(cluster_size=256)
+            )
+            if probe.chunks_total <= 2:
+                continue
+        out.append(words)
+    assert len(out) >= min(n, 2), "hot corpus produced too few candidates"
+    return out
+
+
+# --------------------------------------------------------- property suite --
+@settings(max_examples=10, deadline=None)
+@given(
+    st.lists(QUERY_SPEC, min_size=0, max_size=6),
+    st.integers(1, 12),
+)
+def test_topk_equals_exhaustive_head_all_backends_all_shards(specs, k):
+    """Property: the top-k result set (docs, witnesses AND scores) equals
+    the exhaustive executor's sorted head, for every drawn query, across
+    numpy/jax/pallas x n_shards {1,2,4}."""
+    lex, toks, pools, ts, _ = _equiv_worlds()
+    ref_svc, svcs = _equiv_services()
+    queries = core_queries(toks, pools) + [
+        spec_to_query(s, toks, pools) for s in specs
+    ]
+    ref = ref_svc.search_batch(queries)
+    topk = [dataclasses.replace(q, top_k=k) for q in queries]
+    for (n, backend), svc in svcs.items():
+        got = svc.search_batch(topk)
+        for q, r, g in zip(queries, ref, got):
+            assert_topk_matches_head(r, g, k, ctx=(n, backend, q))
+            assert g.docs.shape[0] <= k
+
+
+def test_topk_monotonic_in_k():
+    """Raising top_k only EXTENDS the result list: docs, witnesses and
+    scores of a smaller k are an exact prefix of every larger k."""
+    lex, toks, pools, ts, _ = _equiv_worlds()
+    svc = SearchService(ts, window=3)
+    queries = core_queries(toks, pools)
+    for q in queries:
+        prev = None
+        for k in (1, 2, 4, 8, 64, 10_000):
+            r = svc.search_batch([dataclasses.replace(q, top_k=k)])[0]
+            if prev is not None:
+                n = prev.docs.shape[0]
+                assert r.docs.shape[0] >= n, (q, k)
+                assert np.array_equal(r.docs[:n], prev.docs), (q, k)
+                assert np.array_equal(r.scores[:n], prev.scores), (q, k)
+                m = prev.witnesses.shape[0]
+                assert np.array_equal(r.witnesses[:m], prev.witnesses), (q, k)
+            prev = r
+
+
+def test_topk_fallback_when_k_exceeds_matches():
+    """top_k >= total matches degenerates to the exhaustive answer (all
+    cursors drain; identical docs/witnesses/scores)."""
+    lex, toks, pools, ts, _ = _equiv_worlds()
+    svc = SearchService(ts, window=3)
+    for q in core_queries(toks, pools):
+        ref = svc.search_batch([q])[0]
+        got = svc.search_batch([dataclasses.replace(q, top_k=100_000)])[0]
+        assert_results_identical(ref, got, ctx=q)
+
+
+def test_topk_fallback_with_duplicated_cover_keys(hot_world):
+    """Regression: a periodic phrase covers itself with a REPEATED multi
+    key ([A, B, A]); the streaming stage opens one cursor per unique key
+    but must still report postings_scanned per lookup occurrence, so the
+    full-drain result is `==` to the exhaustive one."""
+    lex, parts, ts = hot_world
+    svc = SearchService(ts, window=3, cache_bytes=0)
+    q = Query((1, 4, 2, 4, 1), phrase=True)
+    ref = svc.search_batch([q])[0]
+    assert ref.lookups[0] == ref.lookups[2], "phrase should repeat a key"
+    got = svc.search_batch([dataclasses.replace(q, top_k=10_000)])[0]
+    assert ref == got
+
+
+def test_topk_query_validation():
+    with pytest.raises(ValueError):
+        Query((1, 2), top_k=0)
+    with pytest.raises(ValueError):
+        Query((1, 2), top_k=-3)
+
+
+# ------------------------------------- early-termination effectiveness --
+def test_early_termination_skips_chunks_and_bytes(hot_world):
+    """Tier-1 regression: on the seeded hot corpus the streaming stage
+    must actually skip chunks, and its device read bytes must come in
+    STRICTLY below the exhaustive multi-route path — so the optimization
+    cannot silently degrade to a full scan."""
+    lex, parts, ts = hot_world
+    toks0 = parts[0][0]
+    phrases = _hot_phrases(lex, toks0, n=8, ts=ts)
+
+    def read_bytes():
+        return sum(s.read_bytes for s in ts.search_io().values())
+
+    svc_topk = SearchService(ts, window=3, cache_bytes=0)
+    svc_ex = SearchService(ts, window=3, cache_bytes=0)
+
+    b0 = read_bytes()
+    topk_res = svc_topk.search_batch(
+        [Query(w, phrase=True, top_k=2) for w in phrases]
+    )
+    topk_bytes = read_bytes() - b0
+    tk = svc_topk.last_trace["topk"]
+
+    b0 = read_bytes()
+    ex_res = svc_ex.search_batch([Query(w, phrase=True) for w in phrases])
+    ex_bytes = read_bytes() - b0
+
+    # identical heads first — a fast wrong answer would be worse
+    for w, r, g in zip(phrases, ex_res, topk_res):
+        assert_topk_matches_head(r, g, 2, ctx=w)
+
+    assert tk["chunks_skipped"] > 0, tk
+    assert tk["early_terminated"] > 0, tk
+    assert tk["bytes_skipped"] > 0, tk
+    assert topk_bytes < ex_bytes, (topk_bytes, ex_bytes)
+    # the trace's own ledger agrees with the device accounting
+    assert tk["bytes_fetched"] <= topk_bytes
+
+
+def test_topk_trace_reports_savings(hot_world):
+    """The per-batch trace carries the full chunks/bytes ledger."""
+    lex, parts, ts = hot_world
+    toks0 = parts[0][0]
+    svc = SearchService(ts, window=3, cache_bytes=0)
+    svc.search_batch(
+        [Query(w, phrase=True, top_k=1) for w in _hot_phrases(lex, toks0, 4)]
+    )
+    tk = svc.last_trace["topk"]
+    assert tk["queries"] == 4
+    assert tk["chunks_planned"] == tk["chunks_fetched"] + tk["chunks_skipped"]
+    assert tk["bytes_planned"] == tk["bytes_fetched"] + tk["bytes_skipped"]
+
+
+# ----------------------------------------------- trace completeness guard --
+def test_trace_completeness_invariant_holds(hot_world):
+    """Every planned fetch wave and lookup is accounted for — executed or
+    explicitly skipped/deferred — on pure-batch, pure-streaming and mixed
+    batches (search_batch runs the check itself; re-run it here too)."""
+    lex, parts, ts = hot_world
+    toks0 = parts[0][0]
+    svc = SearchService(ts, window=3)
+    phrases = _hot_phrases(lex, toks0, 4)
+    batches = [
+        [Query(w, phrase=True) for w in phrases],
+        [Query(w, phrase=True, top_k=2) for w in phrases],
+        [Query(phrases[0], phrase=True),
+         Query(phrases[0], phrase=True, top_k=1),
+         Query(phrases[1], phrase=True, top_k=3)],
+    ]
+    for batch in batches:
+        plan = svc.plan(batch)
+        svc.search_batch(batch)
+        svc.check_trace_complete(plan)
+        tr = svc.last_trace
+        assert tr["waves"] == tr["executed_waves"] + tr["skipped_waves"]
+        assert tr["lookups_planned"] == (
+            tr["lookups_fetched"] + tr["lookups_deferred"]
+        )
+    # a shared (index, key) between a batch and a streaming query is
+    # fetched by the wave (not deferred): the mixed batch above reuses
+    # phrases[0] both ways
+    assert svc.last_trace["lookups_deferred"] < svc.last_trace["lookups_planned"]
+
+
+def test_trace_incompleteness_raises(hot_world):
+    """Regression: a dropped wave / unaccounted cursor chunk must fail
+    loudly, not masquerade as saved I/O."""
+    lex, parts, ts = hot_world
+    toks0 = parts[0][0]
+    svc = SearchService(ts, window=3)
+    phrases = _hot_phrases(lex, toks0, 2)
+    svc.search_batch([Query(phrases[0], phrase=True),
+                      Query(phrases[1], phrase=True, top_k=1)])
+    svc.check_trace_complete()  # intact trace passes
+
+    good = dict(svc.last_trace)
+    svc.last_trace = dict(good, executed_waves=good["executed_waves"] - 1)
+    with pytest.raises(TraceIncompleteError):
+        svc.check_trace_complete()
+    svc.last_trace = dict(good, lookups_fetched=good["lookups_fetched"] + 1)
+    with pytest.raises(TraceIncompleteError):
+        svc.check_trace_complete()
+    tk = dict(good["topk"], chunks_skipped=good["topk"]["chunks_skipped"] + 1)
+    svc.last_trace = dict(good, topk=tk)
+    with pytest.raises(TraceIncompleteError):
+        svc.check_trace_complete()
+
+
+# --------------------------------------------------- the cursor substrate --
+def test_cursor_chunks_reconstruct_lookup(hot_world):
+    """Draining a cursor yields exactly lookup()'s rows at exactly its
+    device read bytes, across every storage tier the corpus populated."""
+    lex, parts, ts = hot_world
+    kinds_covered = set()
+    for name, idx in ts.indexes.items():
+        for key, e in list(idx.dict.entries.items())[:40]:
+            d_look = BlockDevice(cluster_size=256)
+            d_cur = BlockDevice(cluster_size=256)
+            ref = idx.lookup(key, device=d_look)
+            cur = idx.open_cursor(key, device=d_cur)
+            got = cur.read_all()
+            assert np.array_equal(ref, got), (name, key, e.kind)
+            assert cur.exhausted and cur.chunks_skipped == 0
+            assert d_cur.stats.read_bytes == d_look.stats.read_bytes, (
+                name, key, e.kind
+            )
+            kinds_covered.add(e.kind)
+    assert len(kinds_covered) >= 2, kinds_covered
+
+
+def test_cursor_early_stop_saves_bytes(hot_world):
+    """Stopping a multi-chunk cursor early charges strictly fewer device
+    bytes than the whole-list read."""
+    lex, parts, ts = hot_world
+    for name, idx in ts.indexes.items():
+        for key in idx.dict.entries:
+            probe = idx.open_cursor(key, device=BlockDevice(cluster_size=256))
+            if probe.chunks_total <= 2:
+                continue
+            dev = BlockDevice(cluster_size=256)
+            cur = idx.open_cursor(key, device=dev)
+            cur.next_chunk()
+            partial = dev.stats.read_bytes
+            full_dev = BlockDevice(cluster_size=256)
+            idx.lookup(key, device=full_dev)
+            assert partial < full_dev.stats.read_bytes
+            assert cur.bytes_skipped > 0
+            return
+    pytest.fail("hot corpus produced no multi-chunk posting list")
+
+
+def test_reader_cursor_cache_integration(hot_world):
+    """A fully drained reader cursor admits the complete list to the
+    shared cache (the next reader pays zero I/O); an early-terminated
+    cursor must NOT cache its partial list."""
+    lex, parts, ts = hot_world
+    mi = ts.indexes["multi"]
+    key = None
+    for k in mi.dict.entries:
+        if mi.open_cursor(k, device=BlockDevice(cluster_size=256)).chunks_total > 1:
+            key = k
+            break
+    assert key is not None
+
+    reader = ts.reader(cache_bytes=1 << 20)
+    cur = reader.readers["multi"].open_cursor(key)
+    parts_got = []
+    while True:
+        c = cur.next_chunk()
+        if c is None:
+            break
+        parts_got.append(c)
+    full = np.concatenate([p for p in parts_got if p.shape[0]], axis=0)
+    # drained: the cache now holds the complete list
+    hit = reader.cache.get("multi", key)
+    assert hit is not None and np.array_equal(hit, full)
+    io0 = reader.readers["multi"].io_stats().total_ops
+    cur2 = reader.readers["multi"].open_cursor(key)
+    assert np.array_equal(cur2.next_chunk(), full)
+    assert cur2.next_chunk() is None
+    assert reader.readers["multi"].io_stats().total_ops == io0, (
+        "cache-hit cursor must charge zero device I/O"
+    )
+
+    # early termination on a cold reader: nothing may be cached
+    reader2 = ts.reader(cache_bytes=1 << 20)
+    cur3 = reader2.readers["multi"].open_cursor(key)
+    cur3.next_chunk()  # fetch one chunk, abandon
+    assert reader2.cache.get("multi", key) is None
+    # and the full list is still served correctly afterwards
+    assert np.array_equal(reader2.lookup("multi", key), full)
+
+
+def test_reader_cursor_read_all_after_partial_consumption(hot_world):
+    """Regression: mixing next_chunk() with read_all() on a ReaderCursor
+    must still admit the COMPLETE list to the cache — read_all drains
+    through the same accumulation path, never the inner cursor's."""
+    lex, parts, ts = hot_world
+    mi = ts.indexes["multi"]
+    key = next(
+        k for k in mi.dict.entries
+        if mi.open_cursor(k, device=BlockDevice(cluster_size=256)).chunks_total > 1
+    )
+    full = mi.lookup(key, device=BlockDevice(cluster_size=256))
+    reader = ts.reader(cache_bytes=1 << 20)
+    cur = reader.readers["multi"].open_cursor(key)
+    first = cur.next_chunk()
+    rest = cur.read_all()
+    assert np.array_equal(np.concatenate([first, rest], axis=0), full)
+    hit = reader.cache.get("multi", key)
+    assert hit is not None and np.array_equal(hit, full), (
+        "cache must hold the complete list, not a truncated one"
+    )
+
+
+def test_topk_full_drain_warms_cache(hot_world):
+    """Regression: the streaming executor stops polling a cursor at
+    `exhausted` (it never sees the trailing None), but a fully drained
+    cursor must STILL admit the complete list to the shared cache — the
+    repeat query serves entirely from it at zero device I/O."""
+    lex, parts, ts = hot_world
+    toks0 = parts[0][0]
+    words = _hot_phrases(lex, toks0, 1, ts=ts)[0]
+    svc = SearchService(ts, window=3)  # cache enabled
+    q = Query(words, phrase=True, top_k=1_000_000)  # full drain
+    r1 = svc.search_batch([q])[0]
+    assert len(svc.reader.cache) > 0, "drained cursor must warm the cache"
+    io0 = {n: s.total_ops for n, s in ts.search_io().items()}
+    r2 = svc.search_batch([q])[0]
+    assert {n: s.total_ops for n, s in ts.search_io().items()} == io0, (
+        "repeat top-k over a warmed cache must charge zero device I/O"
+    )
+    assert r1 == r2
+
+
+def test_topk_rides_batch_fetches_in_mixed_batch(hot_world):
+    """Regression: a key shared by an exhaustive and a top-k query in the
+    same batch is read from the device ONCE — the streaming stage streams
+    the batch wave's rows instead of re-opening device cursors (pinned
+    with the cache disabled, where re-reading would otherwise be
+    invisible to everything but the byte counters)."""
+    lex, parts, ts = hot_world
+    toks0 = parts[0][0]
+    words = _hot_phrases(lex, toks0, 1, ts=ts)[0]
+
+    def read_bytes():
+        return sum(s.read_bytes for s in ts.search_io().values())
+
+    svc1 = SearchService(ts, window=3, cache_bytes=0)
+    b0 = read_bytes()
+    ref = svc1.search_batch([Query(words, phrase=True)])[0]
+    solo = read_bytes() - b0
+
+    svc2 = SearchService(ts, window=3, cache_bytes=0)
+    b0 = read_bytes()
+    both = svc2.search_batch([
+        Query(words, phrase=True),
+        Query(words, phrase=True, top_k=2),
+    ])
+    mixed = read_bytes() - b0
+    assert mixed == solo, (mixed, solo)
+    assert np.array_equal(both[1].docs, ref.docs[:2])
+
+
+def test_merge_shard_chunks_gathers_in_doc_order():
+    a1 = np.asarray([[0, 5], [2, 1]], np.int64)
+    a2 = np.asarray([[2, 4], [6, 0]], np.int64)
+    b1 = np.asarray([[1, 9]], np.int64)
+    merged = merge_shard_chunks([[a1, a2], [b1], []])
+    assert np.array_equal(
+        merged, [[0, 5], [1, 9], [2, 1], [2, 4], [6, 0]]
+    )
+    assert merge_shard_chunks([[], []]).shape == (0, 2)
