@@ -11,6 +11,8 @@ Benches:
     search_batched — batched SearchService qps vs per-query loop
     search_sharded — 4-shard scatter/gather vs unsharded (qps + read bytes)
     search_topk   — top-k early-termination vs exhaustive (read-bytes ratio)
+    update_speed  — live per-shard update streams: targeted invalidation
+                    vs whole-namespace drops under interleaved updates
     paged_kv      — TPU adaptation: paged KV allocator behaviour
     kernels       — Pallas kernel microbenches (interpret mode) vs refs
 """
@@ -108,6 +110,26 @@ def _bench_search_topk(scale):
     ]
 
 
+def _bench_update_speed(scale):
+    from benchmarks import update_speed
+
+    rows = update_speed.run(min(scale, 0.5))
+    t = next(r for r in rows if r["mode"] == "targeted")
+    b = next(r for r in rows if r["mode"] == "namespace_drop")
+    ok = (
+        t["identical"]
+        and t["invalidations"] < b["invalidations"]
+        and t["full_drops"] < b["full_drops"]
+        and t["read_bytes"] < b["read_bytes"]
+    )
+    return rows, [
+        f"{'PASS' if ok else 'FAIL'}  interleaved updates served "
+        f"stale-free and identical to a rebuild; targeted invalidation "
+        f"dropped {t['invalidations']} cache entries vs "
+        f"{b['invalidations']} whole-namespace"
+    ]
+
+
 def _bench_paged_kv(scale):
     from benchmarks import paged_kv_bench
 
@@ -128,6 +150,7 @@ BENCHES = {
     "search_batched": _bench_search_batched,
     "search_sharded": _bench_search_sharded,
     "search_topk": _bench_search_topk,
+    "update_speed": _bench_update_speed,
     "paged_kv": _bench_paged_kv,
     "kernels": _bench_kernels,
 }

@@ -15,4 +15,11 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.search_speed \
 # with chunks actually skipped
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.search_speed \
   --topk 10 --scale 0.05 --queries 12
+# tiny-corpus smoke of live per-shard update streams: interleaved
+# update/search rounds must serve results identical to a from-scratch
+# rebuild, with targeted (touched-key digest) invalidation dropping
+# strictly fewer cache entries — and reading fewer bytes — than the
+# whole-namespace baseline
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.update_speed \
+  --scale 0.05 --queries 12 --parts 3 --shards 2
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -x -q "$@"

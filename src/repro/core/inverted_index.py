@@ -21,8 +21,8 @@ consequence of indexing a growing collection.
 from __future__ import annotations
 
 import dataclasses
-from collections import defaultdict
-from typing import Callable, Dict, Hashable, Iterable, List, Optional, Tuple
+from collections import defaultdict, deque
+from typing import Callable, Deque, Dict, Hashable, Iterable, List, Optional, Tuple
 
 import numpy as np
 
@@ -46,6 +46,17 @@ _EMPTY = np.zeros((0, 2), dtype=np.int64)
 # default cursor granularity: at most this many clusters fetched per chunk,
 # so a lazy reader can stop inside a large contiguous segment
 CURSOR_CHUNK_CLUSTERS = 4
+
+# parts of touched-key digest history a writer retains for readers: a
+# reader within this many generations invalidates only the touched keys;
+# one further behind falls back to dropping its whole cache namespace
+DIGEST_HISTORY = 64
+
+# per-part digest size cap: a part touching more keys than this records a
+# sentinel instead (readers fall back to the whole-namespace drop, which
+# is cheaper than a vocabulary-sized targeted scan anyway), so retained
+# digests can never dwarf the posting cache they exist to protect
+DIGEST_MAX_KEYS = 1 << 16
 
 
 class PostingCursor:
@@ -141,6 +152,8 @@ class InvertedIndex:
         fl_area_clusters: int = 8192,
         seed: int = 0,
         dict_device: Optional[BlockDevice] = None,
+        digest_history: int = DIGEST_HISTORY,
+        digest_max_keys: int = DIGEST_MAX_KEYS,
     ):
         self.cfg = cfg
         self.name = name
@@ -158,19 +171,68 @@ class InvertedIndex:
         self._open_bucket: Dict[int, int] = {}
         self.n_extractions = 0
         self.n_parts = 0
+        # live-update observability: per-part touched-key digests, keyed by
+        # the generation (n_parts value) the part produced.  Bounded: a
+        # reader further behind than the history falls back to a full
+        # namespace drop (see repro.search.reader.IndexReader.refresh).
+        self._part_digests: Deque[Tuple[int, Optional[frozenset]]] = deque(
+            maxlen=max(1, int(digest_history))
+        )
+        self._digest_max_keys = int(digest_max_keys)
 
     # ------------------------------------------------------------ updating --
-    def add_part(self, postings_by_key: Dict[Hashable, np.ndarray]) -> None:
-        """Index one part of the collection (build or in-place update)."""
+    def add_part(
+        self, postings_by_key: Dict[Hashable, np.ndarray]
+    ) -> Optional[frozenset]:
+        """Index one part of the collection (build or in-place update).
+
+        The generation counter ``n_parts`` advances ONLY when the part
+        actually carried postings: an empty part changes no stored state,
+        so bumping the generation would force every reader into a
+        needless cache invalidation sweep.  Each applied part publishes
+        its *touched-key digest* — the exact key set whose posting lists
+        changed — so readers can invalidate only those keys.  Returns
+        that digest, or ``None`` when the part was a no-op."""
         by_group: Dict[int, List[Tuple[Hashable, np.ndarray]]] = defaultdict(list)
         for key, posts in postings_by_key.items():
             arr = np.asarray(posts, dtype=np.int64)
             if arr.size == 0:
                 continue
             by_group[self.dict.group_of(key)].append((key, arr))
+        if not by_group:
+            return None
         for group in sorted(by_group):
             self._run_phase(group, by_group[group])
         self.n_parts += 1
+        digest = frozenset(
+            key for items in by_group.values() for key, _ in items
+        )
+        # oversized digests are recorded as a sentinel: readers behind
+        # this part take the whole-namespace fallback instead of a
+        # vocabulary-sized targeted scan, and the retained history stays
+        # bounded in bytes, not just in parts
+        self._part_digests.append((
+            self.n_parts,
+            digest if len(digest) <= self._digest_max_keys else None,
+        ))
+        return digest
+
+    def digests_since(self, generation: int) -> Optional[List[frozenset]]:
+        """Touched-key digests of every part applied after ``generation``.
+
+        Returns one frozenset per part, oldest first — their union is the
+        complete set of keys whose posting lists changed since the caller
+        snapshotted ``n_parts`` — or ``None`` when the bounded digest
+        history no longer reaches back that far, or some covered part's
+        digest was too large to retain (the caller must then treat EVERY
+        key as potentially stale)."""
+        missing = self.n_parts - generation
+        if missing <= 0:
+            return []
+        out = [d for g, d in self._part_digests if g > generation]
+        if len(out) != missing or any(d is None for d in out):
+            return None
+        return out
 
     def _run_phase(self, group: int, items: List[Tuple[Hashable, np.ndarray]]) -> None:
         dev = self.dict_dev
@@ -397,13 +459,21 @@ class InvertedIndex:
             posts, _ = decode_postings(bytes(e.data))
             return PostingCursor.from_array(posts)
         if e.kind == K_TAG:
-            # one deferred chunk: charged only if the cursor is consumed
+            # one deferred chunk: charged only if the cursor is consumed.
+            # The bucket BYTES are pinned at open time (bucket streams are
+            # rewritten in place by extraction, and other members keep
+            # appending): a cursor drained mid-update must deliver the
+            # open-time snapshot, never the rewritten bucket — the charge
+            # closures likewise price the open-time layout.
             units = self.mgr.stream_read_units(e.sid)
             charge_bytes = sum(cb for _, cb, _ in units)
+            charges = [c for _, _, c in units]
+            snap = self.mgr.stream_snapshot(e.sid)
 
-            def read_tagged(sid=e.sid, tag=e.tag):
-                data = self.mgr.read_stream(sid, device=dev)
-                posts, tags = decode_postings(data, tagged=True, zigzag=True)
+            def read_tagged(snap=snap, tag=e.tag, charges=charges):
+                for charge in charges:
+                    charge(dev)
+                posts, tags = decode_postings(snap, tagged=True, zigzag=True)
                 mine = posts[tags == tag]
                 order = np.lexsort((mine[:, 1], mine[:, 0]))
                 return mine[order]

@@ -113,6 +113,53 @@ def merge_shard_chunks(chunk_runs: List[List[np.ndarray]]) -> np.ndarray:
     return merge_shard_postings(runs)
 
 
+class UpdateStream:
+    """Independent live-update applier for ONE shard.
+
+    The paper's defining property — in-place updatability — lifted to the
+    sharded substrate: every shard owns an update stream that applies
+    collection parts to that shard alone, so shards advance
+    independently (a part whose documents all hash elsewhere never
+    touches this shard, and a deployment can drain per-shard queues at
+    different rates).  Each applied part:
+
+      * runs ``add_part`` only on the indexes that actually received
+        rows (an untouched index's generation stays put — its readers
+        keep every cached posting);
+      * bumps the shard's generation (derived from the per-index
+        ``n_parts`` counters, so direct index writes are never missed);
+      * publishes the part's *touched-key digest* — the exact
+        ``{index → keys}`` set whose posting lists changed — which
+        readers use to invalidate only the affected (shard, index, key)
+        cache entries instead of dropping whole namespaces.
+    """
+
+    def __init__(self, shard_id: int, index_set):
+        self.shard_id = int(shard_id)
+        self.index_set = index_set
+        self.parts_applied = 0
+        self.rows_applied = 0
+
+    @property
+    def generation(self) -> int:
+        """This shard's snapshot generation (see
+        :attr:`~repro.core.text_index.TextIndexSet.generation`)."""
+        return self.index_set.generation
+
+    def apply(self, maps) -> Dict[str, frozenset]:
+        """Apply one scattered part to this shard; returns its
+        touched-key digest (empty when the part carried no rows for the
+        shard — in which case nothing, including the generation, moved)."""
+        rows = sum(
+            arr.shape[0] for by_key in maps.values() for arr in by_key.values()
+        )
+        digest = self.index_set.apply_part_maps(maps) if rows else {}
+        if digest:
+            self.parts_applied += 1
+            self.rows_applied += rows
+        return digest
+
+
 class ShardedTextIndexSet(IndexSetLike):
     """N document-hash shards, each a full :class:`TextIndexSet`."""
 
@@ -140,6 +187,12 @@ class ShardedTextIndexSet(IndexSetLike):
                 shard.search_devices.values()
             ):
                 dev.name = f"s{s}/{dev.name}"
+        # one independent live-update stream per shard: `add_documents` is
+        # the all-shards convenience path; callers that replay per-shard
+        # queues drive `update_streams[s].apply(...)` directly
+        self.update_streams: List[UpdateStream] = [
+            UpdateStream(s, shard) for s, shard in enumerate(self.shards)
+        ]
 
     # the planner/service capability view: all shards share index kinds,
     # key packing and multi_k, so shard 0 answers every capability question
@@ -152,10 +205,7 @@ class ShardedTextIndexSet(IndexSetLike):
         self, tokens: np.ndarray, offsets: np.ndarray, doc0: int
     ) -> None:
         """Index one collection part: extract once, scatter rows by doc
-        hash, run every shard's in-place update."""
-        if self.n_shards == 1:
-            self.shards[0].add_documents(tokens, offsets, doc0)
-            return
+        hash, run each touched shard's update stream."""
         maps = extract_postings(
             self.lexicon, tokens, offsets, doc0, self.cfg.max_distance
         )
@@ -163,6 +213,9 @@ class ShardedTextIndexSet(IndexSetLike):
             maps[MULTI_INDEX] = self.indexes[MULTI_INDEX].extract_part(
                 self.lexicon, tokens, offsets, doc0
             )
+        if self.n_shards == 1:
+            self.update_streams[0].apply(maps)
+            return
         shard_maps: List[Dict[str, Dict[Hashable, np.ndarray]]] = [
             {name: {} for name in maps} for _ in range(self.n_shards)
         ]
@@ -173,9 +226,18 @@ class ShardedTextIndexSet(IndexSetLike):
                     rows = arr[owner == s]
                     if rows.size:
                         shard_maps[s][name][key] = rows
-        for s, shard in enumerate(self.shards):
-            for name, index in shard.indexes.items():
-                index.add_part(shard_maps[s][name])
+        # each shard's update stream applies ONLY what hashed to it: a
+        # shard that received zero rows for this part keeps its
+        # generation (previously every shard's every index got an
+        # `add_part` call, bumping generations and forcing needless full
+        # cache drops on untouched shards)
+        for s in range(self.n_shards):
+            self.update_streams[s].apply(shard_maps[s])
+
+    def generation_vector(self) -> List[int]:
+        """Per-shard snapshot generations — what a snapshot-consistent
+        batch pins (see ``SearchService.last_trace['snapshot']``)."""
+        return [shard.generation for shard in self.shards]
 
     # -------------------------------------------------------------- queries --
     def lookup(self, index_name: str, key: Hashable) -> np.ndarray:
@@ -184,12 +246,13 @@ class ShardedTextIndexSet(IndexSetLike):
             [shard.lookup(index_name, key) for shard in self.shards]
         )
 
-    def reader(self, cache_bytes: int = 8 << 20):
+    def reader(self, cache_bytes: int = 8 << 20, targeted: bool = True):
         """Per-shard readers behind ONE byte-budgeted posting cache
         (namespaced by (shard, index, key) — see ``repro.search.reader``)."""
         from repro.search.reader import ShardedIndexSetReader
 
-        return ShardedIndexSetReader(self, cache_bytes=cache_bytes)
+        return ShardedIndexSetReader(self, cache_bytes=cache_bytes,
+                                     targeted=targeted)
 
     # -------------------------------------------------------------- reports --
     def build_io_per_shard(self) -> List[Dict[str, IOStats]]:

@@ -668,6 +668,22 @@ class StreamManager:
             dev.read_sequential(self.cluster_size)  # FL cluster: one op
         return bytes(st.data)
 
+    def stream_snapshot(self, sid: int) -> bytes:
+        """Open-time copy of a stream's logical payload, for
+        snapshot-consistent lazy cursors.
+
+        Charges NO device I/O: the cursor's storage units carry the
+        open-time charge closures, and this copy is what those units
+        decode from.  Pinning the bytes at open matters for streams whose
+        payload is not append-only — TAG bucket streams are rewritten in
+        place when a member is extracted (5.6), so a cursor drained after
+        a mid-update extraction would otherwise decode the rewritten
+        bucket (its own tag slot possibly retired) instead of the
+        snapshot it was opened against.  Dedicated (OWN) streams only
+        ever append, so their cursors pin layout by slicing fixed byte
+        ranges and need no copy."""
+        return bytes(self.streams[sid].data)
+
     def stream_read_units(
         self, sid: int, chunk_clusters: int = 0
     ) -> List[Tuple[int, int, "Callable[[BlockDevice], None]"]]:

@@ -107,8 +107,10 @@ class IndexSetLike(abc.ABC):
         """Posting lookup charging I/O to search devices."""
 
     @abc.abstractmethod
-    def reader(self, cache_bytes: int = 8 << 20):
-        """Read-only snapshot view with a posting-list LRU cache."""
+    def reader(self, cache_bytes: int = 8 << 20, targeted: bool = True):
+        """Read-only snapshot view with a posting-list LRU cache
+        (``targeted=False`` reverts cache invalidation to whole-namespace
+        drops — the benchmark baseline for the digest path)."""
 
     @abc.abstractmethod
     def build_io(self) -> Dict[str, IOStats]:
@@ -177,8 +179,38 @@ class TextIndexSet(IndexSetLike):
             maps[MULTI_INDEX] = self.indexes[MULTI_INDEX].extract_part(
                 self.lexicon, tokens, offsets, doc0
             )
+        self.apply_part_maps(maps)
+
+    def apply_part_maps(
+        self, maps: Dict[str, Dict[Hashable, np.ndarray]]
+    ) -> Dict[str, frozenset]:
+        """Apply one extracted part to every index that received rows.
+
+        The live-update primitive beneath :meth:`add_documents` (and the
+        per-shard :class:`~repro.core.sharded_set.UpdateStream`): indexes
+        whose map is empty for this part are NOT touched — their
+        generation (``n_parts``) stays put, so readers keep their cached
+        postings for those indexes.  Returns the part's touched-key
+        digest ``{index name → frozenset of changed keys}`` (empty maps
+        omitted), which is also what each index published to its own
+        digest history."""
+        digest: Dict[str, frozenset] = {}
         for name, index in self.indexes.items():
-            index.add_part(maps[name])
+            by_key = maps.get(name)
+            if not by_key:
+                continue
+            touched = index.add_part(by_key)
+            if touched is not None:
+                digest[name] = touched
+        return digest
+
+    @property
+    def generation(self) -> int:
+        """Monotone snapshot counter: the sum of every index's applied
+        part count.  Moves exactly when some reader's view of this set
+        could have changed — the per-shard entry of the serving
+        snapshot's generation vector."""
+        return sum(idx.n_parts for idx in self.indexes.values())
 
     # -------------------------------------------------------------- queries --
     def lookup(self, index_name: str, key: Hashable) -> np.ndarray:
@@ -186,12 +218,13 @@ class TextIndexSet(IndexSetLike):
         index = self.indexes[index_name]
         return index.lookup(key, device=self.search_devices[index_name])
 
-    def reader(self, cache_bytes: int = 8 << 20):
+    def reader(self, cache_bytes: int = 8 << 20, targeted: bool = True):
         """Read-only snapshot view with a posting-list LRU cache (the
         reader/planner/executor stack lives in :mod:`repro.search`)."""
         from repro.search.reader import IndexSetReader
 
-        return IndexSetReader(self, cache_bytes=cache_bytes)
+        return IndexSetReader(self, cache_bytes=cache_bytes,
+                              targeted=targeted)
 
     # -------------------------------------------------------------- reports --
     def build_io(self) -> Dict[str, IOStats]:

@@ -46,7 +46,11 @@ from repro.search.reader import (
     ReaderCursor,
     ShardedIndexSetReader,
 )
-from repro.search.service import SearchService, TraceIncompleteError
+from repro.search.service import (
+    SearchService,
+    SnapshotViolationError,
+    TraceIncompleteError,
+)
 
 __all__ = [
     "JOIN_BACKENDS",
@@ -76,5 +80,6 @@ __all__ = [
     "ReaderCursor",
     "ShardedIndexSetReader",
     "SearchService",
+    "SnapshotViolationError",
     "TraceIncompleteError",
 ]

@@ -13,8 +13,15 @@ serving lookups:
     I/O, which is what makes repeated keys in a query batch (and hot stop
     pairs across batches) nearly free;
   * readers snapshot the writer's part counter; when the writer indexes
-    another collection part, stale cached postings are dropped on the
-    next lookup (single-writer, read-your-writes semantics).
+    another collection part, the next lookup invalidates exactly the
+    keys the writer's touched-key digest names (falling back to a
+    whole-namespace drop only when the bounded digest history no longer
+    covers the reader's snapshot) — single-writer, read-your-writes
+    semantics with the cache kept warm for untouched keys;
+  * cursors pin their open-time generation: an open cursor keeps serving
+    its snapshot across writer updates, and the cache-admit path
+    re-checks the generation so a mid-update drain can never publish a
+    stale list.
 """
 
 from __future__ import annotations
@@ -33,12 +40,28 @@ from repro.core.inverted_index import (
 from repro.core.io_sim import BlockDevice, IOStats
 
 
+def _frozen(arr: np.ndarray) -> np.ndarray:
+    """An immutable alias of ``arr``: frozen in place when it owns its
+    buffer, a frozen copy when the buffer stays writeable through a base
+    (freezing only the view would let a holder of the base — or anyone
+    flipping the flag back on, which numpy permits while the base is
+    writeable — mutate it anyway)."""
+    owner = arr if arr.base is None else arr.base
+    if isinstance(owner, np.ndarray) and not owner.flags.writeable:
+        return arr
+    if arr.base is not None:
+        arr = arr.copy()
+    arr.flags.writeable = False
+    return arr
+
+
 @dataclasses.dataclass
 class CacheStats:
     hits: int = 0
     misses: int = 0
     evictions: int = 0      # capacity pressure: LRU victims only
     invalidations: int = 0  # correctness drops: writer-generation changes
+    full_drops: int = 0     # whole-namespace sweeps (no digest coverage)
     bytes_used: int = 0
 
     @property
@@ -92,6 +115,13 @@ class PostingCache:
         old = self._map.pop(slot, None)
         if old is not None:
             self.stats.bytes_used -= self._charge(old)
+        owner = arr if arr.base is None else arr.base
+        if not isinstance(owner, np.ndarray) or owner.flags.writeable:
+            # an entry whose BUFFER is still writeable is not immutable:
+            # the caller can mutate through the owner it still holds, or
+            # flip a view's writeable flag back on (numpy allows that
+            # while the base is writeable) — detach the cache's copy
+            arr = arr.copy()
         arr = arr.view()
         arr.flags.writeable = False
         self._map[slot] = arr
@@ -113,6 +143,27 @@ class PostingCache:
         for k in stale:
             self.stats.bytes_used -= self._charge(self._map.pop(k))
             self.stats.invalidations += 1
+        self.stats.full_drops += 1
+
+    def drop_touched(self, index_name: str, digests) -> int:
+        """Targeted invalidation: drop the namespace entries whose key
+        appears in any of the writer's touched-key ``digests`` (one set
+        per applied part), leaving every other entry warm.
+
+        Iterates the CACHED entries — bounded by the byte budget — not
+        the digests: a part can touch most of the vocabulary, and a
+        refresh that walked the digest union would cost update-sized
+        work per reader even when almost none of it is cached.  Each
+        dropped entry counts as an ``invalidation`` and reclaims its
+        admission ``_charge``.  Returns the number of entries dropped."""
+        stale = [
+            slot for slot in self._map
+            if slot[0] == index_name and any(slot[1] in d for d in digests)
+        ]
+        for slot in stale:
+            self.stats.bytes_used -= self._charge(self._map.pop(slot))
+            self.stats.invalidations += 1
+        return len(stale)
 
     def __len__(self) -> int:
         return len(self._map)
@@ -127,17 +178,24 @@ class ReaderCursor:
     to the cache, so the next reader of the key pays nothing.  An
     early-terminated cursor never caches a partial list (a later lookup
     must re-read; serving a truncated list would be silent corruption).
+
+    ``generation`` pins the reader's writer-snapshot at open time: the
+    cursor keeps serving that snapshot however long it stays open, and
+    the admit path re-checks the generation so a drain that outlived an
+    update can never publish its (now stale) list to the cache.
     """
 
     def __init__(
         self,
         inner: PostingCursor,
         on_complete: Optional[Callable[[np.ndarray], None]] = None,
+        generation: Optional[int] = None,
     ):
         self._inner = inner
         self._on_complete = on_complete
         self._parts: List[np.ndarray] = []
         self._completed = False
+        self.generation = generation
 
     def next_chunk(self) -> Optional[np.ndarray]:
         chunk = self._inner.next_chunk()
@@ -164,13 +222,18 @@ class ReaderCursor:
                 full = self._parts[0]
             else:
                 full = np.concatenate(self._parts, axis=0)
+            # admitted lists are frozen exactly like IndexReader.lookup
+            # results: a single-chunk drain would otherwise hand the
+            # cache a view over a buffer the consumer can still reach
+            full = _frozen(full)
             self._on_complete(full)
 
     def read_all(self) -> np.ndarray:
         """Drain the remaining chunks through :meth:`next_chunk` (NEVER
         the inner cursor's ``read_all``, which would bypass the
         accumulation above and let a later completion admit a truncated
-        list to the cache)."""
+        list to the cache).  The result is immutable, like every other
+        posting list a reader hands out."""
         parts: List[np.ndarray] = []
         while True:
             chunk = self.next_chunk()
@@ -180,7 +243,8 @@ class ReaderCursor:
                 parts.append(chunk)
         if not parts:
             return np.zeros((0, 2), dtype=np.int64)
-        return parts[0] if len(parts) == 1 else np.concatenate(parts, axis=0)
+        full = parts[0] if len(parts) == 1 else np.concatenate(parts, axis=0)
+        return _frozen(full)
 
     def __getattr__(self, name):
         # the counter/bound surface (exhausted, settled_bound, chunks_*,
@@ -201,6 +265,7 @@ class IndexReader:
         device: Optional[BlockDevice] = None,
         cache: Optional[PostingCache] = None,
         cache_ns: Optional[str] = None,
+        targeted: bool = True,
     ):
         self.index = index
         self.device = device if device is not None else BlockDevice(
@@ -211,6 +276,10 @@ class IndexReader:
         # passes "s{shard}:{name}" so the shared cache is keyed by
         # (shard, index, key) and shards can never answer for each other
         self.cache_ns = cache_ns if cache_ns is not None else index.name
+        # targeted invalidation: refresh drops only the keys the writer's
+        # touched-key digests name; False forces the whole-namespace drop
+        # (the pre-digest behaviour, kept as the benchmark baseline)
+        self.targeted = targeted
         self._generation = index.n_parts
 
     # ------------------------------------------------------------ lookups --
@@ -239,18 +308,29 @@ class IndexReader:
         cursor drains completely."""
         if self.index.n_parts != self._generation:
             self.refresh()
+        gen = self._generation
         if self.cache is not None:
             hit = self.cache.get(self.cache_ns, key)
             if hit is not None:
-                return ReaderCursor(PostingCursor.from_array(hit))
+                return ReaderCursor(PostingCursor.from_array(hit),
+                                    generation=gen)
         inner = self.index.open_cursor(
             key, device=self.device, chunk_clusters=chunk_clusters
         )
         on_complete = None
         if self.cache is not None:
-            def on_complete(full, key=key):
+            def on_complete(full, key=key, gen=gen):
+                # admit-time generation re-check: a cursor that stayed
+                # open across a writer update still DELIVERS its open-time
+                # snapshot (correct for the batch it serves), but its list
+                # is stale the moment the writer advanced — admitting it
+                # would poison every later lookup of the key.  The check
+                # at open time alone cannot see an update that landed
+                # mid-drain.
+                if self.index.n_parts != gen:
+                    return
                 self.cache.put(self.cache_ns, key, full)
-        return ReaderCursor(inner, on_complete)
+        return ReaderCursor(inner, on_complete, generation=gen)
 
     def lookup_ops(self, key: Hashable) -> int:
         return self.index.lookup_ops(key)
@@ -265,11 +345,26 @@ class IndexReader:
 
         A no-op when the writer's generation is unchanged: cached postings
         are still valid, and dropping them would turn every periodic
-        refresh sweep into a full cold restart of the posting cache."""
+        refresh sweep into a full cold restart of the posting cache.
+
+        When the writer DID advance, the writer's per-part touched-key
+        digests (``InvertedIndex.digests_since``) name exactly the keys
+        whose lists changed, so only those ``(shard, index, key)`` cache
+        entries are invalidated — every untouched hot key stays warm.
+        The whole-namespace drop survives as the fallback for a reader so
+        far behind that the bounded digest history no longer covers its
+        snapshot (and as the explicit ``targeted=False`` baseline)."""
         if self.index.n_parts == self._generation:
             return
         if self.cache is not None:
-            self.cache.drop_index(self.cache_ns)
+            digests = (
+                self.index.digests_since(self._generation)
+                if self.targeted else None
+            )
+            if digests is None:
+                self.cache.drop_index(self.cache_ns)
+            else:
+                self.cache.drop_touched(self.cache_ns, digests)
         self._generation = self.index.n_parts
 
     def io_stats(self) -> IOStats:
@@ -288,12 +383,14 @@ class IndexSetReader:
     # degenerate case, so SearchService has exactly one fetch/gather path
     n_shards = 1
 
-    def __init__(self, index_set, cache_bytes: int = 8 << 20):
+    def __init__(self, index_set, cache_bytes: int = 8 << 20,
+                 targeted: bool = True):
         self.index_set = index_set
         self.cache = PostingCache(cache_bytes) if cache_bytes > 0 else None
         self.readers: Dict[str, IndexReader] = {
             name: IndexReader(
-                idx, device=index_set.search_devices[name], cache=self.cache
+                idx, device=index_set.search_devices[name], cache=self.cache,
+                targeted=targeted,
             )
             for name, idx in index_set.indexes.items()
         }
@@ -323,6 +420,12 @@ class IndexSetReader:
         for r in self.readers.values():
             r.refresh()
 
+    def generation_vector(self) -> List[int]:
+        """Per-shard snapshot generations (one entry: the unsharded set
+        is the 1-shard degenerate case) — derived from the writers' part
+        counters, so a direct ``add_part`` is never missed."""
+        return [sum(r.index.n_parts for r in self.readers.values())]
+
     def io_stats(self) -> Dict[str, IOStats]:
         return {name: r.io_stats() for name, r in self.readers.items()}
 
@@ -345,7 +448,8 @@ class ShardedIndexSetReader:
     reporting true per-shard read traffic.
     """
 
-    def __init__(self, sharded_set, cache_bytes: int = 8 << 20):
+    def __init__(self, sharded_set, cache_bytes: int = 8 << 20,
+                 targeted: bool = True):
         self.index_set = sharded_set
         self.cache = PostingCache(cache_bytes) if cache_bytes > 0 else None
         self.shard_readers: List[Dict[str, IndexReader]] = [
@@ -355,6 +459,7 @@ class ShardedIndexSetReader:
                     device=shard.search_devices[name],
                     cache=self.cache,
                     cache_ns=f"s{s}:{name}",
+                    targeted=targeted,
                 )
                 for name, idx in shard.indexes.items()
             }
@@ -400,6 +505,15 @@ class ShardedIndexSetReader:
         for readers in self.shard_readers:
             for r in readers.values():
                 r.refresh()
+
+    def generation_vector(self) -> List[int]:
+        """Per-shard snapshot generations: entry ``s`` moves exactly when
+        shard ``s``'s update stream applied a part that touched it —
+        what a snapshot-consistent batch pins in ``last_trace``."""
+        return [
+            sum(r.index.n_parts for r in readers.values())
+            for readers in self.shard_readers
+        ]
 
     def io_stats_per_shard(self) -> List[Dict[str, IOStats]]:
         return [

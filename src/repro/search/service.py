@@ -80,6 +80,16 @@ class TraceIncompleteError(RuntimeError):
     route-census/trace observability honest (an optimization that silently
     drops accounting would otherwise look like saved I/O)."""
 
+
+class SnapshotViolationError(RuntimeError):
+    """A writer advanced some shard's generation while a batch was
+    executing against its pinned snapshot.  Every batch runs against the
+    per-shard generation vector recorded at plan time
+    (``last_trace['snapshot']``); a mid-batch update would mix posting
+    lists from two collection states inside one result set, so the
+    executor re-reads the vector after the gather stage and refuses to
+    return torn results."""
+
 QueryLike = Union[Query, Sequence[int]]
 
 # per-shard posting lists of one fetched (index, key), in shard order
@@ -173,6 +183,12 @@ class SearchService:
         return self.search_batch([q])[0]
 
     def search_batch(self, queries: Sequence[QueryLike]) -> List[QueryResult]:
+        # pin the serving snapshot: apply any pending (targeted) cache
+        # invalidations NOW, then record the per-shard generation vector
+        # the whole batch executes against — a lookup mid-batch can never
+        # observe a different collection state than the plan did
+        self.reader.refresh()
+        snapshot = list(self.reader.generation_vector())
         plan = self.plan(queries)                               # stage 1
         results: List[Optional[QueryResult]] = [None] * len(plan.queries)
         ordinary: List[Tuple[int, List[ShardPosts]]] = []
@@ -217,8 +233,15 @@ class SearchService:
             return done
 
         self._scatter_fetch(plan, posts, on_landed, batch_idents)  # stage 2
+        self.last_trace["snapshot"] = snapshot
         self._execute_ordinary(plan, ordinary, results)         # stages 3+4
         self._execute_streaming(plan, streaming, results, posts)  # top-k stage
+        now = list(self.reader.generation_vector())
+        if now != snapshot:
+            raise SnapshotViolationError(
+                f"shard generations moved {snapshot} -> {now} while the "
+                f"batch executed against its pinned snapshot"
+            )
         self.check_trace_complete(plan)
         return results
 
@@ -604,6 +627,10 @@ class SearchService:
         edit that drops a wave without accounting for it fails loudly
         instead of masquerading as saved I/O."""
         tr = self.last_trace
+        if "snapshot" not in tr:
+            raise TraceIncompleteError(
+                "trace carries no pinned snapshot generation vector"
+            )
         if tr.get("waves", 0) != (
             tr.get("executed_waves", 0) + tr.get("skipped_waves", 0)
         ):

@@ -1,0 +1,408 @@
+"""Live per-shard update streams with snapshot-consistent serving.
+
+The paper's defining property — in-place updatability — exercised at
+SERVING time: one live substrate keeps answering (with warm readers,
+caches and open cursors) while collection parts land, and every answer
+must be element-wise identical to a from-scratch rebuild of the same
+prefix.  Plus the regression suite for the stale-cache hazards of the
+old refresh path:
+
+  * cursor cache admission re-checks the writer generation at admit
+    time (an open-at-gen-G cursor drained after an update must never
+    publish its pre-update list);
+  * drained-cursor results and cursor-admitted cache entries are
+    immutable, exactly like ``IndexReader.lookup`` results;
+  * a part that hashes no rows to a shard leaves that shard's
+    generation (and its readers' caches) untouched;
+  * targeted (touched-key digest) invalidation drops strictly fewer
+    entries than the whole-namespace baseline, with identical results;
+  * the bounded digest history falls back to a full namespace drop for
+    readers too far behind;
+  * a mid-batch writer advance trips ``SnapshotViolationError`` instead
+    of returning torn results.
+"""
+
+import functools
+
+import numpy as np
+import pytest
+
+from repro.core.inverted_index import InvertedIndex
+from repro.core.io_sim import BlockDevice
+from repro.core.lexicon import make_lexicon
+from repro.core.sharded_set import ShardedTextIndexSet, shard_of
+from repro.core.strategies import StrategyConfig
+from repro.core.text_index import IndexSetConfig, TextIndexSet
+from repro.data.corpus import generate_part
+from repro.search import (
+    IndexReader,
+    PostingCache,
+    Query,
+    SearchService,
+    SnapshotViolationError,
+)
+from repro.search.join import numpy_window_join
+from tests.oracles import class_pools, core_queries, run_live_update_rounds
+
+SHARD_COUNTS = (1, 2, 4)
+BACKENDS = ("numpy", "jax", "pallas")
+
+
+def _cfg(**kw):
+    return IndexSetConfig(
+        strategy=StrategyConfig.set2(cluster_size=1024),
+        fl_area_clusters=64,
+        **kw,
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _world():
+    """A three-part collection (small enough that every round's
+    from-scratch rebuild stays cheap) plus the canonical query batch."""
+    lex = make_lexicon(
+        n_words=3000, n_lemmas=1300, n_stop=20, n_frequent=120, seed=41
+    )
+    parts = [
+        generate_part(lex, n_docs=40, avg_doc_len=110, doc0=0, seed=70),
+        generate_part(lex, n_docs=40, avg_doc_len=110, doc0=40, seed=71),
+        generate_part(lex, n_docs=40, avg_doc_len=110, doc0=80, seed=72),
+    ]
+    doc_starts = [0, 40, 80]
+    toks = parts[0][0]
+    pools = class_pools(lex)
+    queries = core_queries(toks, pools)
+    # best-k result mode rides the same update stream: streaming cursors
+    # over a live substrate, plus a proximity top-k
+    queries += [
+        Query(tuple(int(t) for t in toks[5:8]), phrase=True, top_k=2),
+        Query(queries[0].words, top_k=3),
+    ]
+    return lex, parts, doc_starts, queries
+
+
+# -------------------------------------------- the incremental-update oracle --
+@pytest.mark.parametrize("n_shards", SHARD_COUNTS)
+def test_incremental_updates_match_rebuild(n_shards):
+    """Interleaved add_documents/search rounds: every backend's live
+    service stays element-wise identical to a from-scratch rebuild, on
+    every shard count, across all planner routes including top-k."""
+    lex, parts, doc_starts, queries = _world()
+
+    def make():
+        if n_shards == 1:
+            return TextIndexSet(_cfg(), lex, seed=0)
+        return ShardedTextIndexSet(_cfg(), lex, n_shards=n_shards, seed=0)
+
+    svcs = run_live_update_rounds(
+        make, parts, doc_starts, queries, backends=BACKENDS,
+        ctx=("shards", n_shards),
+    )
+    for svc in svcs.values():
+        # every batch pinned its snapshot; the final vector must agree
+        # with the reader's current generations
+        assert svc.last_trace["snapshot"] == list(
+            svc.reader.generation_vector()
+        )
+
+
+def test_update_streams_apply_parts_independently():
+    """Per-shard UpdateStreams replaying each shard's own queue at its
+    own pace (shard 1 lags a part behind) serve exactly the rows that
+    landed — the same per-shard results an all-shards add_documents
+    produces once the laggard catches up."""
+    lex, parts, doc_starts, queries = _world()
+    from repro.core.text_index import MULTI_INDEX
+    from repro.data.corpus import extract_postings
+    from repro.core.sharded_set import shard_of_docs
+
+    ref = ShardedTextIndexSet(_cfg(), lex, n_shards=2, seed=0)
+    live = ShardedTextIndexSet(_cfg(), lex, n_shards=2, seed=0)
+
+    def scattered(sts, toks, offs, d0):
+        maps = extract_postings(lex, toks, offs, d0, sts.cfg.max_distance)
+        maps[MULTI_INDEX] = sts.indexes[MULTI_INDEX].extract_part(
+            lex, toks, offs, d0
+        )
+        out = [{name: {} for name in maps} for _ in range(sts.n_shards)]
+        for name, by_key in maps.items():
+            for key, arr in by_key.items():
+                owner = shard_of_docs(arr[:, 0], sts.n_shards)
+                for s in range(sts.n_shards):
+                    rows = arr[owner == s]
+                    if rows.size:
+                        out[s][name][key] = rows
+        return out
+
+    for (toks, offs), d0 in zip(parts[:2], doc_starts[:2]):
+        ref.add_documents(toks, offs, d0)
+    # live: shard 0 applies both parts, shard 1 lags one part behind,
+    # then catches up — generations advance per shard, independently
+    queues = [scattered(live, t, o, d)
+              for (t, o), d in zip(parts[:2], doc_starts[:2])]
+    live.update_streams[0].apply(queues[0][0])
+    live.update_streams[0].apply(queues[1][0])
+    live.update_streams[1].apply(queues[0][1])
+    assert live.shards[0].generation == ref.shards[0].generation
+    assert live.shards[1].generation < ref.shards[1].generation
+    live.update_streams[1].apply(queues[1][1])
+    assert live.generation_vector() == ref.generation_vector()
+
+    got = SearchService(live, window=3, backend="numpy").search_batch(queries)
+    want = SearchService(ref, window=3, backend="numpy").search_batch(queries)
+    for r, g in zip(want, got):
+        assert np.array_equal(r.docs, g.docs)
+        assert np.array_equal(r.witnesses, g.witnesses)
+
+
+# ------------------------------------------------- cursor admit-time checks --
+def _small_index(**kw):
+    cfg = StrategyConfig.set1(cluster_size=256, em_limit=8, **kw)
+    idx = InvertedIndex(cfg, BlockDevice(cluster_size=256), n_groups=2,
+                        fl_area_clusters=8)
+    return idx
+
+
+def _rows(lo, hi, positions=6):
+    docs = np.repeat(np.arange(lo, hi, dtype=np.int64), positions)
+    pos = np.tile(np.arange(positions, dtype=np.int64), hi - lo)
+    return np.stack([docs, pos], 1)
+
+
+def test_cursor_admit_rechecks_generation():
+    """Satellite regression: open cursor -> add_part -> (reader refresh)
+    -> drain.  The drain delivers the open-time snapshot but must NOT
+    admit it; the next lookup must see the fresh postings."""
+    idx = _small_index()
+    idx.add_part({"hot": _rows(0, 40), "other": _rows(0, 3)})
+    reader = IndexReader(idx, cache=PostingCache(1 << 20))
+    old = np.asarray(idx.lookup("hot"))
+
+    cur = reader.open_cursor("hot", chunk_clusters=1)
+    assert cur.generation == idx.n_parts
+    idx.add_part({"hot": _rows(40, 60), "other": _rows(3, 5)})
+    # a lookup on another key moves the reader to the new generation
+    # BEFORE the cursor drains — the exact window where the old code
+    # admitted the pre-update list into the post-update cache
+    reader.lookup("other")
+    drained = cur.read_all()
+    assert np.array_equal(drained, old)  # open-time snapshot served
+    fresh = reader.lookup("hot")
+    assert np.array_equal(fresh, np.asarray(idx.lookup("hot")))
+    assert fresh.shape[0] > old.shape[0]
+
+
+def test_completed_cursor_still_admits():
+    """The admit path still warms the cache when no update intervened:
+    the drain's list lands in the LRU and the next lookup is a hit."""
+    idx = _small_index()
+    idx.add_part({"hot": _rows(0, 40)})
+    cache = PostingCache(1 << 20)
+    reader = IndexReader(idx, cache=cache)
+    drained = reader.open_cursor("hot", chunk_clusters=1).read_all()
+    h0 = cache.stats.hits
+    hit = reader.lookup("hot")
+    assert cache.stats.hits == h0 + 1
+    assert np.array_equal(hit, drained)
+
+
+def test_drained_cursor_results_frozen():
+    """Satellite regression: drained-cursor results and cursor-admitted
+    cache entries are immutable — in-place mutation AND re-enabling the
+    writeable flag both fail loudly, exactly like lookup results."""
+    idx = _small_index()
+    # "em" stays a tiny single-chunk (dictionary-resident) list — the
+    # single-chunk drain is the case whose cache entry used to share a
+    # writeable buffer with the caller's result
+    idx.add_part({"hot": _rows(0, 40), "em": np.array([[0, 1]])})
+    reader = IndexReader(idx, cache=PostingCache(1 << 20))
+    for key in ("hot", "em"):
+        drained = reader.open_cursor(key, chunk_clusters=1).read_all()
+        assert not drained.flags.writeable
+        with pytest.raises((ValueError, RuntimeError)):
+            drained[0, 0] = 99
+        hit = reader.lookup(key)  # served from the admitted entry
+        assert not hit.flags.writeable
+        with pytest.raises(ValueError):
+            hit.flags.writeable = True
+
+
+def test_tag_cursor_mid_update_drain_serves_snapshot():
+    """A lazy cursor over a TAG bucket pins the bucket bytes at open:
+    an update (or a bucket rewrite) landing before the drain must not
+    leak post-snapshot rows into the delivered list."""
+    idx = _small_index(tag_extract_bytes=4096)
+    keys = {f"t{i}": _rows(i, i + 2) for i in range(8)}
+    idx.add_part(keys)
+    from repro.core.dictionary import K_TAG
+    tag_keys = [k for k in keys if idx.dict.get(k).kind == K_TAG]
+    assert tag_keys, "config must drive small keys into TAG buckets"
+    key = tag_keys[0]
+    reader = IndexReader(idx, cache=PostingCache(1 << 20))
+    old = np.asarray(idx.lookup(key))
+
+    cur = reader.open_cursor(key)
+    idx.add_part({key: _rows(100, 104)})
+    drained = cur.read_all()
+    assert np.array_equal(drained, old)  # open-time snapshot, not the
+    fresh = reader.lookup(key)           # rewritten bucket
+    assert fresh.shape[0] > old.shape[0]
+    assert np.array_equal(fresh, np.asarray(idx.lookup(key)))
+
+
+# ------------------------------------------------ per-shard generations -----
+def test_untouched_shard_keeps_generation_and_cache():
+    """Satellite regression: a part whose docs all hash to one shard
+    must not advance any other shard's generation (previously every
+    shard's every index got an add_part call, forcing full cache drops
+    on untouched shards)."""
+    lex, parts, doc_starts, queries = _world()
+    sts = ShardedTextIndexSet(_cfg(), lex, n_shards=4, seed=0)
+    sts.add_documents(*parts[0], 0)
+    svc = SearchService(sts, window=3, backend="numpy")
+    svc.search_batch(queries)  # warm every shard's cache
+
+    doc0 = 40
+    target = shard_of(doc0, 4)
+    gens = sts.generation_vector()
+    cache = svc.reader.cache
+    warm_elsewhere = {
+        slot for slot in cache._map if not slot[0].startswith(f"s{target}:")
+    }
+    toks, offs = generate_part(lex, n_docs=1, avg_doc_len=80, doc0=doc0,
+                               seed=99)
+    sts.add_documents(toks, offs, doc0)
+
+    now = sts.generation_vector()
+    for s in range(4):
+        if s == target:
+            assert now[s] > gens[s]
+            assert sts.update_streams[s].parts_applied == 2
+        else:
+            assert now[s] == gens[s]
+            assert sts.update_streams[s].parts_applied == 1
+    svc.search_batch(queries)
+    # refresh invalidated at most the touched shard's touched keys:
+    # every other shard's warm entry survived, and no namespace was
+    # swept wholesale
+    assert warm_elsewhere <= set(cache._map)
+    assert cache.stats.full_drops == 0
+
+
+def test_targeted_invalidation_fewer_drops_same_results():
+    """Two readers over ONE live substrate — targeted digests vs the
+    whole-namespace baseline: identical results, strictly fewer cache
+    invalidations, no full drops on the digest path."""
+    lex, parts, doc_starts, queries = _world()
+    sts = ShardedTextIndexSet(_cfg(), lex, n_shards=2, seed=0)
+    sts.add_documents(*parts[0], 0)
+    svc_t = SearchService(sts.reader(targeted=True), window=3,
+                          backend="numpy")
+    svc_b = SearchService(sts.reader(targeted=False), window=3,
+                          backend="numpy")
+    for (toks, offs), d0 in zip(parts[1:], doc_starts[1:]):
+        svc_t.search_batch(queries)
+        svc_b.search_batch(queries)
+        sts.add_documents(toks, offs, d0)
+    got_t = svc_t.search_batch(queries)
+    got_b = svc_b.search_batch(queries)
+    for r, g in zip(got_b, got_t):
+        assert np.array_equal(r.docs, g.docs)
+        assert np.array_equal(r.witnesses, g.witnesses)
+    st_t, st_b = svc_t.reader.cache.stats, svc_b.reader.cache.stats
+    assert st_t.invalidations < st_b.invalidations
+    assert st_t.full_drops == 0
+    assert st_b.full_drops > 0
+    # fewer invalidations must buy actual warmth: the targeted reader
+    # re-reads less, so it can only have MORE cache hits
+    assert st_t.hits >= st_b.hits
+
+
+def test_digest_history_fallback():
+    """A reader further behind than the writer's bounded digest history
+    falls back to the whole-namespace drop — and still reads fresh."""
+    idx = InvertedIndex(
+        StrategyConfig.set1(cluster_size=256, em_limit=8),
+        BlockDevice(cluster_size=256), n_groups=2, fl_area_clusters=8,
+        digest_history=2,
+    )
+    idx.add_part({"a": _rows(0, 4)})
+    cache = PostingCache(1 << 20)
+    reader = IndexReader(idx, cache=cache)
+    reader.lookup("a")
+    reader.lookup("b")  # negative-cache entry
+    # three parts exceed the 2-part history: digests_since(1) is None
+    idx.add_part({"a": _rows(4, 8)})
+    idx.add_part({"c": _rows(8, 9)})
+    idx.add_part({"a": _rows(9, 12)})
+    assert idx.digests_since(1) is None
+    assert len(idx.digests_since(2)) == 2
+    fresh = reader.lookup("a")
+    assert cache.stats.full_drops == 1
+    assert np.array_equal(fresh, np.asarray(idx.lookup("a")))
+
+
+def test_oversized_digest_falls_back_to_namespace_drop():
+    """A part touching more keys than the digest size cap records a
+    sentinel: readers behind it take the whole-namespace drop (cheaper
+    than a vocabulary-sized targeted scan) and still read fresh."""
+    idx = InvertedIndex(
+        StrategyConfig.set1(cluster_size=256, em_limit=8),
+        BlockDevice(cluster_size=256), n_groups=2, fl_area_clusters=8,
+        digest_max_keys=3,
+    )
+    touched = idx.add_part({"a": _rows(0, 4)})
+    assert touched == frozenset({"a"})
+    cache = PostingCache(1 << 20)
+    reader = IndexReader(idx, cache=cache)
+    reader.lookup("a")
+    big = {f"k{i}": _rows(10 + i, 11 + i) for i in range(4)}
+    assert len(idx.add_part(big)) == 4  # the return still names every key
+    assert idx.digests_since(1) is None
+    fresh = reader.lookup("a")
+    assert cache.stats.full_drops == 1
+    assert np.array_equal(fresh, np.asarray(idx.lookup("a")))
+
+
+def test_empty_part_does_not_advance_generation():
+    idx = _small_index()
+    idx.add_part({"a": _rows(0, 2)})
+    gen = idx.n_parts
+    idx.add_part({})
+    idx.add_part({"zero": np.zeros((0, 2), dtype=np.int64)})
+    assert idx.n_parts == gen
+    assert idx.digests_since(gen) == []
+
+
+# --------------------------------------------------- snapshot consistency --
+def test_mid_batch_update_raises_snapshot_violation():
+    """A writer advancing any shard's generation mid-batch must trip the
+    snapshot guard, never return torn results."""
+    lex, parts, doc_starts, _ = _world()
+    ts = TextIndexSet(_cfg(), lex, seed=0)
+    ts.add_documents(*parts[0], 0)
+    pools = class_pools(lex)
+    from repro.core.lexicon import OTHER
+
+    def evil_join(a, b, w):
+        if ts.generation == evil_join.gen0:  # fire once, mid-batch
+            ts.add_documents(*parts[1], 40)
+        return numpy_window_join(a, b, w)
+
+    evil_join.gen0 = ts.generation
+    svc = SearchService(ts, window=3, backend=evil_join)
+    q = Query((pools[OTHER][0], pools[OTHER][1]))
+    with pytest.raises(SnapshotViolationError):
+        svc.search_batch([q])
+
+
+def test_batch_trace_records_pinned_snapshot():
+    lex, parts, doc_starts, queries = _world()
+    sts = ShardedTextIndexSet(_cfg(), lex, n_shards=2, seed=0)
+    sts.add_documents(*parts[0], 0)
+    svc = SearchService(sts, window=3, backend="numpy")
+    svc.search_batch(queries)
+    assert svc.last_trace["snapshot"] == sts.generation_vector()
+    sts.add_documents(*parts[1], 40)
+    svc.search_batch(queries)
+    assert svc.last_trace["snapshot"] == sts.generation_vector()
