@@ -1,0 +1,266 @@
+"""Durability cost model: WAL fsync, crash recovery, compaction payoff.
+
+Three questions the on-disk backend (:mod:`repro.store`) must answer
+with numbers:
+
+  * **What does durability cost at apply time?**  The same part
+    sequence lands in a plain in-memory substrate, a WAL-fed store
+    without fsync, and one with fsync — and because serving I/O never
+    routes through the store, the simulated build charges must be
+    IDENTICAL across all three (the parity-by-construction gate).
+  * **What does recovery cost?**  Replay reopen time is measured after
+    every part (recovery work vs WAL length), then a checkpoint is
+    published and the checkpoint+tail reopen is timed against the full
+    replay it replaces.  The recovered store must serve element-wise
+    identical results.
+  * **What does compaction buy?**  A cold query sweep is charged
+    before and after one background-compaction cycle: the folded
+    layout must never read MORE simulated bytes, while results stay
+    identical.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.durability \
+        [--scale S] [--queries N] [--parts P] [--shards K]
+"""
+
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+from pathlib import Path
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import World, bench_index_config, make_world
+from benchmarks.search_speed import _mixed_stream
+from repro.core.sharded_set import ShardedTextIndexSet
+from repro.search import SearchService
+from repro.store import DurableIndexStore
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def _io_sig(report) -> dict:
+    return {
+        name: (st.read_bytes, st.read_ops, st.write_bytes, st.write_ops)
+        for name, st in report.items()
+    }
+
+
+def _cold_serve(sub, queries, backend):
+    """One cold-cache batch; returns (results, simulated read bytes)."""
+    svc = SearchService(sub, window=3, backend=backend, cache_bytes=1)
+    before = sum(st.read_bytes for st in sub.search_io().values())
+    res = svc.search_batch(queries)
+    return res, sum(st.read_bytes for st in sub.search_io().values()) - before
+
+
+def _same(a, b) -> bool:
+    return all(
+        np.array_equal(r.docs, g.docs)
+        and np.array_equal(r.witnesses, g.witnesses)
+        for r, g in zip(a, b)
+    )
+
+
+def run(
+    scale: float = 0.5,
+    world: World = None,
+    n_queries: int = 32,
+    n_parts: int = 4,
+    n_shards: int = 2,
+    backend: str = "numpy",
+    workdir: str = None,
+) -> List[Dict]:
+    if n_parts < 2:
+        raise ValueError(f"--parts must be >= 2, got {n_parts}")
+    world = world or make_world(scale, n_parts=n_parts)
+    # same no-multi rationale as update_speed; the smaller cluster and
+    # TAG extraction threshold push hot keys into dedicated multi-unit
+    # streams even at tier-1 smoke scale — compaction needs something
+    # to fold
+    cfg = bench_index_config("set2", multi_k=None, cluster_size=512,
+                             tag_extract_bytes=512)
+    lex = world.lexicon
+    queries = _mixed_stream(lex, n_queries, np.random.RandomState(7))
+    root = Path(workdir or tempfile.mkdtemp(prefix="repro-durability-"))
+    rows: List[Dict] = []
+    try:
+        # ---- apply cost: sim vs WAL vs WAL+fsync -------------------------
+        subs = {
+            "sim": ShardedTextIndexSet(cfg, lex, n_shards=n_shards, seed=0),
+            "wal": DurableIndexStore(root / "wal", cfg, lex,
+                                     n_shards=n_shards, fsync=False),
+            "wal_fsync": DurableIndexStore(root / "fsync", cfg, lex,
+                                           n_shards=n_shards, fsync=True),
+        }
+        apply_s = {}
+        for mode, sub in subs.items():
+            def land(sub=sub):
+                for part, d0 in zip(world.parts, world.doc_starts):
+                    sub.add_documents(*part, d0)
+            apply_s[mode] = _timed(land)
+        parity = all(
+            _io_sig(subs[m].build_io()) == _io_sig(subs["sim"].build_io())
+            for m in ("wal", "wal_fsync")
+        )
+        for mode, sub in subs.items():
+            st = sub.stats() if hasattr(sub, "stats") else {}
+            rows.append({
+                "bench": "durability", "mode": f"apply_{mode}",
+                "shards": n_shards, "parts": len(world.parts),
+                "apply_s": round(apply_s[mode], 4),
+                "fsync_overhead": round(
+                    apply_s[mode] / max(1e-9, apply_s["wal"]), 2),
+                "wal_bytes": st.get("wal_bytes", 0),
+                "wal_syncs": st.get("wal_syncs", 0),
+                "charge_parity": parity,
+            })
+        subs["wal_fsync"].close()
+
+        # ---- recovery time vs WAL length ---------------------------------
+        # the "wal" store's directory is reopened read-side after every
+        # part-count prefix: replay work grows with the log
+        writer = DurableIndexStore(root / "grow", cfg, lex,
+                                   n_shards=n_shards, fsync=False)
+        replay_s = []
+        for i, (part, d0) in enumerate(zip(world.parts, world.doc_starts)):
+            writer.add_documents(*part, d0)
+            re = {}
+            replay_s.append(_timed(lambda: re.setdefault("s", DurableIndexStore(
+                root / "grow", cfg, lex, n_shards=n_shards, fsync=False,
+                recovery="replay"))))
+            re["s"].close()
+            rows.append({
+                "bench": "durability", "mode": "replay_reopen",
+                "shards": n_shards, "parts": i + 1,
+                "wal_bytes": writer.wal.tell(),
+                "reopen_s": round(replay_s[-1], 4),
+            })
+        # final replay reopen must serve element-wise what the writer does
+        reopened = DurableIndexStore(root / "grow", cfg, lex,
+                                     n_shards=n_shards, fsync=False,
+                                     recovery="replay")
+        recovered_identical = (
+            reopened.generation_vector() == writer.generation_vector()
+            and _io_sig(reopened.build_io()) == _io_sig(writer.build_io())
+            and _same(_cold_serve(reopened, queries, backend)[0],
+                      _cold_serve(writer, queries, backend)[0])
+        )
+        reopened.close()
+
+        writer.checkpoint()
+        ck = {}
+        ckpt_s = _timed(lambda: ck.setdefault("s", DurableIndexStore(
+            root / "grow", cfg, lex, n_shards=n_shards, fsync=False)))
+        ckpt_identical = (
+            ck["s"].recovery_info["from_checkpoint"]
+            and _same(_cold_serve(ck["s"], queries, backend)[0],
+                      _cold_serve(writer, queries, backend)[0])
+        )
+        ck["s"].close()
+        rows.append({
+            "bench": "durability", "mode": "checkpoint_reopen",
+            "shards": n_shards, "parts": len(world.parts),
+            "wal_bytes": writer.wal.tell(),
+            "reopen_s": round(ckpt_s, 4),
+            "replay_s": round(replay_s[-1], 4),
+            "speedup": round(replay_s[-1] / max(1e-9, ckpt_s), 2),
+            "identical": recovered_identical and ckpt_identical,
+        })
+
+        # ---- compaction payoff: cold read bytes before vs after ----------
+        ref, bytes_before = _cold_serve(writer, queries, backend)
+        writer.compact()
+        comp = writer.compaction_stats()
+        got, bytes_after = _cold_serve(writer, queries, backend)
+        rows.append({
+            "bench": "durability", "mode": "compaction",
+            "shards": n_shards, "parts": len(world.parts),
+            "compactions": comp["compactions"],
+            "compacted_streams": comp["compacted_streams"],
+            "read_bytes_before": bytes_before,
+            "read_bytes_after": bytes_after,
+            "bytes_ratio": round(bytes_after / max(1, bytes_before), 4),
+            "identical": _same(ref, got),
+        })
+        subs["wal"].close()
+        writer.close()
+    finally:
+        if workdir is None:
+            shutil.rmtree(root, ignore_errors=True)
+    return rows
+
+
+def main(scale: float = 0.5, n_queries: int = 32, n_parts: int = 4,
+         n_shards: int = 2) -> None:
+    rows = run(scale, n_queries=n_queries, n_parts=n_parts,
+               n_shards=n_shards)
+    by_mode = {r["mode"]: r for r in rows}
+    print(f"{'mode':18s} {'parts':>5s} {'wal_bytes':>10s} "
+          f"{'seconds':>8s} {'note':s}")
+    for r in rows:
+        note = ""
+        if r["mode"].startswith("apply_"):
+            note = f"{r['fsync_overhead']}x vs wal, {r['wal_syncs']} fsyncs"
+            secs = r["apply_s"]
+        elif "reopen" in r["mode"]:
+            secs = r["reopen_s"]
+            if r["mode"] == "checkpoint_reopen":
+                note = f"{r['speedup']}x vs full replay"
+        else:
+            secs = 0.0
+            note = (f"{r['compacted_streams']} stream(s) folded, "
+                    f"{r['bytes_ratio']}x cold read bytes")
+        print(f"{r['mode']:18s} {r['parts']:>5d} "
+              f"{r.get('wal_bytes', 0):>10,} {secs:>8.3f} {note}")
+
+    a = by_mode["apply_wal_fsync"]
+    assert a["charge_parity"], (
+        "durable stores must charge the simulated devices exactly like "
+        "the in-memory substrate"
+    )
+    assert a["wal_syncs"] == a["parts"], (
+        f"every part must fsync exactly once ({a['wal_syncs']} syncs for "
+        f"{a['parts']} parts)"
+    )
+    ck = by_mode["checkpoint_reopen"]
+    assert ck["identical"], (
+        "recovered stores must serve element-wise identical results"
+    )
+    # a timing sanity bound, not a perf race: bulk-applying the snapshot
+    # must be in the same ballpark as replay at CI scale, never a blowup
+    assert ck["reopen_s"] < 2 * ck["replay_s"] + 0.5, (
+        "checkpoint+tail reopen blew up vs a full WAL replay "
+        f"({ck['reopen_s']:.3f}s vs {ck['replay_s']:.3f}s)"
+    )
+    co = by_mode["compaction"]
+    assert co["identical"], "compaction must not change any result"
+    assert co["compacted_streams"] >= 1, "the cycle must fold something"
+    assert co["read_bytes_after"] <= co["read_bytes_before"], (
+        "a folded layout must never read MORE simulated bytes "
+        f"({co['read_bytes_after']} vs {co['read_bytes_before']})"
+    )
+    print(f"PASS  durability charged zero simulated bytes; recovery "
+          f"identical ({ck['speedup']}x faster from checkpoint); "
+          f"compaction folded {co['compacted_streams']} stream(s) at "
+          f"{co['bytes_ratio']}x cold read bytes")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.5)
+    ap.add_argument("--queries", type=int, default=32)
+    ap.add_argument("--parts", type=int, default=4)
+    ap.add_argument("--shards", type=int, default=2)
+    args = ap.parse_args()
+    main(args.scale, n_queries=args.queries, n_parts=args.parts,
+         n_shards=args.shards)

@@ -13,6 +13,8 @@ Benches:
     search_topk   — top-k early-termination vs exhaustive (read-bytes ratio)
     update_speed  — live per-shard update streams: targeted invalidation
                     vs whole-namespace drops under interleaved updates
+    durability    — repro.store: WAL fsync cost, recovery time vs WAL
+                    length, read bytes before/after compaction
     paged_kv      — TPU adaptation: paged KV allocator behaviour
     kernels       — Pallas kernel microbenches (interpret mode) vs refs
 """
@@ -130,6 +132,31 @@ def _bench_update_speed(scale):
     ]
 
 
+def _bench_durability(scale):
+    from benchmarks import durability
+
+    rows = durability.run(min(scale, 0.5))
+    by_mode = {r["mode"]: r for r in rows}
+    a = by_mode["apply_wal_fsync"]
+    ck = by_mode["checkpoint_reopen"]
+    co = by_mode["compaction"]
+    ok = (
+        a["charge_parity"]
+        and a["wal_syncs"] == a["parts"]
+        and ck["identical"]
+        and co["identical"]
+        and co["compacted_streams"] >= 1
+        and co["read_bytes_after"] <= co["read_bytes_before"]
+    )
+    return rows, [
+        f"{'PASS' if ok else 'FAIL'}  durable store charged zero simulated "
+        f"bytes; recovery served identical results "
+        f"({ck['speedup']}x faster from checkpoint); compaction folded "
+        f"{co['compacted_streams']} stream(s) at {co['bytes_ratio']}x "
+        f"cold read bytes"
+    ]
+
+
 def _bench_paged_kv(scale):
     from benchmarks import paged_kv_bench
 
@@ -151,6 +178,7 @@ BENCHES = {
     "search_sharded": _bench_search_sharded,
     "search_topk": _bench_search_topk,
     "update_speed": _bench_update_speed,
+    "durability": _bench_durability,
     "paged_kv": _bench_paged_kv,
     "kernels": _bench_kernels,
 }

@@ -114,6 +114,12 @@ def run(
         identical &= round_trip()
         batches += 1
         sts.add_documents(*world.parts[p], world.doc_starts[p])
+        if p == len(world.parts) // 2:
+            # one background-compaction cycle mid-stream: published as a
+            # generation advance + digest, it must invalidate only the
+            # folded keys on the targeted reader (the namespace_drop
+            # baseline sweeps as usual) and never perturb results
+            sts.compact()
     # post-update round: the invalidations of the LAST part land here
     identical &= round_trip()
     batches += 1
@@ -128,6 +134,7 @@ def run(
     identical &= all(_same(last[m], ref) for m in services)
 
     n = batches * len(queries)
+    comp = sts.compaction_stats()
     rows = []
     for mode, svc in services.items():
         st = svc.reader.cache.stats
@@ -146,6 +153,9 @@ def run(
             "misses": st.misses,
             "hit_rate": round(st.hit_rate, 4),
             "snapshot": svc.last_trace["snapshot"],
+            "compactions": comp["compactions"],
+            "compacted_streams": comp["compacted_streams"],
+            "trace_full_drops": svc.last_trace["cache"]["full_drops"],
             "identical": identical,
         })
     return rows
@@ -173,7 +183,8 @@ def main(scale: float = 0.5, n_queries: int = 48, n_parts: int = 4,
     t, b = by_mode["targeted"], by_mode["namespace_drop"]
     print(f"{t['batches']} batches x {t['queries_per_batch']} queries over "
           f"{t['parts']} live parts on {t['shards']} shards; final snapshot "
-          f"generations {t['snapshot']}")
+          f"generations {t['snapshot']}; {t['compactions']} compaction "
+          f"cycle(s) folded {t['compacted_streams']} stream(s)")
     assert t["identical"], (
         "live readers diverged from the from-scratch rebuild"
     )

@@ -22,4 +22,10 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.search_speed \
 # whole-namespace baseline
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.update_speed \
   --scale 0.05 --queries 12 --parts 3 --shards 2
+# tiny-corpus smoke of the durable on-disk backend: the WAL-fed store
+# must charge the simulated devices exactly like the in-memory
+# substrate, recover to element-wise identical results (replay and
+# checkpoint paths), and fold streams without ever reading more bytes
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.durability \
+  --scale 0.05 --queries 12 --parts 3 --shards 2
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -x -q "$@"

@@ -179,6 +179,9 @@ class InvertedIndex:
             maxlen=max(1, int(digest_history))
         )
         self._digest_max_keys = int(digest_max_keys)
+        # background-compaction observability (repro.store rides on these)
+        self.n_compactions = 0
+        self.compacted_streams = 0
 
     # ------------------------------------------------------------ updating --
     def add_part(
@@ -233,6 +236,37 @@ class InvertedIndex:
         if len(out) != missing or any(d is None for d in out):
             return None
         return out
+
+    def compact(self) -> Optional[frozenset]:
+        """Background compaction: fold every dedicated stream whose
+        storage is scattered (chained segments, SR/FL tails, loose
+        power-of-two over-allocation) into one tight EM-tier segment.
+
+        Published as *just another generation advance*: ``n_parts``
+        bumps once for the whole cycle and the touched-key digest lands
+        in the same bounded history ``add_part`` feeds, so snapshot
+        pins, open cursors and targeted cache invalidation all see a
+        compaction exactly like an update part.  A cycle that rewrites
+        nothing is a FULL no-op — no generation bump, no digest —
+        mirroring the empty-part rule.  Returns the digest, or ``None``
+        for a no-op cycle."""
+        touched: List[Hashable] = []
+        for key, e in self.dict.entries.items():
+            if e.kind != K_OWN:
+                continue
+            if self.mgr.compact_stream(e.sid):
+                touched.append(key)
+        if not touched:
+            return None
+        self.n_compactions += 1
+        self.compacted_streams += len(touched)
+        self.n_parts += 1
+        digest = frozenset(touched)
+        self._part_digests.append((
+            self.n_parts,
+            digest if len(digest) <= self._digest_max_keys else None,
+        ))
+        return digest
 
     def _run_phase(self, group: int, items: List[Tuple[Hashable, np.ndarray]]) -> None:
         dev = self.dict_dev

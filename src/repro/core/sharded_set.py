@@ -139,6 +139,7 @@ class UpdateStream:
         self.index_set = index_set
         self.parts_applied = 0
         self.rows_applied = 0
+        self.compactions_applied = 0
 
     @property
     def generation(self) -> int:
@@ -157,6 +158,16 @@ class UpdateStream:
         if digest:
             self.parts_applied += 1
             self.rows_applied += rows
+        return digest
+
+    def compact(self) -> Dict[str, frozenset]:
+        """One background-compaction cycle on this shard alone —
+        published through the shard's generation/digest machinery like
+        any other part (see :meth:`TextIndexSet.compact`).  Shards
+        compact independently, exactly as they update independently."""
+        digest = self.index_set.compact()
+        if digest:
+            self.compactions_applied += 1
         return digest
 
 
@@ -213,9 +224,18 @@ class ShardedTextIndexSet(IndexSetLike):
             maps[MULTI_INDEX] = self.indexes[MULTI_INDEX].extract_part(
                 self.lexicon, tokens, offsets, doc0
             )
+        self.apply_part_maps(maps)
+
+    def apply_part_maps(
+        self, maps: Dict[str, Dict[Hashable, np.ndarray]]
+    ) -> List[Dict[str, frozenset]]:
+        """Scatter one whole-set extracted part by doc hash and run each
+        touched shard's update stream — the primitive under
+        :meth:`add_documents`, also driven directly by callers replaying
+        a durable part log (``repro.store``).  Returns the per-shard
+        touched-key digests (empty dict for untouched shards)."""
         if self.n_shards == 1:
-            self.update_streams[0].apply(maps)
-            return
+            return [self.update_streams[0].apply(maps)]
         shard_maps: List[Dict[str, Dict[Hashable, np.ndarray]]] = [
             {name: {} for name in maps} for _ in range(self.n_shards)
         ]
@@ -231,8 +251,24 @@ class ShardedTextIndexSet(IndexSetLike):
         # generation (previously every shard's every index got an
         # `add_part` call, bumping generations and forcing needless full
         # cache drops on untouched shards)
-        for s in range(self.n_shards):
+        return [
             self.update_streams[s].apply(shard_maps[s])
+            for s in range(self.n_shards)
+        ]
+
+    def compact(self) -> List[Dict[str, frozenset]]:
+        """One background-compaction cycle, every shard: each shard
+        folds its scattered streams and publishes its own generation
+        advance + digest (untouched shards publish nothing)."""
+        return [us.compact() for us in self.update_streams]
+
+    def compaction_stats(self) -> Dict[str, int]:
+        """Aggregate background-compaction counters across all shards."""
+        agg = {"compactions": 0, "compacted_streams": 0}
+        for shard in self.shards:
+            for k, v in shard.compaction_stats().items():
+                agg[k] += v
+        return agg
 
     def generation_vector(self) -> List[int]:
         """Per-shard snapshot generations — what a snapshot-consistent

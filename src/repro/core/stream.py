@@ -797,6 +797,81 @@ class StreamManager:
             ops += 1
         return ops
 
+    # ------------------------------------------------------- compaction --
+    def compact_stream(self, sid: int) -> bool:
+        """Fold one CH/S stream's scattered storage into a single tight
+        contiguous EM-tier segment (the background-compaction primitive:
+        small update parts accumulated across many phases become one
+        large external-memory run).
+
+        Runs BETWEEN phases (maintenance, not indexing): charges a read
+        of the stream's current layout — exactly what :meth:`read_stream`
+        charges — plus one contiguous segment write, both on the build
+        device.  The stream's logical payload is untouched, so open
+        cursors keep draining their open-time snapshot (their charge
+        closures price the open-time layout) and decoded posting lists
+        stay valid; only the physical layout changes.  SR/FL tail
+        membership is released: the folded stream is a finished run with
+        no accumulator (later appends take the direct path, like any
+        stream past the tail budgets).
+
+        Returns ``False`` — charging and changing NOTHING — when the
+        stream is not CH/S, is empty, already sits in one tight segment,
+        or folding would make reads MORE expensive (an SR/FL tail is
+        charged at sub-cluster granularity; folding a short stream whose
+        bytes mostly live in its tail rounds that up to whole clusters —
+        the accumulator is already the cheap layout, which is the point
+        of the paper's tail constructions): a no-op compaction cycle
+        must be a real no-op.
+        """
+        assert self._phase_group is None, "compaction runs between phases"
+        st = self.streams[sid]
+        if st.state not in (CH, S) or st.total_bytes <= 0:
+            return False
+        total = st.total_bytes
+        need = _ceil_div(total + LINK_BYTES, self.cluster_size)
+        allocated = sum(s.nclusters for s in st.segments)
+        multi_unit = (
+            len(st.segments) > 1
+            or (st.has_sr and st.sr_bytes > 0)
+            or (st.has_fl and st.fl_bytes > 0)
+        )
+        if not multi_unit and allocated <= need:
+            return False
+        cur_charge = allocated * self.cluster_size
+        if st.has_sr and st.sr_bytes:
+            cur_charge += _blocks(st.sr_bytes, self.cfg.sr_block)
+        if st.has_fl and st.fl_bytes:
+            cur_charge += self.cluster_size
+        if need * self.cluster_size > cur_charge:
+            return False
+        # maintenance read of the whole current layout (segments + tails)
+        self.read_stream(sid)
+        # release the SR/FL tail: the compact run carries no accumulator
+        if st.has_sr:
+            self._sr_account(st, 0)
+            group_sids = self._sr_streams_by_group.get(st.group, [])
+            if sid in group_sids:
+                group_sids.remove(sid)
+            st.has_sr = False
+        if st.has_fl:
+            fl_sids = self._fl_streams_by_group.get(st.group, [])
+            if sid in fl_sids:
+                fl_sids.remove(sid)
+                self._fl_used_clusters -= 1
+            st.has_fl = False
+            st.fl_bytes = 0
+        old_ids = [c for seg in st.segments for c in seg.ids]
+        new = Segment(self.alloc.alloc(need), need, total)
+        self.device.write_clusters(new.ids)
+        st.segments = [new]
+        for s0, l0 in _id_runs(sorted(old_ids)):
+            self.alloc.free(s0, l0)
+        if st.state != S:
+            self._note(st.state, S)
+            st.state = S
+        return True
+
     # ----------------------------------------------------- TAG maintenance --
     def rewrite_stream(self, sid: int, new_data: bytes, last_doc: int) -> None:
         """Replace a stream's contents (TAG extraction, 5.6).  The stream is

@@ -204,6 +204,32 @@ class TextIndexSet(IndexSetLike):
                 digest[name] = touched
         return digest
 
+    def compact(self) -> Dict[str, frozenset]:
+        """One background-compaction cycle across every index.
+
+        Indexes that rewrote nothing are left untouched (no generation
+        bump, no digest) — the same no-op rule as an empty part.
+        Returns ``{index name → touched-key digest}``, empty cycles
+        omitted; the shape :meth:`apply_part_maps` returns, because to
+        the read stack a compaction IS just another part."""
+        digest: Dict[str, frozenset] = {}
+        for name, index in self.indexes.items():
+            touched = index.compact()
+            if touched is not None:
+                digest[name] = touched
+        return digest
+
+    def compaction_stats(self) -> Dict[str, int]:
+        """Aggregate background-compaction counters across the set."""
+        return {
+            "compactions": sum(
+                i.n_compactions for i in self.indexes.values()
+            ),
+            "compacted_streams": sum(
+                i.compacted_streams for i in self.indexes.values()
+            ),
+        }
+
     @property
     def generation(self) -> int:
         """Monotone snapshot counter: the sum of every index's applied

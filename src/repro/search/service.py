@@ -243,6 +243,24 @@ class SearchService:
                 f"batch executed against its pinned snapshot"
             )
         self.check_trace_complete(plan)
+        # serving-health counters: cumulative posting-cache stats (the
+        # full_drops count is THE regression signal for targeted
+        # invalidation — it moves only when a reader fell back to a
+        # whole-namespace sweep) and the substrate's background-compaction
+        # totals, so traces tie a batch to the maintenance that preceded it
+        cs = self.reader.cache_stats
+        if cs is not None:
+            self.last_trace["cache"] = {
+                "hits": cs.hits,
+                "misses": cs.misses,
+                "evictions": cs.evictions,
+                "invalidations": cs.invalidations,
+                "full_drops": cs.full_drops,
+                "bytes_used": cs.bytes_used,
+            }
+        comp = getattr(self.index_set, "compaction_stats", None)
+        if comp is not None:
+            self.last_trace["compactions"] = comp()
         return results
 
     # --------------------------------------------- stage 2: scatter-fetch --

@@ -1,0 +1,281 @@
+"""Background compaction: folding update parts into EM-tier segments.
+
+Compaction is published as *just another generation advance* plus a
+touched-key digest, so everything built for live updates — snapshot
+pins, open cursors, targeted cache invalidation — keeps working with no
+special cases.  The suite checks the contract from both sides:
+
+  * folding never changes a lookup and never makes reading a stream
+    MORE expensive (the charge gate: a scattered layout is folded only
+    when the single tight segment reads back cheaper), on every
+    strategy set;
+  * a no-op cycle is a FULL no-op: no ``n_parts`` bump, no digest
+    published, no generation movement — readers keep every cached byte;
+  * cursors opened before a cycle drain their open-time snapshot;
+  * a cycle landing mid-batch trips ``SnapshotViolationError`` exactly
+    like a mid-batch part; between batches it is absorbed silently;
+  * on the targeted reader a cycle invalidates ONLY the folded keys —
+    zero whole-namespace sweeps, warm entries elsewhere survive.
+"""
+
+import functools
+
+import numpy as np
+import pytest
+
+from repro.core.inverted_index import InvertedIndex
+from repro.core.io_sim import BlockDevice
+from repro.core.lexicon import OTHER, make_lexicon
+from repro.core.sharded_set import ShardedTextIndexSet
+from repro.core.strategies import StrategyConfig
+from repro.core.text_index import IndexSetConfig, TextIndexSet
+from repro.data.corpus import generate_part
+from repro.search import (
+    IndexReader,
+    PostingCache,
+    Query,
+    SearchService,
+    SnapshotViolationError,
+)
+from repro.search.join import numpy_window_join
+from tests.oracles import assert_results_identical, class_pools, core_queries
+
+
+def _cfg(setname="set2", **kw):
+    # tag_extract_bytes low enough that hot keys own dedicated streams
+    # at this corpus scale — compaction folds K_OWN streams only
+    strat = getattr(StrategyConfig, setname)(
+        cluster_size=1024, tag_extract_bytes=512
+    )
+    return IndexSetConfig(strategy=strat, fl_area_clusters=64, **kw)
+
+
+@functools.lru_cache(maxsize=None)
+def _world():
+    lex = make_lexicon(
+        n_words=3000, n_lemmas=1300, n_stop=20, n_frequent=120, seed=47
+    )
+    parts = [
+        generate_part(lex, n_docs=40, avg_doc_len=110, doc0=0, seed=90),
+        generate_part(lex, n_docs=40, avg_doc_len=110, doc0=40, seed=91),
+        generate_part(lex, n_docs=40, avg_doc_len=110, doc0=80, seed=92),
+    ]
+    doc_starts = [0, 40, 80]
+    pools = class_pools(lex)
+    queries = core_queries(parts[0][0], pools)
+    return lex, parts, doc_starts, queries
+
+
+def _read_charges(ts: TextIndexSet):
+    """Full posting scan through the search devices: (bytes, ops) per
+    index — the cost of reading EVERYTHING in the current layout."""
+    before = {n: (st.read_bytes, st.read_ops)
+              for n, st in ts.search_io().items()}
+    for name, idx in ts.indexes.items():
+        for key in idx.dict.entries:
+            ts.lookup(name, key)
+    after = {n: (st.read_bytes, st.read_ops)
+             for n, st in ts.search_io().items()}
+    return {n: (after[n][0] - before[n][0], after[n][1] - before[n][1])
+            for n in after}
+
+
+# ----------------------------------------------- folding the posting state --
+@pytest.mark.parametrize("setname", ("set1", "set2", "set3"))
+def test_compaction_preserves_lookups_and_never_costs_more(setname):
+    """On every strategy set: folding changes no posting list, publishes
+    exactly the folded keys, and the whole-index read charge afterwards
+    is never higher in bytes OR ops (the charge gate at work)."""
+    lex, parts, doc_starts, _ = _world()
+    ts = TextIndexSet(_cfg(setname), lex, seed=0)
+    for (toks, offs), d0 in zip(parts, doc_starts):
+        ts.add_documents(toks, offs, d0)
+
+    expect = {
+        name: {k: np.asarray(idx.lookup(k)) for k in idx.dict.entries}
+        for name, idx in ts.indexes.items()
+    }
+    cost0 = _read_charges(ts)
+    gen0 = ts.generation
+
+    digests = {}
+    for name, idx in ts.indexes.items():
+        d = idx.compact()
+        if d is not None:
+            digests[name] = d
+    assert digests, "three update parts must leave something to fold"
+    assert ts.generation > gen0
+
+    for name, idx in ts.indexes.items():
+        for k, posts in expect[name].items():
+            assert np.array_equal(np.asarray(idx.lookup(k)), posts), (
+                setname, name, k,
+            )
+    cost1 = _read_charges(ts)
+    for name in cost0:
+        assert cost1[name][0] <= cost0[name][0], (setname, name, "bytes")
+        assert cost1[name][1] <= cost0[name][1], (setname, name, "ops")
+    assert sum(len(d) for d in digests.values()) == sum(
+        idx.compacted_streams for idx in ts.indexes.values()
+    )
+
+
+def test_noop_cycle_is_a_full_noop():
+    """Satellite regression: a cycle that folds nothing must not bump
+    ``n_parts``, publish a digest, or move any generation — at the
+    index, set and sharded-set layers."""
+    lex, parts, doc_starts, _ = _world()
+    sts = ShardedTextIndexSet(_cfg(), lex, n_shards=2, seed=0)
+    for (toks, offs), d0 in zip(parts, doc_starts):
+        sts.add_documents(toks, offs, d0)
+
+    first = sts.compact()
+    assert any(d for d in first), "first cycle must fold something"
+    gen = sts.generation_vector()
+    stats = sts.compaction_stats()
+    n_parts = [
+        {n: idx.n_parts for n, idx in sh.indexes.items()} for sh in sts.shards
+    ]
+    digest_log = [
+        {n: list(idx._part_digests) for n, idx in sh.indexes.items()}
+        for sh in sts.shards
+    ]
+
+    second = sts.compact()
+    assert second == [{} for _ in range(sts.n_shards)]
+    assert sts.generation_vector() == gen
+    assert sts.compaction_stats() == stats
+    for sh, parts_before, digests_before in zip(
+        sts.shards, n_parts, digest_log
+    ):
+        for n, idx in sh.indexes.items():
+            assert idx.n_parts == parts_before[n]
+            assert list(idx._part_digests) == digests_before[n]
+        assert sh.compaction_stats()["compactions"] == sum(
+            idx.n_compactions for idx in sh.indexes.values()
+        )
+    for s, us in enumerate(sts.update_streams):
+        # only a first cycle that folded on that shard counted; the
+        # no-op second cycle never did
+        assert us.compactions_applied == (1 if first[s] else 0)
+
+
+# ------------------------------------------------------- serving under load --
+def test_cursor_opened_before_cycle_drains_open_time_snapshot():
+    """A lazy cursor partially drained when compaction folds its stream
+    keeps delivering the open-time snapshot; the next lookup sees the
+    folded (identical) list fresh."""
+    cfg = StrategyConfig.set1(cluster_size=256, em_limit=8,
+                              tag_extract_bytes=512)
+    idx = InvertedIndex(cfg, BlockDevice(cluster_size=256), n_groups=2,
+                        fl_area_clusters=8)
+
+    def rows(lo, hi, positions=6):
+        docs = np.repeat(np.arange(lo, hi, dtype=np.int64), positions)
+        pos = np.tile(np.arange(positions, dtype=np.int64), hi - lo)
+        return np.stack([docs, pos], 1)
+
+    for i in range(4):  # several parts: "hot" grows a scattered layout
+        idx.add_part({"hot": rows(i * 30, i * 30 + 30)})
+    full = np.asarray(idx.lookup("hot"))
+
+    reader = IndexReader(idx, cache=PostingCache(1 << 20))
+    cur = reader.open_cursor("hot", chunk_clusters=1)
+    head = cur.next_chunk()
+    assert head is not None and head.shape[0] < full.shape[0]
+
+    digest = idx.compact()
+    assert digest is not None and "hot" in digest
+
+    chunks = [head]
+    while True:
+        c = cur.next_chunk()
+        if c is None:
+            break
+        chunks.append(c)
+    assert np.array_equal(np.concatenate(chunks, axis=0), full)
+    assert np.array_equal(reader.lookup("hot"), full)
+
+
+def test_mid_batch_compaction_raises_snapshot_violation():
+    """A compaction cycle is a generation advance: landing mid-batch it
+    must trip the snapshot guard exactly like a mid-batch part."""
+    lex, parts, doc_starts, _ = _world()
+    ts = TextIndexSet(_cfg(), lex, seed=0)
+    for (toks, offs), d0 in zip(parts, doc_starts):
+        ts.add_documents(toks, offs, d0)
+    pools = class_pools(lex)
+
+    def evil_join(a, b, w):
+        if ts.generation == evil_join.gen0:  # fire once, mid-batch
+            evil_join.digests = ts.compact()
+        return numpy_window_join(a, b, w)
+
+    evil_join.gen0 = ts.generation
+    evil_join.digests = None
+    svc = SearchService(ts, window=3, backend=evil_join)
+    q = Query((pools[OTHER][0], pools[OTHER][1]))
+    with pytest.raises(SnapshotViolationError):
+        svc.search_batch([q])
+    # the guard fired because the cycle actually advanced a generation
+    assert evil_join.digests, "compaction must have folded something"
+
+
+def test_between_batch_compaction_absorbed_with_identical_results():
+    """Between batches the same cycle is absorbed like any part: no
+    violation, and the warm service stays element-wise identical to a
+    from-scratch rebuild that never compacted."""
+    lex, parts, doc_starts, queries = _world()
+    sts = ShardedTextIndexSet(_cfg(), lex, n_shards=2, seed=0)
+    fresh = ShardedTextIndexSet(_cfg(), lex, n_shards=2, seed=0)
+    for sub in (sts, fresh):
+        for (toks, offs), d0 in zip(parts, doc_starts):
+            sub.add_documents(toks, offs, d0)
+
+    svc = SearchService(sts, window=3, backend="numpy")
+    svc.search_batch(queries)  # pin + warm
+    sts.compact()
+    got = svc.search_batch(queries)  # absorbed: no violation
+    ref = SearchService(fresh, window=3, backend="numpy").search_batch(queries)
+    for qi, (r, g) in enumerate(zip(ref, got)):
+        assert_results_identical(r, g, ctx=("between-batch", qi))
+    assert svc.last_trace["snapshot"] == sts.generation_vector()
+    # the batch trace surfaces the cycle (satellite: ops visibility)
+    assert svc.last_trace["compactions"]["compactions"] >= 1
+    assert svc.last_trace["cache"]["full_drops"] == 0
+
+
+def test_compaction_invalidates_only_folded_keys():
+    """On the targeted reader a cycle drops ONLY (shard, index, key)
+    entries named by the compaction digests — zero namespace sweeps,
+    every other warm entry survives."""
+    lex, parts, doc_starts, queries = _world()
+    sts = ShardedTextIndexSet(_cfg(), lex, n_shards=2, seed=0)
+    for (toks, offs), d0 in zip(parts, doc_starts):
+        sts.add_documents(toks, offs, d0)
+    svc = SearchService(sts, window=3, backend="numpy")
+    svc.search_batch(queries)  # warm the cache
+    cache = svc.reader.cache
+    warm = set(cache._map)
+    assert warm
+
+    digests = sts.compact()
+    assert any(d for d in digests)
+    allowed = {
+        (f"s{s}:{name}", key)
+        for s, per_shard in enumerate(digests)
+        for name, keys in per_shard.items()
+        for key in keys
+    }
+    svc.reader.refresh()
+    dropped = warm - set(cache._map)
+    assert dropped <= allowed, dropped - allowed
+    assert cache.stats.full_drops == 0
+
+    got = svc.search_batch(queries)
+    fresh = ShardedTextIndexSet(_cfg(), lex, n_shards=2, seed=0)
+    for (toks, offs), d0 in zip(parts, doc_starts):
+        fresh.add_documents(toks, offs, d0)
+    ref = SearchService(fresh, window=3, backend="numpy").search_batch(queries)
+    for qi, (r, g) in enumerate(zip(ref, got)):
+        assert_results_identical(r, g, ctx=("targeted-compaction", qi))

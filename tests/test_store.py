@@ -1,0 +1,477 @@
+"""Durable on-disk storage backend (``repro.store``).
+
+The storage-oracle suite: ONE op script (update parts, a background
+compaction cycle, a crash that tears the WAL tail mid-record) drives
+both the plain ``io_sim``-backed substrate and the disk-backed
+:class:`DurableIndexStore`, and the two must serve element-wise
+identical results with identical simulated read-byte charges across all
+four planner routes at every shard count — the disk backend's replay
+recovery reproduces the crashed substrate's physical stream layout, so
+the charge model is preserved exactly.  Plus:
+
+  * WAL framing: torn tails truncated at the first bad frame, never a
+    partially visible record; appends continue after recovery;
+  * segment files: CRC-verified snapshot roundtrip, corruption detected,
+    checkpoint writing charges NO simulated device I/O;
+  * crash-recovery property test: random truncation offsets land the
+    reopened store exactly on the last published prefix (checkpoint +
+    intact WAL tail), element-wise identical to a rebuild;
+  * the store is a drop-in live substrate for
+    :func:`tests.oracles.run_live_update_rounds`;
+  * durability is charge-neutral: WAL + checkpoints never touch the
+    simulated devices.
+"""
+
+import functools
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core.lexicon import make_lexicon
+from repro.core.sharded_set import ShardedTextIndexSet
+from repro.core.strategies import StrategyConfig
+from repro.core.text_index import IndexSetConfig
+from repro.data.corpus import generate_part
+from repro.search import (
+    ROUTE_MULTI,
+    ROUTE_ORDINARY,
+    ROUTE_STOPSEQ,
+    ROUTE_WV,
+    Query,
+    SearchService,
+)
+from repro.store import (
+    DurableIndexStore,
+    SegmentCorruptError,
+    WriteAheadLog,
+    read_segment,
+    snapshot_state,
+    write_segment,
+)
+from repro.store.format import (
+    decode_key,
+    decode_part_maps,
+    decode_part_tokens,
+    encode_key,
+    encode_part_maps,
+    encode_part_tokens,
+)
+from repro.store.wal import HEADER_BYTES
+from tests.oracles import (
+    assert_results_identical,
+    class_pools,
+    core_queries,
+    run_live_update_rounds,
+)
+
+SHARD_COUNTS = (1, 2, 4)
+
+
+def _cfg(**kw):
+    # tag_extract_bytes low enough that hot keys own dedicated streams at
+    # this corpus scale, so the op scripts' compaction cycles really fold
+    return IndexSetConfig(
+        strategy=StrategyConfig.set2(cluster_size=1024,
+                                     tag_extract_bytes=512),
+        fl_area_clusters=64,
+        **kw,
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _world():
+    lex = make_lexicon(
+        n_words=3000, n_lemmas=1300, n_stop=20, n_frequent=120, seed=43
+    )
+    parts = [
+        generate_part(lex, n_docs=40, avg_doc_len=110, doc0=0, seed=80),
+        generate_part(lex, n_docs=40, avg_doc_len=110, doc0=40, seed=81),
+        generate_part(lex, n_docs=40, avg_doc_len=110, doc0=80, seed=82),
+        generate_part(lex, n_docs=40, avg_doc_len=110, doc0=120, seed=83),
+    ]
+    doc_starts = [0, 40, 80, 120]
+    pools = class_pools(lex)
+    queries = core_queries(parts[0][0], pools)
+    return lex, parts, doc_starts, queries
+
+
+def _io_sig(report):
+    """An IOStats report as a comparable value."""
+    return {
+        name: (st.read_bytes, st.read_ops, st.write_bytes, st.write_ops)
+        for name, st in report.items()
+    }
+
+
+# ------------------------------------------------------------ format codecs --
+def test_key_codec_roundtrip():
+    keys = [
+        0, 7, -3, (1 << 62), np.int64(12345),
+        "word", b"\x00\xff raw", (1, 2, 3), ("mixed", 5, b"x"), (),
+    ]
+    for k in keys:
+        buf = encode_key(k)
+        got, off = decode_key(buf, 0)
+        assert off == len(buf)
+        expect = int(k) if isinstance(k, np.integer) else k
+        assert got == expect and type(got) is type(expect)
+    with pytest.raises(TypeError):
+        encode_key(1.5)
+
+
+def test_part_codecs_roundtrip():
+    a = np.array([[1, 4], [1, 9], [5, 0]], dtype=np.int64)
+    b = np.array([[0, 2]], dtype=np.int64)
+    maps = {"known": {5: a, (1, 2): b}, "unknown": {}}
+    got = decode_part_maps(encode_part_maps(maps))
+    assert set(got) == {"known", "unknown"} and set(got["known"]) == {5, (1, 2)}
+    assert np.array_equal(got["known"][5], a)
+    assert np.array_equal(got["known"][(1, 2)], b)
+    assert got["unknown"] == {}
+
+    toks = np.arange(37, dtype=np.int64)
+    offs = np.array([0, 10, 37], dtype=np.int64)
+    d0, t2, o2 = decode_part_tokens(encode_part_tokens(9, toks, offs))
+    assert d0 == 9 and np.array_equal(t2, toks) and np.array_equal(o2, offs)
+
+
+# ------------------------------------------------------------------- the WAL --
+def test_wal_torn_tail_truncated_and_appendable(tmp_path):
+    path = tmp_path / "wal.log"
+    w = WriteAheadLog(path, fsync=False)
+    offs = [w.append(1, bytes([i]) * (20 + 7 * i)) for i in range(5)]
+    w.close()
+
+    recs, good, torn = WriteAheadLog(path, fsync=False).recover(0)
+    assert len(recs) == 5 and not torn and good == offs[-1]
+
+    # crash tore the last record: every cut inside it yields the same
+    # recovered prefix — records 0..3, file truncated to their end
+    with open(path, "rb+") as fh:
+        fh.truncate(offs[-1] - 3)
+    w3 = WriteAheadLog(path, fsync=False)
+    recs, good, torn = w3.recover(0)
+    assert [p for _, p in recs] == [bytes([i]) * (20 + 7 * i) for i in range(4)]
+    assert torn and good == offs[3] == path.stat().st_size
+
+    # the log keeps working after recovery: appends land at the cut
+    end = w3.append(2, b"after")
+    assert end == offs[3] + HEADER_BYTES + 5 == w3.tell()
+    w3.close()
+    recs, _, torn = WriteAheadLog(path, fsync=False).recover(0)
+    assert [t for t, _ in recs] == [1, 1, 1, 1, 2] and not torn
+
+    # a start offset beyond the physical end reports torn, yields nothing
+    recs, good, torn = WriteAheadLog(path, fsync=False).recover(end + 100)
+    assert recs == [] and good == end and torn
+
+
+def test_wal_rejects_corrupted_payload(tmp_path):
+    path = tmp_path / "wal.log"
+    w = WriteAheadLog(path, fsync=False)
+    w.append(1, b"a" * 50)
+    mid = w.append(1, b"b" * 50)
+    w.append(1, b"c" * 50)
+    w.close()
+    # flip one payload byte of the middle record: it AND everything after
+    # must be discarded (a bad CRC means the tail cannot be trusted)
+    with open(path, "rb+") as fh:
+        fh.seek(mid - 10)
+        fh.write(b"X")
+    recs, good, torn = WriteAheadLog(path, fsync=False).recover(0)
+    assert [p for _, p in recs] == [b"a" * 50] and torn
+    assert good == path.stat().st_size
+
+
+# -------------------------------------------------------------- segment files --
+def test_segment_roundtrip_crc_and_charge_neutrality(tmp_path):
+    lex, parts, doc_starts, _ = _world()
+    sts = ShardedTextIndexSet(_cfg(), lex, n_shards=2, seed=0)
+    sts.add_documents(*parts[0], doc_starts[0])
+    build0, search0 = _io_sig(sts.build_io()), _io_sig(sts.search_io())
+
+    state = snapshot_state(sts)
+    seg = tmp_path / "snap.seg"
+    write_segment(seg, state)
+    got = read_segment(seg)
+
+    # checkpointing reads the substrate directly — zero simulated charges
+    assert _io_sig(sts.build_io()) == build0
+    assert _io_sig(sts.search_io()) == search0
+
+    assert len(got) == 2
+    for shard_state, got_state in zip(state, got):
+        assert set(shard_state) == set(got_state)
+        for name, by_key in shard_state.items():
+            assert set(by_key) == set(got_state[name])
+            for key, posts in by_key.items():
+                assert np.array_equal(posts, got_state[name][key]), (name, key)
+
+    # corruption and truncation are both detected by the CRC trailer
+    data = seg.read_bytes()
+    (tmp_path / "bad.seg").write_bytes(
+        data[:100] + bytes([data[100] ^ 0xFF]) + data[101:]
+    )
+    with pytest.raises(SegmentCorruptError):
+        read_segment(tmp_path / "bad.seg")
+    (tmp_path / "short.seg").write_bytes(data[:-20])
+    with pytest.raises(SegmentCorruptError):
+        read_segment(tmp_path / "short.seg")
+    with pytest.raises(SegmentCorruptError):
+        read_segment(tmp_path / "missing.seg")
+
+
+# -------------------------------------------------------- the storage oracle --
+def _apply_ops(sub, ops, parts, doc_starts):
+    for op in ops:
+        if op[0] == "part":
+            sub.add_documents(*parts[op[1]], doc_starts[op[1]])
+        else:
+            sub.compact()
+    return sub
+
+
+@pytest.mark.parametrize("n_shards", SHARD_COUNTS)
+def test_storage_oracle_sim_vs_disk(tmp_path, n_shards):
+    """THE parity gate: the same op script — parts, one background
+    compaction cycle, a mid-stream crash tearing the final part's WAL
+    record — served by the io_sim substrate and by the disk backend
+    must produce element-wise identical results AND identical simulated
+    read charges on all four planner routes."""
+    lex, parts, doc_starts, queries = _world()
+    script = [("part", 0), ("part", 1), ("compact",), ("part", 2),
+              ("part", 3)]
+    published = script[:-1]  # the crash tears the final part's record
+
+    # io_sim backend: its crash+reopen IS a replay of the published ops
+    sim = _apply_ops(
+        ShardedTextIndexSet(_cfg(), lex, n_shards=n_shards, seed=0),
+        published, parts, doc_starts,
+    )
+
+    # disk backend: live through the WHOLE script, crash, replay-reopen
+    store = _apply_ops(
+        DurableIndexStore(tmp_path / "store", _cfg(), lex,
+                          n_shards=n_shards, fsync=False),
+        published, parts, doc_starts,
+    )
+    end_published = store.wal.tell()
+    _apply_ops(store, script[-1:], parts, doc_starts)
+    end_torn = store.wal.tell()
+    store.close()
+    wal = tmp_path / "store" / "wal.log"
+    with open(wal, "rb+") as fh:  # the crash: a torn tail mid-record
+        fh.truncate(end_published + (end_torn - end_published) // 2)
+    store = DurableIndexStore(tmp_path / "store", _cfg(), lex,
+                              n_shards=n_shards, fsync=False,
+                              recovery="replay")
+    assert store.recovery_info["torn"]
+    assert store.recovery_info["truncated_bytes"] > 0
+
+    # replay reproduces the published substrate's physical layout: same
+    # generations, same stream-state census, same build charges
+    assert store.generation_vector() == sim.generation_vector()
+    assert store.census() == sim.census()
+    assert _io_sig(store.build_io()) == _io_sig(sim.build_io())
+
+    qs = list(queries) + [Query(queries[0].words, top_k=3)]
+
+    def serve(sub):
+        svc = SearchService(sub, window=3, backend="numpy",
+                            cache_bytes=1 << 20)
+        before = _io_sig(sub.search_io())
+        res = svc.search_batch(qs)
+        after = _io_sig(sub.search_io())
+        charges = {
+            n: tuple(a - b for a, b in zip(after[n], before[n]))
+            for n in after
+        }
+        return res, charges
+
+    r_sim, c_sim = serve(sim)
+    r_disk, c_disk = serve(store)
+    assert {ROUTE_ORDINARY, ROUTE_STOPSEQ, ROUTE_WV, ROUTE_MULTI} <= {
+        r.route for r in r_sim
+    }
+    for qi, (a, b) in enumerate(zip(r_sim, r_disk)):
+        assert_results_identical(
+            a, b, ctx=("storage-oracle", n_shards, qi),
+            check_scanned=qs[qi].top_k is None,
+        )
+    assert c_sim == c_disk, (n_shards, c_sim, c_disk)
+    store.close()
+
+
+# --------------------------------------------- crash-recovery property test --
+@pytest.mark.parametrize("trial", range(4))
+def test_crash_recovery_random_truncation(tmp_path, trial):
+    """Truncate the WAL at a RANDOM byte offset: the reopened store must
+    land exactly on the last published prefix — every fully appended
+    part before the cut, plus everything an earlier checkpoint folded —
+    element-wise identical to a from-scratch rebuild of that prefix."""
+    rng = np.random.RandomState(900 + trial)
+    lex, parts, doc_starts, queries = _world()
+    root = tmp_path / "store"
+
+    store = DurableIndexStore(root, _cfg(), lex, n_shards=2, fsync=False)
+    part_ends = []
+    ckpt_parts = 0
+    for i, ((toks, offs), d0) in enumerate(zip(parts, doc_starts)):
+        store.add_documents(toks, offs, d0)
+        part_ends.append(store.wal.tell())
+        if trial % 2 == 1 and i == 1:
+            # odd trials compact (and so checkpoint) mid-stream: cuts
+            # before the fold point must still recover parts 0..1
+            store.compact()
+            ckpt_parts = 2
+    wal_size = store.wal.tell()
+    store.close()
+
+    cut = int(rng.randint(0, wal_size + 1))
+    with open(root / "wal.log", "rb+") as fh:
+        fh.truncate(cut)
+
+    reopened = DurableIndexStore(root, _cfg(), lex, n_shards=2, fsync=False)
+    wal_parts = sum(1 for e in part_ends if e <= cut)
+    expected = max(ckpt_parts, wal_parts)
+
+    fresh = ShardedTextIndexSet(_cfg(), lex, n_shards=2, seed=0)
+    for (toks, offs), d0 in zip(parts[:expected], doc_starts[:expected]):
+        fresh.add_documents(toks, offs, d0)
+
+    ref = SearchService(fresh, window=3, backend="numpy").search_batch(queries)
+    got = SearchService(reopened, window=3, backend="numpy").search_batch(queries)
+    for qi, (a, b) in enumerate(zip(ref, got)):
+        assert_results_identical(
+            a, b, check_route=True,
+            ctx=("crash-recovery", trial, cut, expected, qi),
+        )
+
+    # the recovered store keeps serving updates: land the lost parts
+    # again and it must agree with the full rebuild
+    for (toks, offs), d0 in zip(parts[expected:], doc_starts[expected:]):
+        reopened.add_documents(toks, offs, d0)
+    full = ShardedTextIndexSet(_cfg(), lex, n_shards=2, seed=0)
+    for (toks, offs), d0 in zip(parts, doc_starts):
+        full.add_documents(toks, offs, d0)
+    ref = SearchService(full, window=3, backend="numpy").search_batch(queries)
+    got = SearchService(reopened, window=3, backend="numpy").search_batch(queries)
+    for qi, (a, b) in enumerate(zip(ref, got)):
+        assert_results_identical(a, b, ctx=("post-recovery", trial, qi))
+    reopened.close()
+
+
+def test_corrupt_checkpoint_falls_back_to_full_replay(tmp_path):
+    lex, parts, doc_starts, queries = _world()
+    root = tmp_path / "store"
+    store = DurableIndexStore(root, _cfg(), lex, n_shards=2, fsync=False)
+    for (toks, offs), d0 in zip(parts[:3], doc_starts[:3]):
+        store.add_documents(toks, offs, d0)
+    store.compact()  # publishes a checkpoint
+    assert store.n_checkpoints == 1
+    store.close()
+
+    seg = next((root / "segments").glob("ckpt-*.seg"))
+    data = bytearray(seg.read_bytes())
+    data[len(data) // 2] ^= 0xFF
+    seg.write_bytes(bytes(data))
+
+    reopened = DurableIndexStore(root, _cfg(), lex, n_shards=2, fsync=False)
+    assert reopened.recovery_info["checkpoint_fallback"]
+    assert not reopened.recovery_info["from_checkpoint"]
+    # the fallback replay must reconstruct the full published state, and
+    # the store re-publishes a good checkpoint for the next open
+    assert reopened.n_checkpoints == 1
+    fresh = ShardedTextIndexSet(_cfg(), lex, n_shards=2, seed=0)
+    for (toks, offs), d0 in zip(parts[:3], doc_starts[:3]):
+        fresh.add_documents(toks, offs, d0)
+    ref = SearchService(fresh, window=3, backend="numpy").search_batch(queries)
+    got = SearchService(reopened, window=3, backend="numpy").search_batch(queries)
+    for a, b in zip(ref, got):
+        assert_results_identical(a, b, ctx="checkpoint-fallback")
+    reopened.close()
+
+    again = DurableIndexStore(root, _cfg(), lex, n_shards=2, fsync=False)
+    assert again.recovery_info["from_checkpoint"]
+    assert not again.recovery_info["checkpoint_fallback"]
+    again.close()
+
+
+def test_wal_shorter_than_manifest_offset_is_repaired(tmp_path):
+    """A WAL physically shorter than the manifest's folded offset (all
+    surviving records are already in the checkpoint) must recover to the
+    checkpoint state, NOT double-apply the survivors — and re-publish a
+    consistent (manifest, WAL) pair."""
+    lex, parts, doc_starts, queries = _world()
+    root = tmp_path / "store"
+    store = DurableIndexStore(root, _cfg(), lex, n_shards=2, fsync=False)
+    store.add_documents(*parts[0], doc_starts[0])
+    store.add_documents(*parts[1], doc_starts[1])
+    store.checkpoint()
+    store.close()
+
+    with open(root / "wal.log", "rb+") as fh:
+        fh.truncate(40)  # far before the manifest's wal_offset
+
+    reopened = DurableIndexStore(root, _cfg(), lex, n_shards=2, fsync=False)
+    assert reopened.recovery_info["from_checkpoint"]
+    assert reopened.recovery_info["wal_records"] == 0
+    fresh = ShardedTextIndexSet(_cfg(), lex, n_shards=2, seed=0)
+    fresh.add_documents(*parts[0], doc_starts[0])
+    fresh.add_documents(*parts[1], doc_starts[1])
+    ref = SearchService(fresh, window=3, backend="numpy").search_batch(queries)
+    got = SearchService(reopened, window=3, backend="numpy").search_batch(queries)
+    for a, b in zip(ref, got):
+        assert_results_identical(a, b, ctx="wal-behind-manifest")
+    # invariant restored: a further clean reopen takes the checkpoint path
+    reopened.close()
+    again = DurableIndexStore(root, _cfg(), lex, n_shards=2, fsync=False)
+    assert again.recovery_info["from_checkpoint"]
+    assert not again.recovery_info["torn"]
+    got = SearchService(again, window=3, backend="numpy").search_batch(queries)
+    for a, b in zip(ref, got):
+        assert_results_identical(a, b, ctx="wal-behind-manifest-reopen")
+    again.close()
+
+
+# ----------------------------------------------------- live-serving substrate --
+def test_store_serves_live_update_rounds(tmp_path):
+    """The durable store is a drop-in substrate for the shared
+    incremental-update oracle: parts land through the WAL while a live
+    service keeps answering, element-wise identical to rebuilds."""
+    lex, parts, doc_starts, queries = _world()
+    seq = itertools.count()
+
+    def make():
+        return DurableIndexStore(
+            tmp_path / f"w{next(seq)}", _cfg(), lex, n_shards=2, fsync=False
+        )
+
+    run_live_update_rounds(
+        make, parts[:3], doc_starts[:3], queries, backends=("numpy",),
+        ctx=("durable-store",),
+    )
+
+
+def test_durability_is_charge_neutral(tmp_path):
+    """WAL appends, fsyncs and checkpoints never touch the simulated
+    devices: a store and a plain substrate fed the same parts report
+    identical build and search charges."""
+    lex, parts, doc_starts, _ = _world()
+    sim = ShardedTextIndexSet(_cfg(), lex, n_shards=2, seed=0)
+    store = DurableIndexStore(tmp_path / "s", _cfg(), lex, n_shards=2,
+                              fsync=True)
+    for sub in (sim, store):
+        sub.add_documents(*parts[0], doc_starts[0])
+        sub.add_documents(*parts[1], doc_starts[1])
+    store.checkpoint()
+    assert _io_sig(store.build_io()) == _io_sig(sim.build_io())
+    keys = sorted(
+        k for k, e in store.indexes["known"].dict.entries.items()
+    )[:25]
+    for sub in (sim, store):
+        for k in keys:
+            sub.lookup("known", k)
+    assert _io_sig(store.search_io()) == _io_sig(sim.search_io())
+    store.close()
