@@ -11,6 +11,7 @@ Benches:
     search_batched — batched SearchService qps vs per-query loop
     search_sharded — 4-shard scatter/gather vs unsharded (qps + read bytes)
     search_topk   — top-k early-termination vs exhaustive (read-bytes ratio)
+    search_ranked — score-ordered (WAND) top-k vs exhaustive ranked scan
     update_speed  — live per-shard update streams: targeted invalidation
                     vs whole-namespace drops under interleaved updates
     durability    — repro.store: WAL fsync cost, recovery time vs WAL
@@ -112,6 +113,24 @@ def _bench_search_topk(scale):
     ]
 
 
+def _bench_search_ranked(scale):
+    from benchmarks import search_speed
+
+    rows = search_speed.run_ranked(min(scale, 0.5), top_k=10, n_queries=24)
+    r = rows[0]
+    ok = (
+        r["identical"]
+        and r["chunks_skipped"] > 0
+        and r["ranked_read_bytes"] < r["ex_read_bytes"]
+    )
+    return rows, [
+        f"{'PASS' if ok else 'FAIL'}  ranked top-10 head identical to the "
+        f"exhaustive score-then-sort scan at {r['bytes_ratio']:.3f}x read "
+        f"bytes ({r['chunks_skipped']} chunks skipped, "
+        f"{r['threshold_stops']} threshold stops)"
+    ]
+
+
 def _bench_update_speed(scale):
     from benchmarks import update_speed
 
@@ -177,6 +196,7 @@ BENCHES = {
     "search_batched": _bench_search_batched,
     "search_sharded": _bench_search_sharded,
     "search_topk": _bench_search_topk,
+    "search_ranked": _bench_search_ranked,
     "update_speed": _bench_update_speed,
     "durability": _bench_durability,
     "paged_kv": _bench_paged_kv,

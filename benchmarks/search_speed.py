@@ -419,6 +419,148 @@ def main_topk(scale: float = 0.5, n_queries: int = 64,
           "read bytes")
 
 
+# ----------------------------------------------------- ranked (WAND) top-k --
+def run_ranked(
+    scale: float = 0.5,
+    world: World = None,
+    n_queries: int = 48,
+    top_k: int = 10,
+    repeats: int = 3,
+    verify_backends=("numpy", "jax", "pallas"),
+    verify_shards=(1, 2, 4),
+) -> List[Dict]:
+    """``Query(top_k=N, rank="prox")`` — score-ordered best-k with the
+    WAND-style threshold stop — vs the exhaustive ranked scan
+    (arXiv:2108.00410 on top of the streaming executor).
+
+    The exhaustive reference is the SAME ranked executor asked for a
+    head larger than the collection: the threshold can never settle, so
+    it drains every cursor, scores every match and sorts — an on-line
+    exhaustive score-then-sort oracle.  Both services run numpy with the
+    posting cache disabled so the reader ``search_io`` deltas are the
+    true posting traffic; the acceptance gate is the ranked head
+    element-wise identical (docs, scores, tie order, witnesses) at
+    STRICTLY fewer read bytes, verified across every join backend and
+    shard count in ``verify_*``.
+    """
+    if n_queries < 1:
+        raise ValueError(f"--queries must be >= 1, got {n_queries}")
+    if top_k < 1:
+        raise ValueError(f"--ranked must be >= 1, got {top_k}")
+    world = world or make_hot_world(scale)
+    cfg_kw = HOT_GEOMETRY
+    ts = build_index_set(world, "set2", **cfg_kw)
+    k = ts.indexes["multi"].k
+    base = _phrase_stream(world, n_queries, k, np.random.RandomState(13))
+    ranked_queries = [
+        Query(q.words, phrase=True, top_k=top_k, rank="prox") for q in base
+    ]
+    drain_k = 1 << 30  # >= any match count: the full ranked scan
+    drain_queries = [
+        Query(q.words, phrase=True, top_k=drain_k, rank="prox") for q in base
+    ]
+
+    svc_rk = SearchService(ts, window=3, backend="numpy", cache_bytes=0)
+    svc_ex = SearchService(ts, window=3, backend="numpy", cache_bytes=0)
+
+    b0 = _read_bytes(ts)
+    res_rk = svc_rk.search_batch(ranked_queries)
+    rk_bytes = _read_bytes(ts) - b0
+    svc_rk.check_trace_complete()
+    trace = dict(svc_rk.last_trace["topk"])
+    b0 = _read_bytes(ts)
+    res_ex = svc_ex.search_batch(drain_queries)
+    ex_bytes = _read_bytes(ts) - b0
+
+    # the pruned head must equal the exhaustive ranked scan's prefix
+    # element-wise: docs, scores, tie order, and the head's witnesses
+    identical = all(
+        rt.route == ROUTE_MULTI
+        and np.array_equal(rt.docs, re.docs[:top_k])
+        and np.array_equal(rt.scores, re.scores[:top_k])
+        and np.array_equal(
+            rt.witnesses,
+            re.witnesses[np.isin(re.witnesses[:, 0], re.docs[:top_k])],
+        )
+        for rt, re in zip(res_rk, res_ex)
+    )
+
+    # ... and stay identical across join backends and shard counts
+    verify_queries = ranked_queries[: min(len(ranked_queries), 16)]
+    ref = res_rk[: len(verify_queries)]
+    for n_shards in verify_shards:
+        if n_shards == 1:
+            substrate = ts
+        else:
+            substrate = build_sharded_index_set(
+                world, "set2", n_shards=n_shards, **cfg_kw
+            )
+        for backend in verify_backends:
+            svc = SearchService(substrate, window=3, backend=backend,
+                                cache_bytes=0)
+            got = svc.search_batch(verify_queries)
+            svc.check_trace_complete()
+            identical &= all(
+                np.array_equal(r.docs, g.docs)
+                and np.array_equal(r.witnesses, g.witnesses)
+                and np.array_equal(r.scores, g.scores)
+                for r, g in zip(ref, got)
+            )
+
+    t_rk = min(
+        _timed(lambda: svc_rk.search_batch(ranked_queries))
+        for _ in range(repeats)
+    )
+    t_ex = min(
+        _timed(lambda: svc_ex.search_batch(drain_queries))
+        for _ in range(repeats)
+    )
+    return [
+        {
+            "bench": "search_speed_ranked",
+            "queries": len(base),
+            "top_k": top_k,
+            "ranked_qps": len(base) / t_rk,
+            "ex_qps": len(base) / t_ex,
+            "ranked_read_bytes": int(rk_bytes),
+            "ex_read_bytes": int(ex_bytes),
+            "bytes_ratio": rk_bytes / max(1, ex_bytes),
+            "chunks_fetched": trace["chunks_fetched"],
+            "chunks_skipped": trace["chunks_skipped"],
+            "threshold_stops": trace["threshold_stops"],
+            "threshold_checks": trace["threshold_checks"],
+            "identical": identical,
+        }
+    ]
+
+
+def main_ranked(scale: float = 0.5, n_queries: int = 48,
+                top_k: int = 10) -> None:
+    r = run_ranked(scale, n_queries=n_queries, top_k=top_k)[0]
+    print(f"{'mode':12s} {'qps':>10s} {'read_bytes':>12s}")
+    print(f"{'ranked-' + str(r['top_k']):12s} {r['ranked_qps']:>10,.0f} "
+          f"{r['ranked_read_bytes']:>12,}")
+    print(f"{'full scan':12s} {r['ex_qps']:>10,.0f} "
+          f"{r['ex_read_bytes']:>12,}")
+    print(f"{r['queries']} ranked phrase queries; read-bytes ratio "
+          f"ranked/exhaustive = {r['bytes_ratio']:.3f}; "
+          f"{r['chunks_skipped']} chunks skipped "
+          f"({r['threshold_stops']} threshold stops / "
+          f"{r['threshold_checks']} checks)")
+    assert r["identical"], (
+        "ranked head diverged from the exhaustive score-then-sort scan"
+    )
+    assert r["chunks_skipped"] > 0, (
+        "the WAND threshold stop must skip chunks, not drain every list"
+    )
+    assert r["ranked_read_bytes"] < r["ex_read_bytes"], (
+        "ranked top-k must read strictly fewer posting bytes than the "
+        "exhaustive ranked scan"
+    )
+    print("PASS  ranked head identical to the exhaustive ranked scan with "
+          "strictly fewer read bytes")
+
+
 # ------------------------------------------------------ sharded substrate --
 def run_sharded(
     scale: float = 0.5,
@@ -577,6 +719,12 @@ if __name__ == "__main__":
                          "vs the exhaustive multi route on a hot phrase "
                          "stream (qps + read-bytes ratio; verifies the "
                          "head across backends and shard counts)")
+    ap.add_argument("--ranked", type=int, default=0,
+                    help="N: score-ordered (rank='prox') top-k with the "
+                         "WAND threshold stop vs the exhaustive ranked "
+                         "scan on a hot phrase stream (qps + read-bytes "
+                         "ratio; head identity-verified across backends "
+                         "and shard counts)")
     ap.add_argument("--shards", type=int, default=0,
                     help="N-shard scatter/gather SearchService vs the "
                          "unsharded set, both through search_batch; "
@@ -598,5 +746,7 @@ if __name__ == "__main__":
         main_multi(args.scale, n_queries=args.queries)
     elif args.topk:
         main_topk(args.scale, n_queries=args.queries, top_k=args.topk)
+    elif args.ranked:
+        main_ranked(args.scale, n_queries=args.queries, top_k=args.ranked)
     else:
         main(args.scale)

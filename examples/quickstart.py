@@ -120,6 +120,20 @@ def main():
           f"matching docs, skipping {tk['chunks_skipped']} posting chunks "
           f"({tk['bytes_skipped']:,} bytes never read)")
 
+    # ranked best-k: rank="prox" makes top_k mean the k best-SCORED docs
+    # (proximity-weighted saturated term frequency), not the k smallest
+    # doc ids.  The executor carries a per-key score upper bound on each
+    # cursor and stops fetching once the k-th best settled score provably
+    # beats everything still unread (WAND-style threshold test).  The
+    # head is ordered score desc, doc id asc — identical, ties included,
+    # to exhaustively scoring every match and sorting.
+    r_rank = svc_cold.search_batch([Query(hot, top_k=3, rank="prox")])[0]
+    tk = svc_cold.last_trace["topk"]
+    assert np.all(np.diff(r_rank.scores) <= 0)  # score-descending head
+    print(f"ranked top-3 -> docs {r_rank.docs.tolist()} scoring "
+          f"{r_rank.scores.tolist()} ({tk['threshold_stops']} threshold "
+          f"stop(s), {tk['chunks_skipped']} chunks skipped)")
+
     # production scale-out: the SAME collection partitioned by doc hash
     # across 4 shards, served by the scatter/gather SearchService — the
     # batch is planned once, fetches scatter to every shard behind one

@@ -15,6 +15,13 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.search_speed \
 # with chunks actually skipped
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.search_speed \
   --topk 10 --scale 0.05 --queries 12
+# tiny-corpus smoke of the score-ordered (rank='prox') top-k executor:
+# asserts the WAND-threshold-pruned head stays element-wise identical —
+# docs, scores, tie order — to the exhaustive ranked scan (across
+# backends and shard counts) while skipping chunks and reading strictly
+# fewer posting bytes
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.search_speed \
+  --ranked 5 --scale 0.05 --queries 10
 # tiny-corpus smoke of live per-shard update streams: interleaved
 # update/search rounds must serve results identical to a from-scratch
 # rebuild, with targeted (touched-key digest) invalidation dropping

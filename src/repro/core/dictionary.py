@@ -52,6 +52,11 @@ class Entry:
     nbytes: int = 0      # this key's (untagged-equivalent) encoded bytes
     last_doc: int = 0
     npostings: int = 0
+    # largest per-document posting count ever appended for this key — the
+    # WAND-style score upper-bound metadata the ranked top-k executor
+    # carries on cursors (doc ids only grow across parts, so the running
+    # max over per-part batches is exact; see repro.search.scoring)
+    max_doc_count: int = 0
 
 
 class Dictionary:

@@ -37,7 +37,12 @@ from repro.core.dictionary import (
     stable_hash,
 )
 from repro.core.io_sim import BlockDevice, IOStats
-from repro.core.postings import PostingDecoder, decode_postings, encode_postings
+from repro.core.postings import (
+    PostingDecoder,
+    decode_postings,
+    encode_postings,
+    max_doc_run,
+)
 from repro.core.strategies import StrategyConfig
 from repro.core.stream import StreamManager
 
@@ -73,7 +78,11 @@ class PostingCursor:
     doc`` (the last doc itself may continue into the next chunk).
     """
 
-    def __init__(self, thunks: List[Tuple[int, Callable[[], np.ndarray]]]):
+    def __init__(
+        self,
+        thunks: List[Tuple[int, Callable[[], np.ndarray]]],
+        max_doc_count: Optional[int] = None,
+    ):
         self._thunks = thunks
         self._i = 0
         self.chunks_total = len(thunks)
@@ -82,14 +91,32 @@ class PostingCursor:
         self.bytes_fetched = 0
         self.postings_delivered = 0
         self.last_doc: Optional[int] = None
+        self._max_doc_count = max_doc_count
+        self._src: Optional[np.ndarray] = None
 
     @classmethod
     def from_array(cls, arr: np.ndarray) -> "PostingCursor":
         """Single-chunk cursor over pre-decoded rows (EM/TAG/absent keys:
         their whole-list read was charged — or costs nothing — at open)."""
         if arr.shape[0] == 0:
-            return cls([])
-        return cls([(0, lambda: arr)])
+            cur = cls([], max_doc_count=0)
+        else:
+            cur = cls([(0, lambda: arr)])
+        cur._src = arr
+        return cur
+
+    @property
+    def max_doc_count(self) -> int:
+        """Largest per-doc posting count this cursor's key can deliver —
+        the ranked executor's WAND-style upper-bound metadata.  Dictionary
+        cursors carry the entry's lifetime max; array-backed cursors
+        (cache hits, batch-shared rows) compute the exact max of their
+        rows on first use (free: the rows are already decoded)."""
+        if self._max_doc_count is None:
+            self._max_doc_count = (
+                max_doc_run(self._src) if self._src is not None else 0
+            )
+        return self._max_doc_count
 
     @property
     def exhausted(self) -> bool:
@@ -298,6 +325,13 @@ class InvertedIndex:
         if e is None:
             e = self.dict.get_or_create(key)
             self._group_dict_bytes[group] += ENTRY_FIXED_BYTES + len(key_bytes(key))
+
+        # every posting batch for a key passes through here exactly once
+        # (EM/TAG/OWN alike), and parts partition the doc-id space, so the
+        # running max of per-part per-doc counts IS the key's lifetime max
+        part_max = max_doc_run(posts)
+        if part_max > e.max_doc_count:
+            e.max_doc_count = part_max
 
         if e.kind == K_EM:
             chunk = encode_postings(posts, prev_doc=e.last_doc)
@@ -512,7 +546,9 @@ class InvertedIndex:
                 order = np.lexsort((mine[:, 1], mine[:, 0]))
                 return mine[order]
 
-            return PostingCursor([(charge_bytes, read_tagged)])
+            return PostingCursor(
+                [(charge_bytes, read_tagged)], max_doc_count=e.max_doc_count
+            )
         # K_OWN: unit-by-unit fetch + incremental decode
         st = self.mgr.streams[e.sid]
         units = self.mgr.stream_read_units(e.sid, chunk_clusters=chunk_clusters)
@@ -529,7 +565,7 @@ class InvertedIndex:
                 return posts
 
             thunks.append((charge_nb, fetch))
-        return PostingCursor(thunks)
+        return PostingCursor(thunks, max_doc_count=e.max_doc_count)
 
     def lookup_ops(self, key: Hashable) -> int:
         """Device ops one search of this key costs (paper 5.7.3 criterion)."""

@@ -310,3 +310,20 @@ def merge_sorted_postings(a: np.ndarray, b: np.ndarray) -> np.ndarray:
     both = np.concatenate([a, b], axis=0)
     order = np.lexsort((both[:, 1], both[:, 0]))
     return both[order]
+
+
+def max_doc_run(posts: np.ndarray) -> int:
+    """Largest per-document posting count in a doc-sorted (N, 2) array.
+
+    This is the per-part ingredient of ``Entry.max_doc_count`` — the
+    WAND-style score upper-bound metadata the ranked streaming executor
+    consumes (see ``repro.search.scoring``).  Doc ids are globally
+    increasing across parts, so the max over a key's lifetime is just the
+    running max of this value over its per-part batches.
+    """
+    if posts.shape[0] == 0:
+        return 0
+    docs = posts[:, 0]
+    change = np.flatnonzero(docs[1:] != docs[:-1])
+    bounds = np.concatenate(([0], change + 1, [docs.shape[0]]))
+    return int(np.diff(bounds).max())

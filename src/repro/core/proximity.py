@@ -99,4 +99,8 @@ class ProximityEngine:
                 acc = numpy_phrase_join(acc, nxt, k)
             else:
                 acc = join(acc, nxt, self.window)
-        return QueryResult(np.unique(acc[:, 0]), acc, lookups, scanned)
+        # scores (match-occurrence counts) attach here too: QueryResult
+        # equality requires both sides to carry them, so a facade result
+        # must be comparable against the batched executor's
+        docs, counts = np.unique(acc[:, 0], return_counts=True)
+        return QueryResult(docs, acc, lookups, scanned, scores=counts)

@@ -11,7 +11,10 @@ Layering (DESIGN_SEARCH.md):
     plan → scatter-fetch → join → gather pipeline (pipelined reader
     prefetch, bucketed JAX/Pallas window joins, lossless per-shard
     gather over a sharded substrate),
-  * :mod:`repro.search.join`    — the interchangeable join backends.
+  * :mod:`repro.search.join`    — the interchangeable join backends,
+  * :mod:`repro.search.scoring` — the ranked-retrieval score (proximity
+    weights × saturating tf) shared by the streaming executor's
+    WAND-style pruning and the exhaustive test oracles.
 """
 
 from repro.search.join import (
@@ -37,6 +40,15 @@ from repro.search.plan import (
     QueryPlan,
     QueryResult,
     plan_batch,
+)
+from repro.search.scoring import (
+    PROX_SCALE,
+    TF_CAP,
+    ScoreSpec,
+    head_order,
+    score_docs,
+    score_docs_jax,
+    spec_for,
 )
 from repro.search.reader import (
     CacheStats,
@@ -73,6 +85,13 @@ __all__ = [
     "QueryPlan",
     "QueryResult",
     "plan_batch",
+    "PROX_SCALE",
+    "TF_CAP",
+    "ScoreSpec",
+    "head_order",
+    "score_docs",
+    "score_docs_jax",
+    "spec_for",
     "CacheStats",
     "IndexReader",
     "IndexSetReader",

@@ -32,6 +32,7 @@ import numpy as np
 
 from repro.core.lexicon import FREQUENT, Lexicon, STOP
 from repro.data.corpus import PAIR_SHIFT, SEQ2_FLAG, SEQ_SHIFT
+from repro.search.scoring import ScoreSpec, spec_for
 
 ROUTE_STOPSEQ = "stopseq"
 ROUTE_MULTI = "multi"
@@ -82,20 +83,31 @@ class Query:
     are 2-3 words; phrase queries may be up to ``MAX_PHRASE_WORDS``.
 
     ``top_k=N`` asks for the *best-k result mode*: only the N best
-    matching documents (ascending doc id — the collection is indexed in
-    arrival order, so the lowest doc ids are the canonical head) with
-    their witness postings and per-doc proximity scores (match-occurrence
-    counts).  The executor serves it through the streaming stage: per-key
-    posting records are consumed in sorted (doc, start) order via lazy
-    cursors and fetching stops once the top-k set is provably settled —
-    the returned head is element-wise identical to the exhaustive path's
-    first N documents.
+    matching documents with their witness postings and per-doc scores.
+    The executor serves it through the streaming stage: per-key posting
+    records are consumed in sorted (doc, start) order via lazy cursors
+    and fetching stops once the top-k set is provably settled.  What
+    "best" means is chosen by ``rank``:
+
+      * ``rank=None`` (default) — doc-id order: the N lowest matching doc
+        ids (the collection is indexed in arrival order, so the lowest
+        ids are the canonical head); scores are match-occurrence counts.
+        Element-wise identical to the exhaustive path's first N docs.
+      * ``rank="prox"`` — score order: the N best documents under the
+        proximity × saturating-tf score of ``repro.search.scoring``,
+        ties broken by ascending doc id, pruned WAND-style via per-key
+        upper bounds.  Element-wise identical (docs, scores, tie order)
+        to exhaustively scoring every match and stable-sorting.
+
+    ``rank`` requires ``top_k`` — a ranked exhaustive result would just
+    be a permutation the caller can apply themselves.
     """
 
     words: Tuple[int, ...]
     window: Optional[int] = None
     phrase: bool = False
     top_k: Optional[int] = None
+    rank: Optional[str] = None
 
     def __post_init__(self):
         if self.phrase:
@@ -108,6 +120,13 @@ class Query:
             raise ValueError(f"queries are 2-3 words, got {len(self.words)}")
         if self.top_k is not None and self.top_k < 1:
             raise ValueError(f"top_k must be >= 1, got {self.top_k}")
+        if self.rank is not None:
+            if self.rank != "prox":
+                raise ValueError(
+                    f"rank must be None or 'prox', got {self.rank!r}"
+                )
+            if self.top_k is None:
+                raise ValueError("rank= requires top_k= (best-k mode)")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -129,6 +148,10 @@ class PlannedQuery:
     # executor routes these lookups down the streaming (lazy cursor)
     # stage instead of the batch scatter-fetch waves
     top_k: Optional[int] = None
+    # score-ordered best-k: rank mode + the frozen per-slot score recipe
+    # (set iff the query asked for rank=; see repro.search.scoring)
+    rank: Optional[str] = None
+    score_spec: Optional[ScoreSpec] = None
 
 
 @dataclasses.dataclass
@@ -157,9 +180,12 @@ class QueryResult:
     lookups: List[Tuple[str, int]]   # (index, key) lookups performed
     postings_scanned: int            # total postings decoded
     route: Optional[str] = None      # which planner route produced this
-    # per-doc proximity score, aligned with ``docs``: the number of match
-    # occurrences (witness rows) in that document.  Top-k results carry
-    # the scores of the returned head; exhaustive results of the full set.
+    # per-doc score, aligned with ``docs``.  Exhaustive and doc-id top-k
+    # results carry match-occurrence counts; ranked (rank="prox") results
+    # carry the proximity × saturating-tf scores of the returned head,
+    # with ``docs`` in (score desc, doc id asc) order.  Mandatory on
+    # every executor path — a missing-scores side never compares equal
+    # to a scored one.
     scores: Optional[np.ndarray] = None
 
     def __eq__(self, other) -> bool:  # element-wise identity for tests
@@ -169,11 +195,13 @@ class QueryResult:
             and np.array_equal(self.witnesses, other.witnesses)
             and self.lookups == other.lookups
             and self.postings_scanned == other.postings_scanned
-            # scores participate when both sides carry them (results from
-            # older single-query facades may omit them)
+            # scores are part of the identity: both sides must agree on
+            # HAVING them, then on every element.  (The old "either side
+            # may omit" escape hatch let an executor that silently
+            # dropped scores pass every oracle.)
+            and (self.scores is None) == (other.scores is None)
             and (
                 self.scores is None
-                or other.scores is None
                 or np.array_equal(self.scores, other.scores)
             )
         )
@@ -199,6 +227,30 @@ def classify_batch(
     return lemmas, classes, spans
 
 
+def _planned(
+    query: Query,
+    route: str,
+    lookups: List[KeyLookup],
+    window: int,
+    max_distance: Optional[int],
+) -> PlannedQuery:
+    """Construct the planned query, attaching the frozen score spec when
+    the query asked for ranked best-k (one weight per lookup slot)."""
+    spec = None
+    if query.rank is not None:
+        spec = spec_for(
+            route,
+            len(lookups),
+            window,
+            max_distance if max_distance is not None else window,
+            phrase=query.phrase,
+        )
+    return PlannedQuery(
+        query, route, lookups, window,
+        top_k=query.top_k, rank=query.rank, score_spec=spec,
+    )
+
+
 def plan_query(
     lemmas: np.ndarray,
     classes: np.ndarray,
@@ -222,8 +274,7 @@ def plan_query(
                 (lem[0] << (2 * SEQ_SHIFT)) | (lem[1] << SEQ_SHIFT) | lem[2]
             )
         lk = KeyLookup("stopseq", key, group_of("stopseq", key))
-        return PlannedQuery(query, ROUTE_STOPSEQ, [lk], window,
-                            top_k=query.top_k)
+        return _planned(query, ROUTE_STOPSEQ, [lk], window, max_distance)
 
     if query.phrase and multi is not None and len(lem) >= multi.k:
         # cover the phrase with L-k+1 overlapping k-word keys (the cover
@@ -233,8 +284,7 @@ def plan_query(
             KeyLookup(multi.name, key, group_of(multi.name, key))
             for key in multi.cover_keys(lem)
         ]
-        return PlannedQuery(query, ROUTE_MULTI, lookups, window,
-                            top_k=query.top_k)
+        return _planned(query, ROUTE_MULTI, lookups, window, max_distance)
 
     freq_i = next((i for i, c in enumerate(cls) if c == FREQUENT), None)
     if (
@@ -253,14 +303,13 @@ def plan_query(
         key = int((w << PAIR_SHIFT) | v)
         name = "wv_kk" if v < lexicon.n_lemmas else "wv_ku"
         lk = KeyLookup(name, key, group_of(name, key))
-        return PlannedQuery(query, ROUTE_WV, [lk], window, top_k=query.top_k)
+        return _planned(query, ROUTE_WV, [lk], window, max_distance)
 
     lookups = []
     for lemma in lem:
         name = "unknown" if lemma >= lexicon.n_lemmas else "known"
         lookups.append(KeyLookup(name, lemma, group_of(name, lemma)))
-    return PlannedQuery(query, ROUTE_ORDINARY, lookups, window,
-                        top_k=query.top_k)
+    return _planned(query, ROUTE_ORDINARY, lookups, window, max_distance)
 
 
 def plan_batch(

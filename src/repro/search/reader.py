@@ -247,8 +247,9 @@ class ReaderCursor:
         return _frozen(full)
 
     def __getattr__(self, name):
-        # the counter/bound surface (exhausted, settled_bound, chunks_*,
-        # bytes_*, postings_delivered) delegates to the underlying cursor
+        # the counter/bound/metadata surface (exhausted, settled_bound,
+        # chunks_*, bytes_*, postings_delivered, max_doc_count — the ranked
+        # executor's score upper bound) delegates to the underlying cursor
         return getattr(self._inner, name)
 
 

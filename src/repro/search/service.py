@@ -67,6 +67,13 @@ from repro.search.plan import (
 )
 from repro.core.inverted_index import PostingCursor
 from repro.search.reader import IndexSetReader, ShardedIndexSetReader
+from repro.search.scoring import (
+    doc_counts,
+    head_order,
+    max_doc_run,
+    score_docs,
+    score_docs_jax,
+)
 
 _EMPTY = np.zeros((0, 2), dtype=np.int64)
 _INF = float("inf")
@@ -177,9 +184,10 @@ class SearchService:
         window: Optional[int] = None,
         phrase: bool = False,
         top_k: Optional[int] = None,
+        rank: Optional[str] = None,
     ) -> QueryResult:
         q = Query(tuple(int(w) for w in words), window, phrase=phrase,
-                  top_k=top_k)
+                  top_k=top_k, rank=rank)
         return self.search_batch([q])[0]
 
     def search_batch(self, queries: Sequence[QueryLike]) -> List[QueryResult]:
@@ -488,7 +496,12 @@ class SearchService:
         from those rows at zero extra device I/O instead of re-reading."""
         if not streaming:
             return
-        t = {"queries": len(streaming), "early_terminated": 0,
+        t = {"queries": len(streaming), "ranked_queries": 0,
+             # per-query stop classification: every streaming query ends
+             # exactly one way — ranked threshold stop, doc-id bound stop,
+             # or full drain (check_trace_complete enforces the partition)
+             "early_terminated": 0, "threshold_stops": 0, "bound_stops": 0,
+             "fully_drained": 0, "threshold_checks": 0,
              "chunks_planned": 0, "chunks_fetched": 0, "chunks_skipped": 0,
              "bytes_planned": 0, "bytes_fetched": 0, "bytes_skipped": 0}
         for qi in streaming:
@@ -509,15 +522,32 @@ class SearchService:
         (``+inf`` once exhausted) — is a lower bound on everything it has
         not delivered yet: no future chunk of any cursor can produce a
         match in a doc strictly below the minimum bound over all cursors.
-        The loop joins the settled prefix, and stops fetching the moment
-        ``k`` matching docs lie below the global bound (the bounded best-k
-        set is provably final — remaining chunks are skipped), or when
-        every cursor is exhausted (``top_k >= total matches``: the result
-        degenerates to the exhaustive answer).  Per-shard cursors merge by
-        this same global bound, so scatter/gather and the 1-shard case
-        share one code path.
+        The loop joins the settled prefix region by region, and stops
+        fetching by the mode's rule:
+
+        * **doc-id mode** (``rank=None``): stop the moment ``k`` matching
+          docs lie below the global bound — the lowest-id best-k set is
+          provably final, remaining chunks are skipped.
+        * **ranked mode** (``rank="prox"``): the WAND-style threshold
+          test.  Every settled doc's score is exact (its region held ALL
+          slot postings); every *unsettled* doc's score is bounded by the
+          sum over slots of ``w_slot * tf_sat(max_doc_count)``, where an
+          exhausted slot's bound is refined to the actual max over its
+          still-pending rows (in particular: an exhausted slot with no
+          pending rows kills every future match — conjunctive death).
+          Stop once the k-th best settled score >= that remaining upper
+          bound: a candidate can at best TIE the k-th score, and every
+          candidate's doc id exceeds the bound (hence every settled id),
+          so under the (score desc, doc id asc) tie rule it cannot enter
+          the head.  See DESIGN_SEARCH.md §9 for the full argument.
+
+        Either way, exhaustion of every cursor degenerates to the
+        exhaustive answer, and per-shard cursors merge by the same global
+        bound, so scatter/gather and the 1-shard case share one code path.
         """
         k = pq.top_k
+        ranked = pq.rank is not None
+        spec = pq.score_spec
         S = self.n_shards
         # one cursor per unique (index, key) — a repeated lookup inside
         # one query (e.g. a periodic phrase's cover) shares the stream
@@ -544,6 +574,16 @@ class SearchService:
         ]
         flat = [c for row in cursors for c in row]
 
+        key_max: List[int] = []
+        if ranked:
+            trace["ranked_queries"] += 1
+            # static per-key score bound ingredient: the key's largest
+            # per-doc posting count, carried as cursor metadata from the
+            # dictionary entry (array-backed cursors compute it from
+            # their rows).  A doc lives in exactly one shard, so the max
+            # over the shard row bounds every doc the key can deliver.
+            key_max = [max(c.max_doc_count for c in row) for row in cursors]
+
         # incremental settled-region execution: matches are per-doc (no
         # join crosses a doc boundary), so joining ONLY the newly settled
         # [prev_bound, bound) rows each round and appending reproduces the
@@ -553,6 +593,8 @@ class SearchService:
             [[] for _ in range(S)] for _ in idents
         ]
         acc_parts: List[np.ndarray] = []
+        doc_parts: List[np.ndarray] = []
+        score_parts: List[np.ndarray] = []
         n_docs = 0
         prev_bound = -_INF
         while True:
@@ -574,9 +616,25 @@ class SearchService:
                 )
                 if part.shape[0]:
                     acc_parts.append(part)
-                    n_docs += int(np.unique(part[:, 0]).shape[0])
+                    rdocs = np.unique(part[:, 0])
+                    n_docs += int(rdocs.shape[0])
+                    if ranked:
+                        # score the region's docs NOW: the region holds
+                        # every slot posting of every settled doc, so the
+                        # per-slot counts — hence the scores — are exact
+                        doc_parts.append(rdocs)
+                        counts = [doc_counts(rdocs, region[i])
+                                  for i in lookup_slots]
+                        score_parts.append(self._score(counts, spec))
                 prev_bound = bound
-                if n_docs >= k or bound == _INF:
+                if bound == _INF:
+                    break
+                if ranked:
+                    if self._ranked_stop(trace, cursors, pending, key_max,
+                                         lookup_slots, spec, score_parts,
+                                         n_docs, k):
+                        break
+                elif n_docs >= k:
                     break
             elif bound == _INF:  # nothing newly settled and all drained
                 break
@@ -596,9 +654,14 @@ class SearchService:
             else np.concatenate(acc_parts, axis=0) if acc_parts
             else _EMPTY
         )
-        docs, counts = np.unique(acc[:, 0], return_counts=True)
 
-        trace["early_terminated"] += any(not c.exhausted for c in flat)
+        # stop-reason ledger: every streaming query lands in exactly one
+        # bucket (check_trace_complete enforces the partition per batch)
+        if any(not c.exhausted for c in flat):
+            trace["early_terminated"] += 1
+            trace["threshold_stops" if ranked else "bound_stops"] += 1
+        else:
+            trace["fully_drained"] += 1
         for c in flat:
             trace["chunks_planned"] += c.chunks_total
             trace["chunks_fetched"] += c.chunks_fetched
@@ -607,8 +670,6 @@ class SearchService:
             trace["bytes_fetched"] += c.bytes_fetched
             trace["bytes_skipped"] += c.bytes_skipped
 
-        top_docs = docs[:k]
-        witnesses = acc[np.isin(acc[:, 0], top_docs)] if acc.shape[0] else acc
         log = [(lk.index, lk.key) for lk in pq.lookups]
         # count delivered postings per LOOKUP OCCURRENCE (a duplicated
         # cover key streams once but is scanned by both positions), so a
@@ -616,8 +677,79 @@ class SearchService:
         per_ident = [sum(c.postings_delivered for c in row)
                      for row in cursors]
         scanned = sum(per_ident[i] for i in lookup_slots)
+
+        if ranked:
+            zero = np.zeros(0, dtype=np.int64)
+            docs_all = np.concatenate(doc_parts) if doc_parts else zero
+            scores_all = np.concatenate(score_parts) if score_parts else zero
+            order = head_order(docs_all, scores_all, k, ranked=True)
+            top_docs = docs_all[order]
+            witnesses = (acc[np.isin(acc[:, 0], top_docs)]
+                         if acc.shape[0] else acc)
+            return QueryResult(top_docs, witnesses, log, scanned, pq.route,
+                               scores_all[order])
+
+        docs, counts = np.unique(acc[:, 0], return_counts=True)
+        order = head_order(docs, counts, k, ranked=False)
+        top_docs = docs[order]
+        witnesses = acc[np.isin(acc[:, 0], top_docs)] if acc.shape[0] else acc
         return QueryResult(top_docs, witnesses, log, scanned, pq.route,
-                           counts[:k])
+                           counts[order])
+
+    def _score(self, slot_counts, spec) -> np.ndarray:
+        """Backend dispatch for region scoring: jax/pallas take the
+        bucketable device form, everything else the numpy reference —
+        all-integer arithmetic, so the outputs are bit-identical."""
+        if self.backend in ("jax", "pallas"):
+            return score_docs_jax(slot_counts, spec)
+        return score_docs(slot_counts, spec)
+
+    def _ranked_stop(
+        self,
+        trace: Dict[str, int],
+        cursors,
+        pending: List[np.ndarray],
+        key_max: List[int],
+        lookup_slots: List[int],
+        spec,
+        score_parts: List[np.ndarray],
+        n_docs: int,
+        k: int,
+    ) -> bool:
+        """The WAND threshold test at the current global bound.
+
+        Upper-bounds the score of every not-yet-settled doc: slot by
+        slot, a candidate's posting count is at most the key's lifetime
+        ``max_doc_count`` — refined, once a key's cursors are all
+        exhausted, to the exact max over its still-pending rows (all of
+        which sit at or above the bound).  An exhausted key with an empty
+        pending region can never witness another match (the joins are
+        conjunctive): stop immediately regardless of how many docs have
+        settled.  Otherwise stop iff k docs have settled and the k-th
+        best settled score already meets the bound (a candidate tie
+        loses on doc id — candidates sit above every settled doc).
+        """
+        trace["threshold_checks"] += 1
+        per_ident: List[int] = []
+        for i, row in enumerate(cursors):
+            if all(c.exhausted for c in row):
+                cnt = max_doc_run(pending[i])
+                if cnt == 0:
+                    return True  # conjunctive death: no future match
+            else:
+                cnt = key_max[i]
+            per_ident.append(cnt)
+        ub = sum(
+            spec.weights[s] * min(per_ident[ident], spec.tf_cap)
+            for s, ident in enumerate(lookup_slots)
+        )
+        if n_docs < k:
+            return False
+        scores = (score_parts[0] if len(score_parts) == 1
+                  else np.concatenate(score_parts))
+        theta = int(np.partition(scores, scores.shape[0] - k)
+                    [scores.shape[0] - k])
+        return theta >= ub
 
     def _streaming_join(
         self, pq, prefix: List[np.ndarray]
@@ -672,6 +804,29 @@ class SearchService:
             )
         tk = tr.get("topk")
         if tk is not None:
+            # per-query stop partition: every streaming query ended
+            # exactly one way, and "early_terminated" is a true per-query
+            # COUNT (it used to accumulate a bool per batch, conflating
+            # "how many stopped early" with "did any stop early")
+            if tk["queries"] != tk["early_terminated"] + tk["fully_drained"]:
+                raise TraceIncompleteError(
+                    f"streaming queries {tk['queries']} != early_terminated "
+                    f"{tk['early_terminated']} + fully_drained "
+                    f"{tk['fully_drained']}"
+                )
+            if tk["early_terminated"] != (
+                tk["threshold_stops"] + tk["bound_stops"]
+            ):
+                raise TraceIncompleteError(
+                    f"early_terminated {tk['early_terminated']} != "
+                    f"threshold_stops {tk['threshold_stops']} + bound_stops "
+                    f"{tk['bound_stops']}"
+                )
+            if not 0 <= tk["ranked_queries"] <= tk["queries"]:
+                raise TraceIncompleteError(
+                    f"ranked_queries {tk['ranked_queries']} outside "
+                    f"[0, {tk['queries']}]"
+                )
             if tk["chunks_planned"] != tk["chunks_fetched"] + tk["chunks_skipped"]:
                 raise TraceIncompleteError(
                     f"cursor chunks planned {tk['chunks_planned']} != "

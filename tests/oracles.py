@@ -183,7 +183,10 @@ def assert_results_identical(
     assert ref.lookups == got.lookups, ctx
     if check_scanned:
         assert ref.postings_scanned == got.postings_scanned, ctx
-    if ref.scores is not None and got.scores is not None:
+    # scores are mandatory on every executor path: a side missing them
+    # is a bug, not a comparison to skip
+    assert (ref.scores is None) == (got.scores is None), ctx
+    if ref.scores is not None:
         assert np.array_equal(ref.scores, got.scores), ctx
 
 
@@ -207,8 +210,51 @@ def assert_topk_matches_head(
     assert got.route == ref.route, (ctx, ref.route, got.route)
     assert np.array_equal(got.docs, docs), (ctx, k)
     assert np.array_equal(got.witnesses, wits), (ctx, k)
-    if scores is not None and got.scores is not None:
+    assert (scores is None) == (got.scores is None), (ctx, k)
+    if scores is not None:
         assert np.array_equal(got.scores, scores), (ctx, k)
+    assert got.lookups == ref.lookups, (ctx, k)
+
+
+def ranked_oracle_head(
+    ref: QueryResult, ranked_q: Query, ref_svc, k: int
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Exhaustive score-then-sort oracle for ``Query(top_k=k, rank=...)``.
+
+    Scores EVERY matched doc of the exhaustive (unranked) result ``ref``
+    from whole-list lookups — no cursors, no streaming, no pruning — and
+    selects the head with the shared deterministic (score desc, doc id
+    asc) rule.  The only code shared with the executor is the scoring
+    arithmetic and the tie rule (both are THE definition); the counting
+    path is independent (binary searches over raw ``reader.lookup``
+    lists vs the executor's settled regions)."""
+    from repro.search.scoring import doc_counts, head_order, score_docs
+
+    pq = ref_svc.plan([ranked_q]).queries[0]
+    assert pq.score_spec is not None
+    counts = [
+        doc_counts(ref.docs, ref_svc.reader.lookup(lk.index, lk.key))
+        for lk in pq.lookups
+    ]
+    scores = score_docs(counts, pq.score_spec)
+    order = head_order(ref.docs, scores, k, ranked=True)
+    docs = ref.docs[order]
+    wits = ref.witnesses[np.isin(ref.witnesses[:, 0], docs)]
+    return docs, wits, scores[order]
+
+
+def assert_ranked_matches_oracle(
+    ref: QueryResult, got: QueryResult, ranked_q: Query, ref_svc, ctx=None
+) -> None:
+    """``got`` (a ranked top-k result) is element-wise identical — docs,
+    scores, tie order, witnesses — to the exhaustive ranked oracle."""
+    k = ranked_q.top_k
+    docs, wits, scores = ranked_oracle_head(ref, ranked_q, ref_svc, k)
+    assert got.route == ref.route, (ctx, ref.route, got.route)
+    assert np.array_equal(got.docs, docs), (ctx, k)
+    assert got.scores is not None, (ctx, k)
+    assert np.array_equal(got.scores, scores), (ctx, k)
+    assert np.array_equal(got.witnesses, wits), (ctx, k)
     assert got.lookups == ref.lookups, (ctx, k)
 
 
@@ -222,6 +268,7 @@ def run_live_update_rounds(
     cache_bytes: int = 1 << 20,
     window: int = 3,
     ctx=None,
+    compact_after: Sequence[int] = (),
 ):
     """The incremental-update oracle (the paper's *easily updatable*
     property exercised at serving time).
@@ -236,6 +283,11 @@ def run_live_update_rounds(
     a warm cache legitimately changes how much the streaming stage
     fetches before terminating).
 
+    ``compact_after`` lists part indexes after which the LIVE substrate
+    is compacted (the fresh rebuild never is) — identity across the
+    asymmetry proves results, scores and ranked heads are transparent to
+    background compaction.
+
     Returns the live services keyed by backend (callers can inspect
     their traces/cache stats afterwards)."""
     from repro.search import SearchService
@@ -246,8 +298,11 @@ def run_live_update_rounds(
                          cache_bytes=cache_bytes)
         for b in backends
     }
+    compact_after = set(compact_after)
     for i, ((toks, offs), d0) in enumerate(zip(parts, doc_starts)):
         live.add_documents(toks, offs, d0)
+        if i in compact_after:
+            live.compact()
         fresh = make_substrate()
         for (t2, o2), dd in zip(parts[: i + 1], doc_starts[: i + 1]):
             fresh.add_documents(t2, o2, dd)

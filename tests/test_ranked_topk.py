@@ -1,0 +1,389 @@
+"""Score-ordered top-k: the ranked streaming executor vs the exhaustive
+score-then-sort oracle.
+
+Pins the PR's contract from every side:
+
+  * property: ``Query(top_k=N, rank="prox")`` returns the exhaustive
+    ranked oracle head — docs, scores AND tie order — element-wise,
+    across numpy/jax/pallas and n_shards {1, 2, 4};
+  * monotonicity: the ranked k-head is a prefix of the (k+1)-head (the
+    (score desc, doc id asc) order is total);
+  * ties: on a corpus engineered so equal scores straddle the k
+    boundary, the shared ``head_order`` helper — not ``np.unique``
+    arrival order — decides who makes the head;
+  * effectiveness: on the seeded hot corpus the WAND threshold test
+    stops with ``chunks_skipped > 0`` and strictly fewer read bytes
+    than the exhaustive drain;
+  * liveness: ranked heads stay oracle-identical through live update
+    rounds AND background compaction of the live substrate;
+  * observability: the per-query stop partition
+    (``queries == early_terminated + fully_drained``,
+    ``early_terminated == threshold_stops + bound_stops``) is enforced
+    by ``check_trace_complete`` on every ranked batch;
+  * the ``QueryResult.__eq__`` tightening: a scoreless result never
+    again compares equal to a scored one.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from tests._hypothesis_compat import given, settings, strategies as st
+
+from repro.core.sharded_set import ShardedTextIndexSet
+from repro.core.strategies import StrategyConfig
+from repro.core.text_index import IndexSetConfig, TextIndexSet
+from repro.data.corpus import generate_part
+from repro.search import (
+    Query,
+    QueryResult,
+    SearchService,
+    TraceIncompleteError,
+    head_order,
+    score_docs,
+    score_docs_jax,
+    spec_for,
+)
+from repro.search.scoring import ScoreSpec, doc_counts
+from tests.oracles import (
+    QUERY_SPEC,
+    assert_ranked_matches_oracle,
+    core_queries,
+    run_live_update_rounds,
+    spec_to_query,
+)
+from tests.test_topk import (
+    BACKENDS,
+    SHARD_COUNTS,
+    _equiv_services,
+    _equiv_worlds,
+    _hot_phrases,
+    hot_world,
+)
+
+
+def _ranked(q: Query, k: int) -> Query:
+    return dataclasses.replace(q, top_k=k, rank="prox")
+
+
+# --------------------------------------------------------- property suite --
+@settings(max_examples=10, deadline=None)
+@given(
+    st.lists(QUERY_SPEC, min_size=1, max_size=5),
+    st.integers(1, 12),
+)
+def test_ranked_head_matches_oracle_all_backends_shards(specs, k):
+    """The tentpole: ranked top-k == exhaustive score-then-sort oracle,
+    element-wise (docs, scores, tie order, witnesses), for every
+    backend and shard count."""
+    lex, toks, pools, ts, sharded = _equiv_worlds()
+    ref_svc, svcs = _equiv_services()
+    queries = [spec_to_query(s, toks, pools) for s in specs]
+    ranked = [_ranked(q, k) for q in queries]
+    ref = ref_svc.search_batch(queries)
+    for (n, b), svc in svcs.items():
+        got = svc.search_batch(ranked)
+        svc.check_trace_complete()
+        tr = svc.last_trace["topk"]
+        assert tr["ranked_queries"] == len(ranked)
+        for qi, (r, g) in enumerate(zip(ref, got)):
+            assert_ranked_matches_oracle(
+                r, g, ranked[qi], ref_svc,
+                ctx=("shards", n, "backend", b, "k", k, "query", qi),
+            )
+
+
+def test_ranked_monotone_in_k():
+    """The ranked k-head is a strict prefix of every larger head — the
+    (score desc, doc id asc) order is total, so growing k only appends."""
+    lex, toks, pools, ts, sharded = _equiv_worlds()
+    ref_svc, svcs = _equiv_services()
+    svc = svcs[(2, "numpy")]
+    for q in core_queries(toks, pools):
+        prev = None
+        for k in (1, 2, 3, 5, 9, 200):
+            got = svc.search_batch([_ranked(q, k)])[0]
+            if prev is not None:
+                m = prev.docs.shape[0]
+                assert np.array_equal(got.docs[:m], prev.docs), (q, k)
+                assert np.array_equal(got.scores[:m], prev.scores), (q, k)
+            prev = got
+
+
+def test_docid_mode_unchanged_for_existing_callers():
+    """``Query(top_k=N)`` without ``rank`` keeps doc-id-ordered
+    semantics — and its stop is ledgered as a bound stop, never a
+    threshold stop."""
+    lex, toks, pools, ts, sharded = _equiv_worlds()
+    ref_svc, svcs = _equiv_services()
+    svc = svcs[(2, "numpy")]
+    ref = ref_svc.search_batch(core_queries(toks, pools))
+    qs = [dataclasses.replace(q, top_k=3)
+          for q in core_queries(toks, pools)]
+    got = svc.search_batch(qs)
+    svc.check_trace_complete()
+    tr = svc.last_trace["topk"]
+    assert tr["ranked_queries"] == 0 and tr["threshold_stops"] == 0
+    for r, g in zip(ref, got):
+        assert np.array_equal(g.docs, r.docs[:3])
+        assert np.array_equal(g.scores, r.scores[:3])
+
+
+# ------------------------------------------------------------- tie breaks --
+def _tie_world():
+    """A corpus engineered so one stop pair's score ties straddle any
+    small k: every document repeats the same two stop words in lockstep,
+    so per-doc counts (hence scores) collide by construction."""
+    from repro.core.lexicon import make_lexicon
+
+    lex = make_lexicon(n_words=400, n_lemmas=200, n_stop=12,
+                       n_frequent=40, seed=7)
+    cfg = IndexSetConfig(
+        strategy=StrategyConfig.set2(cluster_size=512),
+        fl_area_clusters=64,
+    )
+    rng = np.random.RandomState(11)
+    from tests.oracles import class_pools
+    from repro.core.lexicon import STOP
+
+    stop = class_pools(lex)[STOP]
+    a, b = stop[0], stop[1]
+    toks, offs = [], [0]
+    n_docs = 24
+    for d in range(n_docs):
+        # repeats cycle 1..6: with TF_CAP=4 docs with 4, 5 and 6 repeats
+        # all saturate to the SAME score — ties guaranteed across k
+        reps = 1 + d % 6
+        doc = [a, b] * reps
+        # pad with out-of-query filler so doc lengths differ too
+        doc += [int(w) for w in rng.randint(100, 380, size=5)]
+        toks.extend(doc)
+        offs.append(len(toks))
+    parts = [(np.asarray(toks, np.int64), np.asarray(offs, np.int64))]
+    ts = TextIndexSet(cfg, lex, seed=0)
+    ts.add_documents(*parts[0], 0)
+    return lex, ts, (a, b), n_docs
+
+
+def test_ranked_ties_straddling_k_use_shared_order():
+    """Equal scores straddle the k boundary: the head must contain the
+    LOWEST doc ids among the tied score class — the shared
+    ``head_order`` rule — and must agree with the exhaustive oracle."""
+    lex, ts, (a, b), n_docs = _tie_world()
+    svc = SearchService(ts, window=3, backend="numpy")
+    ref_svc = SearchService(ts, window=3, backend="numpy")
+    ref = ref_svc.search_batch([Query((a, b))])[0]
+    assert ref.docs.shape[0] == n_docs
+    for k in range(1, n_docs + 2):
+        q = Query((a, b), top_k=min(k, n_docs), rank="prox")
+        got = svc.search_batch([q])[0]
+        svc.check_trace_complete()
+        assert_ranked_matches_oracle(ref, got, q, ref_svc, ctx=("tie", k))
+        # scores non-increasing; doc ids ascending inside each tie class
+        s, d = got.scores, got.docs
+        assert np.all(np.diff(s) <= 0), k
+        for lo in range(len(s)):
+            same = s == s[lo]
+            assert np.all(np.diff(d[same]) > 0), k
+    # the saturating cap really did manufacture cross-doc ties
+    assert np.unique(ref.scores).shape[0] < n_docs
+
+
+def test_head_order_is_the_single_tie_rule():
+    """Unit pin of the shared helper: ranked = (score desc, doc asc),
+    doc-id mode = identity prefix."""
+    docs = np.array([3, 5, 9, 12, 40], dtype=np.int64)
+    scores = np.array([7, 9, 7, 9, 1], dtype=np.int64)
+    order = head_order(docs, scores, 3, ranked=True)
+    assert np.array_equal(docs[order], [5, 12, 3])
+    assert np.array_equal(scores[order], [9, 9, 7])
+    assert np.array_equal(head_order(docs, scores, 3, ranked=False),
+                          [0, 1, 2])
+    assert head_order(docs, scores, 99, ranked=True).shape[0] == 5
+
+
+# ------------------------------------------------------- scoring algebra --
+def test_score_forms_identical_numpy_vs_jax():
+    rng = np.random.RandomState(0)
+    for n_slots in (1, 2, 3):
+        for n in (1, 2, 7, 33, 257):
+            counts = [rng.randint(0, 12, size=n).astype(np.int64)
+                      for _ in range(n_slots)]
+            spec = ScoreSpec(weights=tuple(rng.randint(1, 13)
+                                           for _ in range(n_slots)))
+            a = score_docs(counts, spec)
+            b = score_docs_jax(counts, spec)
+            assert a.dtype == np.int64
+            assert np.array_equal(a, b), (n_slots, n)
+
+
+def test_spec_for_routes():
+    """Route distances: phrase/multi/stopseq witness adjacency (d=1),
+    wv is precomputed at max_distance, ordinary gets the window."""
+    assert spec_for("stopseq", 1, 3, 3).weights == (12,)
+    assert spec_for("multi", 2, 3, 3).weights == (12, 12)
+    assert spec_for("ordinary", 2, 3, 3, phrase=True).weights == (12, 12)
+    assert spec_for("wv", 1, 5, 3).weights == (6,)
+    assert spec_for("ordinary", 3, 2, 3).weights == (8, 8, 8)
+    spec = spec_for("ordinary", 2, 3, 3)
+    assert spec.max_score == 2 * 6 * spec.tf_cap
+
+
+def test_doc_counts_matches_bruteforce():
+    rng = np.random.RandomState(4)
+    posts = np.stack([np.sort(rng.randint(0, 20, size=200)),
+                      rng.randint(0, 50, size=200)], axis=1).astype(np.int64)
+    docs = np.unique(posts[:, 0])
+    got = doc_counts(docs, posts)
+    want = [int(np.sum(posts[:, 0] == d)) for d in docs]
+    assert np.array_equal(got, want)
+    assert doc_counts(np.zeros(0, np.int64), posts).shape == (0,)
+
+
+# ------------------------------------------------- QueryResult tightening --
+def test_scoreless_vs_scored_results_unequal():
+    """Regression for the __eq__ escape hatch: an executor that silently
+    drops scores must no longer compare equal to a scored result."""
+    docs = np.array([1, 2], dtype=np.int64)
+    wits = np.array([[1, 0], [2, 4]], dtype=np.int64)
+    scored = QueryResult(docs, wits, [("known", 5)], 2,
+                         scores=np.array([3, 1], np.int64))
+    scoreless = QueryResult(docs, wits, [("known", 5)], 2, scores=None)
+    assert scored != scoreless
+    assert scoreless != scored
+    assert scored == QueryResult(docs, wits, [("known", 5)], 2,
+                                 scores=np.array([3, 1], np.int64))
+    assert scoreless == QueryResult(docs, wits, [("known", 5)], 2)
+    # and differing score VALUES are unequal too
+    assert scored != QueryResult(docs, wits, [("known", 5)], 2,
+                                 scores=np.array([3, 2], np.int64))
+
+
+def test_facade_path_attaches_scores():
+    """The single-query ProximityEngine facade now carries scores, so it
+    is comparable against scored results under the tightened equality."""
+    from repro.core.lexicon import OTHER, make_lexicon
+    from repro.core.proximity import ProximityEngine
+    from tests.oracles import class_pools
+
+    lex = make_lexicon(n_words=2000, n_lemmas=900, n_stop=16,
+                       n_frequent=90, seed=23)
+    cfg = IndexSetConfig(
+        strategy=StrategyConfig.set2(cluster_size=512),
+        build_ordinary_all=True,
+        fl_area_clusters=64,
+    )
+    ts = TextIndexSet(cfg, lex, seed=0)
+    ts.add_documents(*generate_part(lex, n_docs=40, avg_doc_len=100,
+                                    doc0=0, seed=60), 0)
+    pools = class_pools(lex)
+    words = (pools[OTHER][1], pools[OTHER][2])
+    r = ProximityEngine(ts, window=3).search_ordinary(words)
+    assert r.scores is not None
+    assert r.scores.shape == r.docs.shape
+    # the scores ARE the per-doc witness counts, aligned with docs
+    docs, counts = np.unique(r.witnesses[:, 0], return_counts=True)
+    assert np.array_equal(r.docs, docs)
+    assert np.array_equal(r.scores, counts)
+
+
+# ------------------------------------------------------- trace invariants --
+def test_early_terminated_counts_per_query(hot_world):
+    """Regression for the bool-accumulation bug: a batch where EVERY
+    query stops early must report early_terminated == len(batch), not 1."""
+    lex, parts, ts = hot_world
+    toks0 = parts[0][0]
+    phrases = _hot_phrases(lex, toks0, n=4, ts=ts)
+    assert len(phrases) >= 2
+    svc = SearchService(ts, window=3, backend="numpy", cache_bytes=0)
+    qs = [Query(w, phrase=True, top_k=1, rank="prox") for w in phrases]
+    svc.search_batch(qs)
+    svc.check_trace_complete()
+    tr = svc.last_trace["topk"]
+    assert tr["early_terminated"] == tr["threshold_stops"] > 1
+    assert tr["queries"] == tr["early_terminated"] + tr["fully_drained"]
+
+
+def test_trace_partition_enforced(hot_world):
+    """check_trace_complete raises when the per-query stop partition is
+    violated (mutating any one counter breaks a partition equation)."""
+    lex, parts, ts = hot_world
+    toks0 = parts[0][0]
+    svc = SearchService(ts, window=3, backend="numpy", cache_bytes=0)
+    words = _hot_phrases(lex, toks0, 1, ts=ts)[0]
+    svc.search_batch([Query(words, phrase=True, top_k=1, rank="prox")])
+    svc.check_trace_complete()
+    for key in ("early_terminated", "fully_drained", "threshold_stops"):
+        good = dict(svc.last_trace["topk"])
+        svc.last_trace["topk"][key] += 1
+        with pytest.raises(TraceIncompleteError):
+            svc.check_trace_complete()
+        svc.last_trace["topk"] = good
+        svc.check_trace_complete()
+
+
+# -------------------------------------------------- hot-corpus regression --
+def test_hot_corpus_ranked_skips_chunks(hot_world):
+    """The acceptance gate: under ranking the WAND threshold stop still
+    skips chunks and reads strictly fewer bytes than the exhaustive
+    drain, while the head stays oracle-identical."""
+    lex, parts, ts = hot_world
+    toks0 = parts[0][0]
+    phrases = _hot_phrases(lex, toks0, n=8, ts=ts)
+    svc = SearchService(ts, window=3, backend="numpy", cache_bytes=0)
+    ref_svc = SearchService(ts, window=3, backend="numpy", cache_bytes=0)
+    ranked = [Query(w, phrase=True, top_k=2, rank="prox") for w in phrases]
+    ref = ref_svc.search_batch([Query(w, phrase=True) for w in phrases])
+    got = svc.search_batch(ranked)
+    svc.check_trace_complete()
+    for qi, (r, g) in enumerate(zip(ref, got)):
+        assert_ranked_matches_oracle(r, g, ranked[qi], ref_svc, ctx=qi)
+    tr = svc.last_trace["topk"]
+    assert tr["threshold_stops"] > 0
+    assert tr["chunks_skipped"] > 0
+    assert tr["bytes_fetched"] < tr["bytes_planned"]
+    assert tr["bytes_fetched"] + tr["bytes_skipped"] == tr["bytes_planned"]
+
+
+# ------------------------------------------------- live updates + compaction --
+@pytest.mark.parametrize("n_shards", SHARD_COUNTS)
+def test_ranked_through_updates_and_compaction(n_shards):
+    """Ranked heads stay oracle-identical while parts land on a LIVE
+    substrate that is compacted mid-run (the rebuild reference never is):
+    per-key max_doc_count, cursors and scores are all
+    update/compaction-transparent."""
+    from repro.core.lexicon import make_lexicon
+    from tests.oracles import class_pools
+
+    lex = make_lexicon(n_words=2000, n_lemmas=900, n_stop=16,
+                       n_frequent=90, seed=19)
+    cfg = IndexSetConfig(
+        strategy=StrategyConfig.set2(cluster_size=512),
+        fl_area_clusters=64,
+    )
+    parts = [
+        generate_part(lex, n_docs=30, avg_doc_len=90, doc0=0, seed=50),
+        generate_part(lex, n_docs=30, avg_doc_len=90, doc0=30, seed=51),
+        generate_part(lex, n_docs=30, avg_doc_len=90, doc0=60, seed=52),
+    ]
+    pools = class_pools(lex)
+    toks = parts[0][0]
+    queries = []
+    for q in core_queries(toks, pools):
+        queries.append(_ranked(q, 3))
+        queries.append(q)  # exhaustive twin keeps the mixed batch honest
+
+    def make_substrate():
+        if n_shards == 1:
+            return TextIndexSet(cfg, lex, seed=0)
+        return ShardedTextIndexSet(cfg, lex, n_shards=n_shards, seed=0)
+
+    svcs = run_live_update_rounds(
+        make_substrate, parts, [0, 30, 60], queries,
+        backends=BACKENDS, ctx=("ranked-live", n_shards),
+        compact_after=(1,),
+    )
+    for svc in svcs.values():
+        svc.check_trace_complete()
+        assert svc.last_trace["topk"]["ranked_queries"] == len(queries) // 2
