@@ -12,6 +12,8 @@ Benches:
     search_sharded — 4-shard scatter/gather vs unsharded (qps + read bytes)
     search_topk   — top-k early-termination vs exhaustive (read-bytes ratio)
     search_ranked — score-ordered (WAND) top-k vs exhaustive ranked scan
+    search_hot_traffic — concurrent hot-vocabulary queries through the
+                    cross-query chunk pool vs per-query cursors
     update_speed  — live per-shard update streams: targeted invalidation
                     vs whole-namespace drops under interleaved updates
     durability    — repro.store: WAL fsync cost, recovery time vs WAL
@@ -131,6 +133,25 @@ def _bench_search_ranked(scale):
     ]
 
 
+def _bench_search_hot_traffic(scale):
+    from benchmarks import search_speed
+
+    rows = search_speed.run_hot_traffic(min(scale, 0.5), n_queries=96)
+    r = rows[0]
+    ok = (
+        r["identical"]
+        and r["chunks_shared"] > 0
+        and r["bytes_ratio"] <= 0.5
+        and r["dedup_many_bytes"] < 2 * max(1, r["dedup_one_bytes"])
+    )
+    return rows, [
+        f"{'PASS' if ok else 'FAIL'}  hot-traffic chunk pool identical to "
+        f"per-query cursors at {r['bytes_ratio']:.3f}x read bytes "
+        f"({r['chunks_shared']} chunk replays over {r['chunks_fetched']} "
+        f"unique fetches)"
+    ]
+
+
 def _bench_update_speed(scale):
     from benchmarks import update_speed
 
@@ -197,6 +218,7 @@ BENCHES = {
     "search_sharded": _bench_search_sharded,
     "search_topk": _bench_search_topk,
     "search_ranked": _bench_search_ranked,
+    "search_hot_traffic": _bench_search_hot_traffic,
     "update_speed": _bench_update_speed,
     "durability": _bench_durability,
     "paged_kv": _bench_paged_kv,

@@ -152,6 +152,9 @@ def run(
             "hits": st.hits,
             "misses": st.misses,
             "hit_rate": round(st.hit_rate, 4),
+            "pool_hits": st.pool_hits,
+            "device_hits": st.device_hits,
+            "partial_admits": st.partial_admits,
             "snapshot": svc.last_trace["snapshot"],
             "compactions": comp["compactions"],
             "compacted_streams": comp["compacted_streams"],
@@ -175,11 +178,13 @@ def main(scale: float = 0.5, n_queries: int = 48, n_parts: int = 4,
                n_shards=n_shards)
     by_mode = {r["mode"]: r for r in rows}
     print(f"{'mode':16s} {'qps':>10s} {'read_bytes':>12s} "
-          f"{'invalidated':>12s} {'full_drops':>10s} {'hit_rate':>9s}")
+          f"{'invalidated':>12s} {'full_drops':>10s} {'hit_rate':>9s} "
+          f"{'pool_hits':>9s} {'dev_hits':>8s} {'partials':>8s}")
     for mode, r in by_mode.items():
         print(f"{mode:16s} {r['qps']:>10,.0f} {r['read_bytes']:>12,} "
               f"{r['invalidations']:>12,} {r['full_drops']:>10,} "
-              f"{r['hit_rate']:>9.3f}")
+              f"{r['hit_rate']:>9.3f} {r['pool_hits']:>9,} "
+              f"{r['device_hits']:>8,} {r['partial_admits']:>8,}")
     t, b = by_mode["targeted"], by_mode["namespace_drop"]
     print(f"{t['batches']} batches x {t['queries_per_batch']} queries over "
           f"{t['parts']} live parts on {t['shards']} shards; final snapshot "

@@ -22,6 +22,13 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.search_speed \
 # fewer posting bytes
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.search_speed \
   --ranked 5 --scale 0.05 --queries 10
+# tiny-corpus smoke of the cross-query chunk pool: a hot-vocabulary
+# batch through pooled cursors must stay element-wise identical to the
+# per-query-cursor baseline (across backends and shard counts, device
+# decode on) at <= 0.5x read bytes, and N concurrent identical queries
+# must read < 2x the bytes of one query — not Nx
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.search_speed \
+  --hot-traffic 24 --scale 0.05
 # tiny-corpus smoke of live per-shard update streams: interleaved
 # update/search rounds must serve results identical to a from-scratch
 # rebuild, with targeted (touched-key digest) invalidation dropping

@@ -64,6 +64,37 @@ DIGEST_HISTORY = 64
 DIGEST_MAX_KEYS = 1 << 16
 
 
+@dataclasses.dataclass(frozen=True)
+class CursorResume:
+    """Where a suspended K_OWN cursor stopped: enough to reopen the
+    stream past its consumed storage units with the decoder carry intact.
+
+    ``units_consumed``/``payload_consumed`` pin the open-time unit
+    layout (``chunk_clusters`` included) so a resume against a stream
+    whose storage moved is detected and refused — the caller falls back
+    to a fresh cursor.  ``decoder_state`` is the
+    ``PostingDecoder.state()`` carry tuple (tail bytes + delta
+    continuation), shared with the device decoder."""
+
+    chunk_clusters: int
+    units_consumed: int
+    payload_consumed: int
+    decoder_state: Tuple[bytes, int, int, bool]
+
+
+@dataclasses.dataclass
+class _SuspendCtx:
+    """Per-cursor bookkeeping that makes ``PostingCursor.suspend`` work:
+    the shared decoder, the absolute stream-unit index behind each thunk
+    (``None`` for a replayed cache prefix), and per-thunk payload sizes."""
+
+    decoder: object
+    chunk_clusters: int
+    base_payload: int
+    unit_index: List[Optional[int]]
+    unit_payload: List[int]
+
+
 class PostingCursor:
     """Lazy chunked reader over one key's (doc, pos)-sorted posting list.
 
@@ -78,10 +109,17 @@ class PostingCursor:
     doc`` (the last doc itself may continue into the next chunk).
     """
 
+    # sharing ledger slots: real on pooled cursor views
+    # (repro.search.pool), zero here so the trace invariant
+    # ``planned == fetched + shared + skipped`` holds for every cursor
+    chunks_shared = 0
+    bytes_shared = 0
+
     def __init__(
         self,
         thunks: List[Tuple[int, Callable[[], np.ndarray]]],
         max_doc_count: Optional[int] = None,
+        suspend_ctx: Optional[_SuspendCtx] = None,
     ):
         self._thunks = thunks
         self._i = 0
@@ -93,6 +131,9 @@ class PostingCursor:
         self.last_doc: Optional[int] = None
         self._max_doc_count = max_doc_count
         self._src: Optional[np.ndarray] = None
+        self._suspend_ctx = suspend_ctx
+        # set by InvertedIndex.open_cursor when a CursorResume was applied
+        self.resumed = False
 
     @classmethod
     def from_array(cls, arr: np.ndarray) -> "PostingCursor":
@@ -138,6 +179,35 @@ class PostingCursor:
     @property
     def bytes_skipped(self) -> int:
         return self.bytes_total - self.bytes_fetched
+
+    def suspend(self) -> Optional[CursorResume]:
+        """Freeze a partially-drained K_OWN cursor into a resume token.
+
+        Returns None when there is nothing worth resuming: cursors
+        without a suspend context (EM/TAG/array-backed), exhausted
+        cursors (the complete drain goes to the main cache tier), and
+        cursors that fetched no real storage unit (a replayed cache
+        prefix alone — resuming would re-record the same token).
+        """
+        ctx = self._suspend_ctx
+        if ctx is None or self.exhausted:
+            return None
+        consumed = [ctx.unit_index[k] for k in range(self._i)]
+        real = [u for u in consumed if u is not None]
+        if not real:
+            return None
+        units_consumed = real[-1] + 1
+        payload = ctx.base_payload + sum(
+            ctx.unit_payload[k]
+            for k in range(self._i)
+            if ctx.unit_index[k] is not None
+        )
+        return CursorResume(
+            chunk_clusters=ctx.chunk_clusters,
+            units_consumed=units_consumed,
+            payload_consumed=payload,
+            decoder_state=ctx.decoder.state(),
+        )
 
     def next_chunk(self) -> Optional[np.ndarray]:
         if self.exhausted:
@@ -505,6 +575,9 @@ class InvertedIndex:
         key: Hashable,
         device: Optional[BlockDevice] = None,
         chunk_clusters: int = CURSOR_CHUNK_CLUSTERS,
+        make_decoder: Optional[Callable[[], object]] = None,
+        resume: Optional[CursorResume] = None,
+        prefix: Optional[np.ndarray] = None,
     ) -> PostingCursor:
         """Lazy chunked :meth:`lookup`: the dictionary entry is read now,
         each posting storage unit only when the cursor fetches it.
@@ -516,6 +589,14 @@ class InvertedIndex:
         unit in payload order, large segments split into ranges of at
         most ``chunk_clusters`` clusters.  Draining the cursor charges
         exactly the device bytes ``lookup`` charges.
+
+        ``make_decoder`` swaps the incremental decoder on the OWN path
+        (e.g. the device-backed one); ``resume`` + ``prefix`` replay a
+        suspended drain: when the token still matches the stream's unit
+        layout the already-decoded ``prefix`` rows become a zero-charge
+        first chunk, the decoder carry is restored, and fetching starts
+        at the first unconsumed unit (``cursor.resumed`` is True).  A
+        stale token is ignored and the cursor opens fresh.
         """
         e = self.dict.get(key)
         dev = device if device is not None else self.mgr.device
@@ -552,10 +633,35 @@ class InvertedIndex:
         # K_OWN: unit-by-unit fetch + incremental decode
         st = self.mgr.streams[e.sid]
         units = self.mgr.stream_read_units(e.sid, chunk_clusters=chunk_clusters)
-        decoder = PostingDecoder()
+        decoder = make_decoder() if make_decoder is not None else PostingDecoder()
+        payloads = [pnb for pnb, _, _ in units]
+        # resume validation: the token must describe THIS unit layout —
+        # same chunking, a strict mid-stream cut, and a payload offset
+        # that lands exactly on the consumed-units boundary.  Streams are
+        # append-only between repacks, so a surviving prefix layout means
+        # the consumed bytes are byte-identical to what was decoded.
+        resumed = (
+            resume is not None
+            and resume.chunk_clusters == chunk_clusters
+            and 0 < resume.units_consumed < len(units)
+            and resume.payload_consumed == sum(payloads[: resume.units_consumed])
+        )
         thunks: List[Tuple[int, Callable[[], np.ndarray]]] = []
-        off = 0
-        for payload_nb, charge_nb, charge in units:
+        unit_index: List[Optional[int]] = []
+        unit_payload: List[int] = []
+        base_payload = 0
+        start_unit = 0
+        if resumed:
+            decoder.set_state(resume.decoder_state)
+            base_payload = resume.payload_consumed
+            start_unit = resume.units_consumed
+            if prefix is not None and prefix.shape[0]:
+                thunks.append((0, lambda: prefix))
+                unit_index.append(None)
+                unit_payload.append(0)
+        off = sum(payloads[:start_unit])
+        for k in range(start_unit, len(units)):
+            payload_nb, charge_nb, charge = units[k]
             lo, hi = off, off + payload_nb
             off = hi
 
@@ -565,7 +671,21 @@ class InvertedIndex:
                 return posts
 
             thunks.append((charge_nb, fetch))
-        return PostingCursor(thunks, max_doc_count=e.max_doc_count)
+            unit_index.append(k)
+            unit_payload.append(payload_nb)
+        cur = PostingCursor(
+            thunks,
+            max_doc_count=e.max_doc_count,
+            suspend_ctx=_SuspendCtx(
+                decoder=decoder,
+                chunk_clusters=chunk_clusters,
+                base_payload=base_payload,
+                unit_index=unit_index,
+                unit_payload=unit_payload,
+            ),
+        )
+        cur.resumed = resumed
+        return cur
 
     def lookup_ops(self, key: Hashable) -> int:
         """Device ops one search of this key costs (paper 5.7.3 criterion)."""

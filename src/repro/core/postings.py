@@ -255,6 +255,24 @@ class PostingDecoder:
         """Tail bytes buffered until the next feed completes their record."""
         return len(self._rem)
 
+    def state(self) -> Tuple[bytes, int, int, bool]:
+        """The full carry: (tail bytes, prev_doc, prev_pos, any-decoded).
+
+        With it a suspended stream resumes EXACTLY where it stopped:
+        restoring the tuple into a fresh decoder (this class or the
+        device-backed ``repro.kernels.posting_decode.ops.DeviceDecoder``,
+        which shares the format) and feeding the remaining bytes decodes
+        the same rows as an uninterrupted drain — the contract behind
+        partial-prefix cache admission (``ReaderCursor.settle``)."""
+        return (self._rem, self._prev_doc, self._prev_pos, self._any)
+
+    def set_state(self, state: Tuple[bytes, int, int, bool]) -> None:
+        rem, prev_doc, prev_pos, any_ = state
+        self._rem = bytes(rem)
+        self._prev_doc = int(prev_doc)
+        self._prev_pos = int(prev_pos)
+        self._any = bool(any_)
+
     def feed(self, data: bytes) -> Tuple[np.ndarray, np.ndarray]:
         """Decode every complete record of ``rem + data``; buffer the rest."""
         buf = self._rem + bytes(data)

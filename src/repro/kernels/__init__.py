@@ -13,4 +13,8 @@ Kernels:
   intersect       — sorted posting-list intersection as dense VPU tiles
                     (TPU adaptation of merge-intersection: no pointer
                     chasing, block-parallel compares)
+  posting_decode  — byte-parallel LEB128 varint posting decode (terminator
+                    scan → segmented sum → host delta expansion); wraps a
+                    DeviceDecoder drop-in for the scalar PostingDecoder
+                    plus the fused decode→intersect prefilter entry point
 """

@@ -1,0 +1,16 @@
+"""Device-resident varint posting decode (+ fused decode→intersect).
+
+``repro.core.postings.PostingDecoder`` is the host-side incremental
+decoder the lazy cursors feed chunk by chunk.  This package is its
+device-resident counterpart, mirroring ``repro.kernels.intersect``:
+
+  ref.py    — vectorized numpy oracle: the byte-parallel formulation of
+              the LEB128 record decode (terminator cumsum → per-byte
+              value ids/ranks → segmented payload sum → delta expansion)
+  kernel.py — the Pallas segmented-sum kernel over the byte-parallel
+              form (dense VPU tiles, block-corner range skip)
+  ops.py    — backend dispatch (numpy | jax segment_sum | pallas),
+              the cursor-compatible :class:`DeviceDecoder`, the fused
+              :func:`decode_member_prefilter` entry point, and the
+              int32 device-width gates
+"""

@@ -63,6 +63,9 @@ class CacheStats:
     invalidations: int = 0  # correctness drops: writer-generation changes
     full_drops: int = 0     # whole-namespace sweeps (no digest coverage)
     bytes_used: int = 0
+    pool_hits: int = 0       # chunk replays served by a batch ChunkPool
+    device_hits: int = 0     # cursors served from the device-buffer tier
+    partial_admits: int = 0  # settled prefixes admitted by early stops
 
     @property
     def hit_rate(self) -> float:
@@ -93,6 +96,14 @@ class PostingCache:
     def __init__(self, budget_bytes: int = 8 << 20):
         self.budget = int(budget_bytes)
         self._map: "OrderedDict[Tuple[str, Hashable], np.ndarray]" = OrderedDict()
+        # partial tier: (prefix rows, CursorResume) per slot — settled
+        # prefixes admitted by early-terminated cursors (ReaderCursor.settle)
+        self._partials: "OrderedDict[Tuple[str, Hashable], Tuple[np.ndarray, object]]" = (
+            OrderedDict()
+        )
+        # device tier: decoded rows pinned as device buffers (int32),
+        # admitted beside the host tier when a device-decode reader drains
+        self._device: "OrderedDict[Tuple[str, Hashable], object]" = OrderedDict()
         self.stats = CacheStats()
 
     def get(self, index_name: str, key: Hashable) -> Optional[np.ndarray]:
@@ -105,8 +116,31 @@ class PostingCache:
         self.stats.hits += 1
         return arr
 
-    def _charge(self, arr: np.ndarray) -> int:
-        return max(arr.nbytes, self.MIN_CHARGE)
+    def _charge(self, arr) -> int:
+        return max(int(arr.nbytes), self.MIN_CHARGE)
+
+    def _partial_charge(self, prefix: np.ndarray, resume) -> int:
+        return max(
+            int(prefix.nbytes) + len(resume.decoder_state[0]), self.MIN_CHARGE
+        )
+
+    def _evict(self) -> None:
+        # one byte budget across ALL tiers; reclaim order mirrors value
+        # density: full host lists first (cheapest to rebuild via the
+        # partial), then partials, then device buffers
+        while self.stats.bytes_used > self.budget:
+            if self._map:
+                _, victim = self._map.popitem(last=False)
+                self.stats.bytes_used -= self._charge(victim)
+            elif self._partials:
+                _, (pfx, res) = self._partials.popitem(last=False)
+                self.stats.bytes_used -= self._partial_charge(pfx, res)
+            elif self._device:
+                _, victim = self._device.popitem(last=False)
+                self.stats.bytes_used -= self._charge(victim)
+            else:
+                return
+            self.stats.evictions += 1
 
     def put(self, index_name: str, key: Hashable, arr: np.ndarray) -> None:
         if self._charge(arr) > self.budget:
@@ -115,6 +149,10 @@ class PostingCache:
         old = self._map.pop(slot, None)
         if old is not None:
             self.stats.bytes_used -= self._charge(old)
+        # a full list supersedes any cached partial of the same slot
+        part = self._partials.pop(slot, None)
+        if part is not None:
+            self.stats.bytes_used -= self._partial_charge(*part)
         owner = arr if arr.base is None else arr.base
         if not isinstance(owner, np.ndarray) or owner.flags.writeable:
             # an entry whose BUFFER is still writeable is not immutable:
@@ -126,11 +164,75 @@ class PostingCache:
         arr.flags.writeable = False
         self._map[slot] = arr
         self.stats.bytes_used += self._charge(arr)
-        while self.stats.bytes_used > self.budget and self._map:
-            _, victim = self._map.popitem(last=False)
-            self.stats.bytes_used -= self._charge(victim)
-            self.stats.evictions += 1
+        self._evict()
 
+    # ------------------------------------------------------ partial tier --
+    def get_partial(
+        self, index_name: str, key: Hashable
+    ) -> Optional[Tuple[np.ndarray, object]]:
+        """(prefix rows, resume token) for a slot, or None.  NOT counted
+        as a hit/miss — the partial tier shortens a miss, it does not
+        replace one."""
+        slot = (index_name, key)
+        entry = self._partials.get(slot)
+        if entry is None:
+            return None
+        self._partials.move_to_end(slot)
+        return entry
+
+    def put_partial(
+        self, index_name: str, key: Hashable, prefix: np.ndarray, resume
+    ) -> None:
+        """Admit an early-terminated cursor's settled prefix + resume
+        token.  Skipped when a FULL list for the slot is already cached
+        (strictly better)."""
+        slot = (index_name, key)
+        if slot in self._map:
+            return
+        charge = self._partial_charge(prefix, resume)
+        if charge > self.budget:
+            return
+        old = self._partials.pop(slot, None)
+        if old is not None:
+            self.stats.bytes_used -= self._partial_charge(*old)
+        self._partials[slot] = (_frozen(prefix), resume)
+        self.stats.bytes_used += charge
+        self.stats.partial_admits += 1
+        self._evict()
+
+    def drop_partial(self, index_name: str, key: Hashable) -> None:
+        """Discard one slot's partial (its resume token went stale)."""
+        entry = self._partials.pop((index_name, key), None)
+        if entry is not None:
+            self.stats.bytes_used -= self._partial_charge(*entry)
+
+    # ------------------------------------------------------- device tier --
+    def get_device(self, index_name: str, key: Hashable) -> Optional[object]:
+        """Device-resident decoded rows for a slot, or None."""
+        slot = (index_name, key)
+        buf = self._device.get(slot)
+        if buf is None:
+            return None
+        self._device.move_to_end(slot)
+        self.stats.device_hits += 1
+        return buf
+
+    def put_device(self, index_name: str, key: Hashable, buf) -> None:
+        """Pin a decoded list as a device buffer beside the host entry.
+        The buffer shares the byte budget (charged at its nbytes)."""
+        if buf is None:
+            return
+        if self._charge(buf) > self.budget:
+            return
+        slot = (index_name, key)
+        old = self._device.pop(slot, None)
+        if old is not None:
+            self.stats.bytes_used -= self._charge(old)
+        self._device[slot] = buf
+        self.stats.bytes_used += self._charge(buf)
+        self._evict()
+
+    # ----------------------------------------------------- invalidation --
     def drop_index(self, index_name: str) -> None:
         """Invalidate every entry of one index namespace (writer advanced).
 
@@ -138,10 +240,20 @@ class PostingCache:
         capacity-pressure signal — and each entry reclaims the same
         ``_charge`` (nbytes with the ``MIN_CHARGE`` floor) it was admitted
         at, so ``bytes_used`` returns exactly to its pre-admission level
-        even for floor-charged (e.g. negative-cache) entries."""
+        even for floor-charged (e.g. negative-cache) entries.  Sweeps ALL
+        tiers: a stale device buffer or resume token is as poisonous as a
+        stale host list."""
         stale = [k for k in self._map if k[0] == index_name]
         for k in stale:
             self.stats.bytes_used -= self._charge(self._map.pop(k))
+            self.stats.invalidations += 1
+        stale_p = [k for k in self._partials if k[0] == index_name]
+        for k in stale_p:
+            self.stats.bytes_used -= self._partial_charge(*self._partials.pop(k))
+            self.stats.invalidations += 1
+        stale_d = [k for k in self._device if k[0] == index_name]
+        for k in stale_d:
+            self.stats.bytes_used -= self._charge(self._device.pop(k))
             self.stats.invalidations += 1
         self.stats.full_drops += 1
 
@@ -155,15 +267,28 @@ class PostingCache:
         refresh that walked the digest union would cost update-sized
         work per reader even when almost none of it is cached.  Each
         dropped entry counts as an ``invalidation`` and reclaims its
-        admission ``_charge``.  Returns the number of entries dropped."""
-        stale = [
-            slot for slot in self._map
-            if slot[0] == index_name and any(slot[1] in d for d in digests)
-        ]
+        admission ``_charge``.  Applies to every tier (host, partial,
+        device) under the same digest test.  Returns the number of
+        entries dropped."""
+
+        def touched(slot) -> bool:
+            return slot[0] == index_name and any(slot[1] in d for d in digests)
+
+        stale = [slot for slot in self._map if touched(slot)]
         for slot in stale:
             self.stats.bytes_used -= self._charge(self._map.pop(slot))
             self.stats.invalidations += 1
-        return len(stale)
+        stale_p = [slot for slot in self._partials if touched(slot)]
+        for slot in stale_p:
+            self.stats.bytes_used -= self._partial_charge(
+                *self._partials.pop(slot)
+            )
+            self.stats.invalidations += 1
+        stale_d = [slot for slot in self._device if touched(slot)]
+        for slot in stale_d:
+            self.stats.bytes_used -= self._charge(self._device.pop(slot))
+            self.stats.invalidations += 1
+        return len(stale) + len(stale_p) + len(stale_d)
 
     def __len__(self) -> int:
         return len(self._map)
@@ -176,8 +301,11 @@ class ReaderCursor:
     miss wraps the index's chunked :class:`PostingCursor` and — only if
     the cursor drains completely — assembles the full list and admits it
     to the cache, so the next reader of the key pays nothing.  An
-    early-terminated cursor never caches a partial list (a later lookup
-    must re-read; serving a truncated list would be silent corruption).
+    early-terminated cursor never caches a partial list AS a full list
+    (serving a truncated list would be silent corruption) — but via
+    :meth:`settle` it CAN admit its settled prefix plus a resume token
+    to the cache's partial tier, so the next reader of the key replays
+    the decoded prefix for free and pays I/O only past the stop point.
 
     ``generation`` pins the reader's writer-snapshot at open time: the
     cursor keeps serving that snapshot however long it stays open, and
@@ -190,9 +318,11 @@ class ReaderCursor:
         inner: PostingCursor,
         on_complete: Optional[Callable[[np.ndarray], None]] = None,
         generation: Optional[int] = None,
+        on_partial: Optional[Callable[[np.ndarray, object], None]] = None,
     ):
         self._inner = inner
         self._on_complete = on_complete
+        self._on_partial = on_partial
         self._parts: List[np.ndarray] = []
         self._completed = False
         self.generation = generation
@@ -202,7 +332,9 @@ class ReaderCursor:
         if chunk is None:
             self._complete()
             return None
-        if chunk.shape[0] and self._on_complete is not None:
+        if chunk.shape[0] and (
+            self._on_complete is not None or self._on_partial is not None
+        ):
             self._parts.append(chunk)
         if self._inner.exhausted:
             # the consumer has every chunk: admit the full list NOW — a
@@ -227,6 +359,33 @@ class ReaderCursor:
             # cache a view over a buffer the consumer can still reach
             full = _frozen(full)
             self._on_complete(full)
+
+    def settle(self) -> bool:
+        """Admit this cursor's settled prefix to the partial cache tier.
+
+        Called by the executor when a query early-terminates: the chunks
+        delivered so far plus the inner cursor's resume token (decoder
+        carry included) let the NEXT reader of the key replay the prefix
+        at zero I/O and fetch only past the stop point.  A no-op (False)
+        when the drain completed (the full list was already admitted),
+        no partial sink is wired, or the inner cursor has nothing worth
+        resuming (e.g. it never fetched a real storage unit)."""
+        if self._completed or self._on_partial is None:
+            return False
+        suspend = getattr(self._inner, "suspend", None)
+        if suspend is None:
+            return False
+        resume = suspend()
+        if resume is None:
+            return False
+        if not self._parts:
+            prefix = np.zeros((0, 2), dtype=np.int64)
+        elif len(self._parts) == 1:
+            prefix = self._parts[0]
+        else:
+            prefix = np.concatenate(self._parts, axis=0)
+        self._on_partial(_frozen(prefix), resume)
+        return True
 
     def read_all(self) -> np.ndarray:
         """Drain the remaining chunks through :meth:`next_chunk` (NEVER
@@ -301,12 +460,25 @@ class IndexReader:
         return posts
 
     def open_cursor(
-        self, key: Hashable, chunk_clusters: int = CURSOR_CHUNK_CLUSTERS
+        self,
+        key: Hashable,
+        chunk_clusters: int = CURSOR_CHUNK_CLUSTERS,
+        make_decoder: Optional[Callable[[], object]] = None,
+        device_tier: bool = False,
     ) -> ReaderCursor:
         """Lazy chunked :meth:`lookup` — the streaming executor's fetch
         primitive.  Cache hits serve one zero-I/O chunk; misses read the
         key's storage units on demand and cache the full list only if the
-        cursor drains completely."""
+        cursor drains completely.
+
+        Hit order: host tier, then device tier (``device_tier=True``:
+        decoded rows pinned as device buffers are rematerialized without
+        touching storage), then the partial tier (a settled prefix +
+        resume token replays for free and fetches only past the stop
+        point), then a fresh storage read.  ``make_decoder`` swaps the
+        OWN-stream decoder (e.g. the device-backed one); a full drain
+        additionally pins the rows on device when ``device_tier`` is set
+        and the values fit the device integer."""
         if self.index.n_parts != self._generation:
             self.refresh()
         gen = self._generation
@@ -315,10 +487,35 @@ class IndexReader:
             if hit is not None:
                 return ReaderCursor(PostingCursor.from_array(hit),
                                     generation=gen)
-        inner = self.index.open_cursor(
-            key, device=self.device, chunk_clusters=chunk_clusters
+            if device_tier:
+                dev_buf = self.cache.get_device(self.cache_ns, key)
+                if dev_buf is not None:
+                    from repro.kernels.posting_decode.ops import from_device_rows
+
+                    return ReaderCursor(
+                        PostingCursor.from_array(from_device_rows(dev_buf)),
+                        generation=gen,
+                    )
+        resume_entry = (
+            self.cache.get_partial(self.cache_ns, key)
+            if self.cache is not None else None
         )
+        prefix, resume = resume_entry if resume_entry is not None else (None, None)
+        inner = self.index.open_cursor(
+            key,
+            device=self.device,
+            chunk_clusters=chunk_clusters,
+            make_decoder=make_decoder,
+            resume=resume,
+            prefix=prefix,
+        )
+        if resume is not None and not inner.resumed:
+            # the token no longer matches the stream's unit layout (the
+            # key was repacked without a digest naming it — e.g. its
+            # strategy changed): drop it so it is not retried forever
+            self.cache.drop_partial(self.cache_ns, key)
         on_complete = None
+        on_partial = None
         if self.cache is not None:
             def on_complete(full, key=key, gen=gen):
                 # admit-time generation re-check: a cursor that stayed
@@ -331,7 +528,20 @@ class IndexReader:
                 if self.index.n_parts != gen:
                     return
                 self.cache.put(self.cache_ns, key, full)
-        return ReaderCursor(inner, on_complete, generation=gen)
+                if device_tier:
+                    from repro.kernels.posting_decode.ops import to_device_rows
+
+                    self.cache.put_device(
+                        self.cache_ns, key, to_device_rows(full)
+                    )
+
+            def on_partial(prefix, resume, key=key, gen=gen):
+                # same mid-drain staleness rule as full admission
+                if self.index.n_parts != gen:
+                    return
+                self.cache.put_partial(self.cache_ns, key, prefix, resume)
+        return ReaderCursor(inner, on_complete, generation=gen,
+                            on_partial=on_partial)
 
     def lookup_ops(self, key: Hashable) -> int:
         return self.index.lookup_ops(key)
@@ -406,13 +616,16 @@ class IndexSetReader:
         return self.readers[index_name].lookup(key)
 
     def open_cursor_shard(
-        self, shard: int, index_name: str, key: Hashable
+        self, shard: int, index_name: str, key: Hashable,
+        make_decoder=None, device_tier: bool = False,
     ) -> ReaderCursor:
         """Lazy cursor over one shard's posting subset (the streaming
         executor's scatter primitive; shard 0 is the whole set here)."""
         if shard != 0:
             raise IndexError(f"unsharded reader has one shard, got {shard}")
-        return self.readers[index_name].open_cursor(key)
+        return self.readers[index_name].open_cursor(
+            key, make_decoder=make_decoder, device_tier=device_tier
+        )
 
     def group_of(self, index_name: str, key: Hashable) -> int:
         return self.readers[index_name].group_of(key)
@@ -478,12 +691,15 @@ class ShardedIndexSetReader:
         return self.shard_readers[shard][index_name].lookup(key)
 
     def open_cursor_shard(
-        self, shard: int, index_name: str, key: Hashable
+        self, shard: int, index_name: str, key: Hashable,
+        make_decoder=None, device_tier: bool = False,
     ) -> ReaderCursor:
         """Lazy cursor over one shard's posting subset.  Per-shard cursors
         share the set-wide posting cache under the shard's namespace, so a
         fully drained cursor warms exactly the slot ``lookup_shard`` uses."""
-        return self.shard_readers[shard][index_name].open_cursor(key)
+        return self.shard_readers[shard][index_name].open_cursor(
+            key, make_decoder=make_decoder, device_tier=device_tier
+        )
 
     def lookup(self, index_name: str, key: Hashable) -> np.ndarray:
         """Whole-set lookup: scatter to every shard, gather by merge."""

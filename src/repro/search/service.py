@@ -66,6 +66,8 @@ from repro.search.plan import (
     plan_batch,
 )
 from repro.core.inverted_index import PostingCursor
+from repro.kernels.posting_decode.ops import DeviceDecoder
+from repro.search.pool import ChunkPool
 from repro.search.reader import IndexSetReader, ShardedIndexSetReader
 from repro.search.scoring import (
     doc_counts,
@@ -119,6 +121,16 @@ class SearchService:
     (executed per (query, shard) pair).  ``prefetch=False`` disables the
     pipelined fetch worker (pure in-order fetching — same results, used
     by the equivalence tests as the sequential oracle).
+
+    ``share_chunks`` pools the streaming stage's physical posting drains
+    across the queries of one batch: N queries over the same hot
+    (shard, index, key) read each chunk once and replay it N-1 times
+    (``last_trace['topk']`` ledgers replays as ``chunks_shared``).
+    ``device_decode`` swaps the OWN-stream varint decoder for the
+    device-backed one and pins fully-drained hot lists as device
+    buffers in the posting cache; defaults to on for the jax/pallas
+    backends, off for numpy/callable.  Both knobs change I/O and
+    residency only — results stay element-wise identical.
     """
 
     def __init__(
@@ -129,6 +141,8 @@ class SearchService:
         cache_bytes: int = 8 << 20,
         use_multi: bool = True,
         prefetch: bool = True,
+        share_chunks: bool = True,
+        device_decode: Optional[bool] = None,
     ):
         if isinstance(source, (IndexSetReader, ShardedIndexSetReader)):
             self.reader = source
@@ -158,6 +172,19 @@ class SearchService:
                 f"unknown backend {backend!r}; expected one of "
                 f"{sorted(JOIN_BACKENDS)} or a callable"
             )
+        self.share_chunks = bool(share_chunks)
+        if device_decode is None:
+            device_decode = self.backend in ("jax", "pallas")
+        self.device_decode = bool(device_decode)
+        if self.device_decode:
+            dec_backend = (
+                self.backend if self.backend in ("jax", "pallas") else "jax"
+            )
+            self._make_decoder: Optional[Callable[[], DeviceDecoder]] = (
+                lambda: DeviceDecoder(backend=dec_backend)
+            )
+        else:
+            self._make_decoder = None
 
     @property
     def n_shards(self) -> int:
@@ -265,6 +292,9 @@ class SearchService:
                 "invalidations": cs.invalidations,
                 "full_drops": cs.full_drops,
                 "bytes_used": cs.bytes_used,
+                "pool_hits": cs.pool_hits,
+                "device_hits": cs.device_hits,
+                "partial_admits": cs.partial_admits,
             }
         comp = getattr(self.index_set, "compaction_stats", None)
         if comp is not None:
@@ -493,7 +523,15 @@ class SearchService:
         chunks-fetched/skipped and bytes-saved observability into
         ``last_trace['topk']``.  ``posts`` carries the batch stage's
         already-fetched lookups: a key shared with a batch query streams
-        from those rows at zero extra device I/O instead of re-reading."""
+        from those rows at zero extra device I/O instead of re-reading.
+
+        With ``share_chunks`` a batch-lifetime :class:`ChunkPool`
+        deduplicates the physical drains: queries hitting the same
+        (shard, index, key) replay pooled chunks (``chunks_shared``)
+        instead of re-fetching.  After the whole batch, every physical
+        cursor that early-terminated is *settled* — its decoded prefix
+        and resume token go to the cache's partial tier, so the NEXT
+        batch of the same hot keys replays the prefix at zero I/O."""
         if not streaming:
             return
         t = {"queries": len(streaming), "ranked_queries": 0,
@@ -503,10 +541,27 @@ class SearchService:
              "early_terminated": 0, "threshold_stops": 0, "bound_stops": 0,
              "fully_drained": 0, "threshold_checks": 0,
              "chunks_planned": 0, "chunks_fetched": 0, "chunks_skipped": 0,
-             "bytes_planned": 0, "bytes_fetched": 0, "bytes_skipped": 0}
+             "chunks_shared": 0,
+             "bytes_planned": 0, "bytes_fetched": 0, "bytes_skipped": 0,
+             "bytes_shared": 0,
+             "query_s": []}
+        pool = (
+            ChunkPool(stats=self.reader.cache_stats)
+            if self.share_chunks else None
+        )
+        # physical ReaderCursors opened by this stage (pooled: one per
+        # distinct identity), settled once after the batch
+        settle: List[object] = []
         for qi in streaming:
+            t0 = time.perf_counter()
             results[qi] = self._search_topk(plan.queries[qi], t,
-                                            posts or {})
+                                            posts or {}, pool, settle)
+            t["query_s"].append(time.perf_counter() - t0)
+        t["pool_streams"] = len(pool) if pool is not None else 0
+        for rc in settle:
+            settler = getattr(rc, "settle", None)
+            if settler is not None:
+                settler()
         self.last_trace["topk"] = t
 
     def _search_topk(
@@ -514,6 +569,8 @@ class SearchService:
         pq,
         trace: Dict[str, int],
         posts: Dict[Tuple[str, int], ShardPosts],
+        pool: Optional[ChunkPool] = None,
+        settle: Optional[List[object]] = None,
     ) -> QueryResult:
         """Best-k execution of one query over per-(lookup, shard) cursors.
 
@@ -560,13 +617,30 @@ class SearchService:
                 idents.append(lk)
         lookup_slots = [slot[(lk.index, lk.key)] for lk in pq.lookups]
 
-        def open_cursor(s: int, lk: KeyLookup):
+        def open_physical(s: int, lk: KeyLookup):
             fetched = posts.get((lk.index, lk.key))
             if fetched is not None:
                 # the batch waves already read this key: stream its rows
                 # as one zero-I/O chunk (same shape as a cache hit)
                 return PostingCursor.from_array(fetched[s])
-            return self.reader.open_cursor_shard(s, lk.index, lk.key)
+            c = self.reader.open_cursor_shard(
+                s, lk.index, lk.key,
+                make_decoder=self._make_decoder,
+                device_tier=self.device_decode,
+            )
+            if settle is not None:
+                settle.append(c)
+            return c
+
+        def open_cursor(s: int, lk: KeyLookup):
+            if pool is None:
+                return open_physical(s, lk)
+            # pool identity is the full (shard, index, key): shards hold
+            # disjoint doc sets and must never share a drain
+            return pool.cursor(
+                (s, lk.index, lk.key),
+                lambda s=s, lk=lk: open_physical(s, lk),
+            )
 
         cursors = [
             [open_cursor(s, lk) for s in range(S)]
@@ -666,9 +740,11 @@ class SearchService:
             trace["chunks_planned"] += c.chunks_total
             trace["chunks_fetched"] += c.chunks_fetched
             trace["chunks_skipped"] += c.chunks_skipped
+            trace["chunks_shared"] += c.chunks_shared
             trace["bytes_planned"] += c.bytes_total
             trace["bytes_fetched"] += c.bytes_fetched
             trace["bytes_skipped"] += c.bytes_skipped
+            trace["bytes_shared"] += c.bytes_shared
 
         log = [(lk.index, lk.key) for lk in pq.lookups]
         # count delivered postings per LOOKUP OCCURRENCE (a duplicated
@@ -827,15 +903,27 @@ class SearchService:
                     f"ranked_queries {tk['ranked_queries']} outside "
                     f"[0, {tk['queries']}]"
                 )
-            if tk["chunks_planned"] != tk["chunks_fetched"] + tk["chunks_skipped"]:
+            # shared chunks are replays of a chunk some OTHER view of the
+            # same pooled stream physically fetched: per cursor view,
+            # planned partitions into fetched (this view paid the I/O),
+            # shared (replayed from the pool at zero I/O) and skipped —
+            # so summed over a batch, chunks_fetched counts every
+            # physical chunk EXACTLY once however many queries read it
+            shared = tk.get("chunks_shared", 0)
+            if tk["chunks_planned"] != (
+                tk["chunks_fetched"] + tk["chunks_skipped"] + shared
+            ):
                 raise TraceIncompleteError(
                     f"cursor chunks planned {tk['chunks_planned']} != "
                     f"fetched {tk['chunks_fetched']} + skipped "
-                    f"{tk['chunks_skipped']}"
+                    f"{tk['chunks_skipped']} + shared {shared}"
                 )
-            if tk["bytes_planned"] != tk["bytes_fetched"] + tk["bytes_skipped"]:
+            bshared = tk.get("bytes_shared", 0)
+            if tk["bytes_planned"] != (
+                tk["bytes_fetched"] + tk["bytes_skipped"] + bshared
+            ):
                 raise TraceIncompleteError(
                     f"cursor bytes planned {tk['bytes_planned']} != "
                     f"fetched {tk['bytes_fetched']} + skipped "
-                    f"{tk['bytes_skipped']}"
+                    f"{tk['bytes_skipped']} + shared {bshared}"
                 )

@@ -1,0 +1,299 @@
+"""Cross-query chunk pool + the posting cache's partial/device tiers.
+
+Pins the PR's perf contract from every side:
+
+  * the pool: one physical drain per (shard, index, key) identity per
+    batch — replaying views cost zero device I/O, physical bytes are
+    charged to exactly one view, and every view's three-term ledger
+    (fetched + shared + skipped == planned) stays exact however the
+    views interleave;
+  * the service: a hot-vocabulary batch through pooled cursors is
+    element-wise identical to per-query cursors while ledgering
+    ``chunks_shared``/``bytes_shared`` and passing the extended
+    ``check_trace_complete`` invariant;
+  * the partial tier (streaming-cache asymmetry fix): back-to-back
+    identical batches re-fetch STRICTLY fewer bytes because early
+    stops now admit their settled prefix + resume token, and a resumed
+    cursor decodes exactly what a cold full drain would;
+  * the device tier: a drained hot key pinned as a device buffer keeps
+    serving identical rows after its host entry is gone, at zero
+    storage reads;
+  * invalidation: a writer update sweeps partial and device entries
+    alongside host lists — a stale resume token or device buffer is as
+    poisonous as a stale list.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.io_sim import BlockDevice
+from repro.search import Query, SearchService
+from repro.search.pool import ChunkPool
+from repro.search.reader import CacheStats
+from tests.oracles import assert_results_identical
+from tests.test_topk import _hot_phrases
+
+
+@pytest.fixture(scope="module")
+def hot_world():
+    """The bench's own hot-vocabulary corpus and geometry (multi keys are
+    multi-chunk stream-backed lists — the regime where sharing and
+    partial resume have something to save)."""
+    from benchmarks.common import HOT_GEOMETRY, build_index_set, make_hot_world
+
+    world = make_hot_world(scale=0.05)
+    ts = build_index_set(world, "set2", **HOT_GEOMETRY)
+    return world.lexicon, world.parts, ts
+
+
+def _read_bytes(ts) -> int:
+    return sum(s.read_bytes for s in ts.search_io().values())
+
+
+def _stream_keys(lex, toks, ts, n=4):
+    """Multi-index keys whose posting lists span several chunks."""
+    mi = ts.indexes["multi"]
+    keys = []
+    for words in _hot_phrases(lex, toks, n=n, ts=ts):
+        lemmas, _ = lex.classify_words(np.asarray(words, np.int64))
+        keys.append(mi.pack([int(x) for x in lemmas]))
+    return keys
+
+
+# ------------------------------------------------------- pool mechanics --
+def test_pool_one_physical_drain_many_views(hot_world):
+    lex, parts, ts = hot_world
+    key = _stream_keys(lex, parts[0][0], ts, n=1)[0]
+    reader = ts.reader(cache_bytes=0)  # cache off: every byte is physical
+    stats = CacheStats()
+    pool = ChunkPool(stats=stats)
+    ident = (0, "multi", key)
+
+    def opener():
+        return reader.open_cursor_shard(0, "multi", key)
+
+    views = [pool.cursor(ident, opener) for _ in range(3)]
+    assert len(pool) == 1  # one shared stream behind all three
+
+    b0 = _read_bytes(ts)
+    first = views[0].read_all()
+    drained = _read_bytes(ts) - b0
+    assert views[0].chunks_fetched > 1  # genuinely multi-chunk
+    assert drained > 0
+
+    # the other views replay the recorded chunks at ZERO device I/O
+    b0 = _read_bytes(ts)
+    for v in views[1:]:
+        assert (v.read_all() == first).all()
+    assert _read_bytes(ts) - b0 == 0
+    for v in views[1:]:
+        assert v.chunks_fetched == 0 and v.bytes_fetched == 0
+        assert v.chunks_shared == views[0].chunks_fetched
+        assert v.bytes_shared == views[0].bytes_fetched
+
+    # physical charges land on exactly one view; the pool ledgers the rest
+    phys = pool.streams()[0]
+    assert sum(v.chunks_fetched for v in views) == phys.chunks_fetched
+    assert sum(v.bytes_fetched for v in views) == phys.bytes_fetched
+    assert stats.pool_hits == sum(v.chunks_shared for v in views)
+    # per-view three-term invariant — the trace's partition, per cursor
+    for v in views:
+        assert v.exhausted
+        assert v.chunks_fetched + v.chunks_shared + v.chunks_skipped \
+            == v.chunks_total
+        assert v.bytes_fetched + v.bytes_shared + v.bytes_skipped \
+            == v.bytes_total
+
+
+def test_pool_interleaved_views_charge_each_fetch_once(hot_world):
+    """Round-robin advancement rotates frontier ownership across views:
+    whoever advances the shared frontier pays the fetch, everyone else
+    replays — summed per-view charges equal the physical cursor's, and
+    every view still sees the identical full chunk sequence."""
+    lex, parts, ts = hot_world
+    key = _stream_keys(lex, parts[0][0], ts, n=1)[0]
+    reader = ts.reader(cache_bytes=0)
+    pool = ChunkPool()
+    views = [
+        pool.cursor((0, "multi", key),
+                    lambda: reader.open_cursor_shard(0, "multi", key))
+        for _ in range(3)
+    ]
+    seqs = [[] for _ in views]
+    done = [False] * len(views)
+    r = 0
+    while not all(done):
+        order = list(range(len(views)))
+        order = order[r % 3:] + order[: r % 3]
+        for i in order:
+            if done[i]:
+                continue
+            chunk = views[i].next_chunk()
+            if chunk is None:
+                done[i] = True
+            elif chunk.shape[0]:
+                seqs[i].append(chunk)
+        r += 1
+    phys = pool.streams()[0]
+    assert sum(v.chunks_fetched for v in views) == phys.chunks_fetched
+    assert sum(v.bytes_fetched for v in views) == phys.bytes_fetched
+    # rotation spread ownership: no single view paid for everything
+    assert sum(1 for v in views if v.chunks_fetched > 0) >= 2
+    rows = [np.concatenate(s) for s in seqs]
+    assert all((r_ == rows[0]).all() for r_ in rows[1:])
+    for v in views:
+        assert v.chunks_shared > 0
+        assert v.chunks_fetched + v.chunks_shared + v.chunks_skipped \
+            == v.chunks_total
+
+
+# ---------------------------------------------------- service-level pool --
+def test_service_hot_batch_shares_chunks_identical_results(hot_world):
+    lex, parts, ts = hot_world
+    phrases = _hot_phrases(lex, parts[0][0], n=4, ts=ts)
+    queries = [
+        Query(phrases[i % len(phrases)], phrase=True, top_k=3)
+        for i in range(16)
+    ]
+    base = SearchService(ts, window=3, cache_bytes=0, share_chunks=False,
+                         device_decode=False)
+    pooled = SearchService(ts, window=3, cache_bytes=0, share_chunks=True,
+                           device_decode=False)
+
+    b0 = _read_bytes(ts)
+    ref = base.search_batch(queries)
+    base_bytes = _read_bytes(ts) - b0
+    base.check_trace_complete()
+
+    b0 = _read_bytes(ts)
+    got = pooled.search_batch(queries)
+    pooled_bytes = _read_bytes(ts) - b0
+    pooled.check_trace_complete()
+
+    for q, r, g in zip(queries, ref, got):
+        assert_results_identical(r, g, ctx=q)
+    tk = pooled.last_trace["topk"]
+    assert tk["chunks_shared"] > 0 and tk["bytes_shared"] > 0
+    assert 0 < tk["pool_streams"] < len(queries)
+    assert pooled_bytes < base_bytes, (pooled_bytes, base_bytes)
+
+
+# ------------------------------------------------------- partial tier --
+def test_partial_admission_cuts_refetch_on_repeat_batch(hot_world):
+    """Satellite regression (streaming-cache asymmetry): an identical
+    batch repeated back-to-back re-fetches STRICTLY fewer bytes, because
+    early-terminated cursors now admit their settled prefix + resume
+    token instead of discarding the work."""
+    lex, parts, ts = hot_world
+    phrases = _hot_phrases(lex, parts[0][0], n=5, ts=ts)
+    queries = [Query(w, phrase=True, top_k=2) for w in phrases]
+    svc = SearchService(ts, window=3, backend="jax", cache_bytes=1 << 20)
+
+    b0 = _read_bytes(ts)
+    r1 = svc.search_batch(queries)
+    pass1 = _read_bytes(ts) - b0
+    st = svc.reader.cache.stats
+    assert st.partial_admits > 0, "early stops must settle their prefixes"
+
+    b0 = _read_bytes(ts)
+    r2 = svc.search_batch(queries)
+    pass2 = _read_bytes(ts) - b0
+    for q, a, b in zip(queries, r1, r2):
+        assert_results_identical(a, b, ctx=q)
+    assert pass2 < pass1, (pass2, pass1)
+    svc.check_trace_complete()
+
+
+def test_resumed_cursor_matches_cold_full_drain(hot_world):
+    lex, parts, ts = hot_world
+    key = _stream_keys(lex, parts[0][0], ts, n=2)[1]
+    reader = ts.reader(cache_bytes=1 << 20)
+    ir = reader.readers["multi"]
+
+    cur = ir.open_cursor(key)
+    head = cur.next_chunk()
+    assert head is not None and not cur.exhausted
+    full_total = cur.bytes_total
+    consumed = cur.bytes_fetched
+    assert 0 < consumed < full_total
+    assert cur.settle()  # early stop: admit prefix + resume token
+    assert reader.cache.stats.partial_admits == 1
+
+    cur2 = ir.open_cursor(key)
+    assert cur2.resumed  # served from the partial tier
+    rows = cur2.read_all()
+    cold = ts.indexes["multi"].lookup(
+        key, device=BlockDevice(cluster_size=256)
+    )
+    assert (rows == cold).all()
+    # the prefix replays as a zero-charge thunk: the resumed plan covers
+    # only the remainder, and the two drains together pay the stream's
+    # bytes exactly once
+    assert cur2.bytes_total == full_total - consumed
+    assert cur2.bytes_fetched == cur2.bytes_total
+    # the completed resume drain admitted the FULL list: third open is
+    # a pure cache hit serving one zero-I/O chunk
+    cur3 = ir.open_cursor(key)
+    assert (cur3.read_all() == cold).all()
+    assert cur3.bytes_fetched == 0
+
+
+# -------------------------------------------------------- device tier --
+def test_device_tier_serves_after_host_entry_dropped(hot_world):
+    lex, parts, ts = hot_world
+    key = _stream_keys(lex, parts[0][0], ts, n=3)[2]
+    reader = ts.reader(cache_bytes=1 << 20)
+    ir = reader.readers["multi"]
+    full = ir.open_cursor(key, device_tier=True).read_all()
+
+    # the eviction order drops host lists before device buffers; model
+    # that pressure by clearing the host tier directly
+    reader.cache._map.clear()
+
+    b0 = _read_bytes(ts)
+    cur = ir.open_cursor(key, device_tier=True)
+    rows = cur.read_all()
+    assert reader.cache.stats.device_hits == 1
+    assert (rows == full).all()
+    assert rows.dtype == np.int64
+    assert _read_bytes(ts) - b0 == 0  # rematerialized, not re-read
+
+
+# ------------------------------------------------------- invalidation --
+def test_writer_update_invalidates_partial_and_device_tiers():
+    from benchmarks.common import HOT_GEOMETRY, bench_index_config
+    from benchmarks.common import make_hot_world
+    from repro.core.text_index import TextIndexSet
+
+    world = make_hot_world(scale=0.05, seed=1)
+    ts = TextIndexSet(bench_index_config("set2", **HOT_GEOMETRY),
+                      world.lexicon, seed=0)
+    ts.add_documents(*world.parts[0], world.doc_starts[0])
+    reader = ts.reader(cache_bytes=1 << 20)
+    ir = reader.readers["multi"]
+    keys = _stream_keys(world.lexicon, world.parts[0][0], ts, n=2)
+
+    # admit one device entry (full drain) and one partial (early stop)
+    ir.open_cursor(keys[0], device_tier=True).read_all()
+    cur = ir.open_cursor(keys[1])
+    cur.next_chunk()
+    assert cur.settle()
+    cache = reader.cache
+    assert ("multi", keys[0]) in cache._device
+    assert ("multi", keys[1]) in cache._partials
+
+    ts.add_documents(*world.parts[1], world.doc_starts[1])
+    ir.refresh()
+    # hot keys are touched by every hot part: both entries must be gone
+    # (via digest or namespace sweep), counted as invalidations
+    assert ("multi", keys[0]) not in cache._device
+    assert ("multi", keys[1]) not in cache._partials
+    assert cache.stats.invalidations > 0
+
+    # and the re-read serves the NEW generation, not a stale replay
+    fresh = ts.indexes["multi"].lookup(
+        keys[1], device=BlockDevice(cluster_size=256)
+    )
+    got = ir.open_cursor(keys[1]).read_all()
+    assert not got.flags.writeable
+    assert (got == fresh).all()

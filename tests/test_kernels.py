@@ -15,6 +15,21 @@ from repro.kernels.intersect.ops import intersect_sorted
 from repro.kernels.intersect.ref import intersect_sorted_ref
 from repro.kernels.paged_attention.ops import paged_attention
 from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.core.postings import PostingDecoder, encode_postings, encode_varint
+from repro.kernels.posting_decode.ops import (
+    DECODE_BACKENDS,
+    DeviceDecoder,
+    decode_member_prefilter,
+    from_device_rows,
+    to_device_rows,
+    unpack_varints,
+)
+from repro.kernels.posting_decode.ref import (
+    as_byte_array,
+    complete_prefix,
+    decode_block_ref,
+    unpack_varints_np,
+)
 
 RNG = np.random.RandomState(7)
 
@@ -118,3 +133,169 @@ def test_intersect_disjoint_and_identical():
     b = np.arange(1000, 1100, dtype=np.int32)
     assert not np.asarray(intersect_sorted(a, b)).any()
     assert np.asarray(intersect_sorted(a, a)).all()
+
+
+# ----------------------------------------------- posting decode parity --
+def _posting_stream(n, seed, max_doc=50, max_pos=200_000):
+    rng = np.random.RandomState(seed)
+    arr = np.stack(
+        [np.sort(rng.randint(0, max_doc, n)), rng.randint(0, max_pos, n)], 1
+    ).astype(np.int64)
+    arr = arr[np.lexsort((arr[:, 1], arr[:, 0]))]
+    return arr, encode_postings(arr)
+
+
+def _varint_buf(values):
+    buf = bytearray()
+    for v in values:
+        encode_varint(int(v), buf)
+    return bytes(buf)
+
+
+@pytest.mark.parametrize("backend", DECODE_BACKENDS)
+def test_unpack_varints_backend_parity(backend):
+    """unpack_varints agrees bit-for-bit with the host oracle on every
+    backend, across widths 1..5 bytes — the 5-byte sweep exceeds the
+    int32 device gate, so jax/pallas must take the exact fallback."""
+    rng = np.random.RandomState(21)
+    for width in (1, 2, 3, 4, 5):
+        vals = rng.randint(
+            0, 1 << (7 * width), size=rng.randint(1, 400)
+        ).astype(np.int64)
+        buf = _varint_buf(vals)
+        got = unpack_varints(buf, backend=backend)
+        want = unpack_varints_np(as_byte_array(buf))
+        assert got.dtype == np.int64
+        assert (got == want).all() and (want == vals).all()
+
+
+@pytest.mark.parametrize("backend", DECODE_BACKENDS)
+def test_unpack_varints_wide_values_exact(backend):
+    """Values past 28 payload bits (up to near 2^63) stay exact — the
+    device paths detect the wide varint and defer to host int64."""
+    wide = [3, 1 << 40, 127, (1 << 62) - 5, 0, 1 << 28]
+    got = unpack_varints(_varint_buf(wide), backend=backend)
+    assert got.tolist() == wide
+
+
+def test_unpack_varints_unknown_backend_rejected():
+    with pytest.raises(ValueError):
+        unpack_varints(b"\x01", backend="cuda")
+    with pytest.raises(ValueError):
+        DeviceDecoder(backend="cuda")
+
+
+@pytest.mark.parametrize("backend", DECODE_BACKENDS)
+def test_device_decoder_matches_host_under_random_chunkings(backend):
+    """DeviceDecoder == PostingDecoder bit-for-bit on the same stream fed
+    through random chunk boundaries (including cuts inside varints), and
+    their carry states stay interchangeable throughout."""
+    arr, enc = _posting_stream(300, seed=31)
+    rng = np.random.RandomState(hash(backend) % (1 << 31))
+    raw = np.frombuffer(enc, np.uint8)
+    for _ in range(4):
+        cuts = np.sort(
+            rng.choice(len(enc), size=rng.randint(0, 12), replace=False)
+        )
+        host, dev = PostingDecoder(), DeviceDecoder(backend=backend)
+        hrows, drows = [], []
+        for c in np.split(raw, cuts):
+            hrows.append(host.feed(c.tobytes())[0])
+            drows.append(dev.feed(c.tobytes())[0])
+            assert host.state() == dev.state()
+        h = np.concatenate(hrows)
+        assert (h == np.concatenate(drows)).all()
+        assert (h == arr).all()
+
+
+def test_decoder_suspend_under_one_resume_under_other():
+    """The carry tuple is decoder-portable: suspend a stream under the
+    host decoder and resume under the device one (and vice versa) —
+    the contract that lets cached partials be replayed by either."""
+    arr, enc = _posting_stream(200, seed=37)
+    cut = len(enc) // 2
+    host = PostingDecoder()
+    head = host.feed(enc[:cut])[0]
+    dev = DeviceDecoder(backend="jax")
+    dev.set_state(host.state())
+    tail = dev.feed(enc[cut:])[0]
+    assert (np.concatenate([head, tail]) == arr).all()
+    dev2 = DeviceDecoder(backend="jax")
+    head2 = dev2.feed(enc[:cut])[0]
+    host2 = PostingDecoder()
+    host2.set_state(dev2.state())
+    tail2 = host2.feed(enc[cut:])[0]
+    assert (np.concatenate([head2, tail2]) == arr).all()
+
+
+def test_decode_block_ref_matches_scalar_decoder():
+    """The byte-parallel oracle (terminator scan → segmented sum → delta
+    expansion) reproduces the scalar walk exactly, carry included."""
+    arr, enc = _posting_stream(150, seed=41)
+    cut = complete_prefix(as_byte_array(enc))
+    assert cut == len(enc)  # encode ends on a record boundary
+    mid = complete_prefix(as_byte_array(enc[: len(enc) // 2]))
+    rows, carry = decode_block_ref(as_byte_array(enc[:mid]))
+    host = PostingDecoder()
+    want, _ = host.feed(enc[:mid])
+    assert (rows == want).all()
+    assert carry == host.state()[1:]
+    rows2, carry2 = decode_block_ref(as_byte_array(enc[mid:]), *carry)
+    assert (np.concatenate([rows, rows2]) == arr).all()
+    assert carry2[2] is True
+
+
+def test_pallas_routing_big_block_parity():
+    """A feed past the pallas size gate actually launches the dense-tile
+    kernel (interpret mode here); the rows must still equal the scalar
+    decoder's bit-for-bit."""
+    from repro.kernels.posting_decode.ops import _PALLAS_MIN_BYTES
+
+    arr, enc = _posting_stream(
+        4200, seed=43, max_doc=2000, max_pos=(1 << 27) - 1
+    )
+    assert len(enc) >= _PALLAS_MIN_BYTES
+    dev = DeviceDecoder(backend="pallas")
+    rows, _ = dev.feed(enc)
+    want, _ = PostingDecoder().feed(enc)
+    assert (rows == want).all()
+    assert (rows == arr).all()
+
+
+@pytest.mark.parametrize("backend", DECODE_BACKENDS)
+def test_decode_member_prefilter_matches_separate_passes(backend):
+    """The fused decode→intersect entry point returns exactly (host
+    decode, membership test) on every backend, across chunked feeds."""
+    arr, enc = _posting_stream(250, seed=53)
+    docs = np.unique(arr[:, 0])
+    other = np.concatenate([docs[::2], docs.max() + 7 + docs[:5]])
+    state = (b"", 0, 0, False)
+    posts_parts, mask_parts = [], []
+    cut = len(enc) // 3
+    for blob in (enc[:cut], enc[cut:]):
+        posts, mask, state = decode_member_prefilter(
+            blob, other, backend=backend, state=state
+        )
+        posts_parts.append(posts)
+        mask_parts.append(mask)
+    posts = np.concatenate(posts_parts)
+    mask = np.concatenate(mask_parts)
+    want, _ = PostingDecoder().feed(enc)
+    assert (posts == want).all() and (posts == arr).all()
+    assert (mask == np.isin(posts[:, 0], other)).all()
+    assert state[0] == b""  # stream fully drained
+
+
+def test_device_rows_roundtrip_and_width_gate():
+    arr, _ = _posting_stream(100, seed=59)
+    buf = to_device_rows(arr)
+    back = from_device_rows(buf)
+    assert back.dtype == np.int64
+    assert (back == arr).all()
+    assert not back.flags.writeable
+    # values at/over int32 never reach the device tier (silent
+    # truncation would corrupt — the gate returns None instead)
+    big = np.array([[0, np.iinfo(np.int32).max]], dtype=np.int64)
+    assert to_device_rows(big) is None
+    empty = np.zeros((0, 2), dtype=np.int64)
+    assert (from_device_rows(to_device_rows(empty)) == empty).all()

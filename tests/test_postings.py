@@ -5,6 +5,7 @@ import pytest
 from tests._hypothesis_compat import given, settings, strategies as st
 
 from repro.core.postings import (
+    PostingDecoder,
     decode_postings,
     decode_varint,
     encode_postings,
@@ -108,3 +109,71 @@ def test_unsorted_rejected():
     arr = np.asarray([[5, 1], [3, 1]], np.int64)
     with pytest.raises(AssertionError):
         encode_postings(arr)
+
+
+# ------------------------------------------- incremental decoder edges --
+def _decoder_stream(n=48, seed=11, max_doc=12, max_pos=200_000):
+    """A stream with repeated docs (delta-0 runs) and multibyte position
+    varints, so chunk boundaries can land inside varints AND between the
+    two varints of a record."""
+    rng = np.random.RandomState(seed)
+    arr = _sorted_postings(
+        np.sort(rng.randint(0, max_doc, n)), rng.randint(0, max_pos, n)
+    )
+    return arr, encode_postings(arr)
+
+
+def test_decoder_split_at_every_byte_boundary():
+    """Feeding (head, tail) split at EVERY offset — including splits in
+    the middle of a varint and between a record's two varints — decodes
+    exactly the one-shot rows, with nothing left buffered."""
+    arr, enc = _decoder_stream()
+    for cut in range(len(enc) + 1):
+        dec = PostingDecoder()
+        head, _ = dec.feed(enc[:cut])
+        tail, _ = dec.feed(enc[cut:])
+        assert dec.pending_bytes == 0, cut
+        assert (np.concatenate([head, tail]) == arr).all(), cut
+
+
+def test_decoder_empty_chunk_and_single_byte_tail():
+    """Empty feeds are no-ops that disturb no carry state; a stream cut
+    one byte short buffers its dangling record until the single-byte
+    tail completes it."""
+    arr, enc = _decoder_stream(n=20, seed=5)
+    dec = PostingDecoder()
+    rows = [dec.feed(b"")[0]]
+    assert dec.pending_bytes == 0 and rows[0].shape == (0, 2)
+    rows.append(dec.feed(enc[:-1])[0])
+    pend = dec.pending_bytes
+    assert pend >= 1  # the truncated final record stays buffered
+    rows.append(dec.feed(b"")[0])
+    assert dec.pending_bytes == pend and rows[-1].shape == (0, 2)
+    rows.append(dec.feed(enc[-1:])[0])
+    assert dec.pending_bytes == 0
+    assert (np.concatenate(rows) == arr).all()
+
+
+def test_decoder_byte_by_byte_drain():
+    arr, enc = _decoder_stream(n=24, seed=9)
+    dec = PostingDecoder()
+    rows = [dec.feed(enc[i : i + 1])[0] for i in range(len(enc))]
+    assert dec.pending_bytes == 0
+    assert (np.concatenate(rows) == arr).all()
+
+
+def test_decoder_state_roundtrip_mid_stream():
+    """state()/set_state(): suspend at arbitrary cuts — mid-varint, at
+    record seams — restore into a FRESH decoder, and the continuation
+    decodes exactly what an uninterrupted drain would (the contract
+    behind partial-prefix cache admission)."""
+    arr, enc = _decoder_stream(n=40, seed=13)
+    for cut in (0, 1, len(enc) // 3, len(enc) // 2, len(enc) - 2, len(enc)):
+        d1 = PostingDecoder()
+        head, _ = d1.feed(enc[:cut])
+        d2 = PostingDecoder()
+        d2.set_state(d1.state())
+        assert d2.pending_bytes == d1.pending_bytes
+        tail, _ = d2.feed(enc[cut:])
+        assert (np.concatenate([head, tail]) == arr).all(), cut
+        assert d2.pending_bytes == 0

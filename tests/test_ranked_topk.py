@@ -343,7 +343,10 @@ def test_hot_corpus_ranked_skips_chunks(hot_world):
     assert tr["threshold_stops"] > 0
     assert tr["chunks_skipped"] > 0
     assert tr["bytes_fetched"] < tr["bytes_planned"]
-    assert tr["bytes_fetched"] + tr["bytes_skipped"] == tr["bytes_planned"]
+    assert (
+        tr["bytes_fetched"] + tr["bytes_skipped"] + tr["bytes_shared"]
+        == tr["bytes_planned"]
+    )
 
 
 # ------------------------------------------------- live updates + compaction --

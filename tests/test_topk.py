@@ -257,8 +257,12 @@ def test_topk_trace_reports_savings(hot_world):
     )
     tk = svc.last_trace["topk"]
     assert tk["queries"] == 4
-    assert tk["chunks_planned"] == tk["chunks_fetched"] + tk["chunks_skipped"]
-    assert tk["bytes_planned"] == tk["bytes_fetched"] + tk["bytes_skipped"]
+    assert tk["chunks_planned"] == (
+        tk["chunks_fetched"] + tk["chunks_skipped"] + tk["chunks_shared"]
+    )
+    assert tk["bytes_planned"] == (
+        tk["bytes_fetched"] + tk["bytes_skipped"] + tk["bytes_shared"]
+    )
 
 
 # ----------------------------------------------- trace completeness guard --
