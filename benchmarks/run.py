@@ -14,6 +14,8 @@ Benches:
     search_ranked — score-ordered (WAND) top-k vs exhaustive ranked scan
     search_hot_traffic — concurrent hot-vocabulary queries through the
                     cross-query chunk pool vs per-query cursors
+    search_replicas — replica read tier: capacity vs replica count,
+                    failover sweep across backends × shard counts
     update_speed  — live per-shard update streams: targeted invalidation
                     vs whole-namespace drops under interleaved updates
     durability    — repro.store: WAL fsync cost, recovery time vs WAL
@@ -152,6 +154,31 @@ def _bench_search_hot_traffic(scale):
     ]
 
 
+def _bench_search_replicas(scale):
+    from benchmarks import search_speed
+
+    s = min(scale, 0.5)
+    world = search_speed.make_world(s)
+    rows = search_speed.run_replicas(s, world=world, n_replicas=3,
+                                     n_queries=48)
+    summary = rows[-1]
+    sweep = search_speed.run_replica_identity_sweep(s, world=world,
+                                                    n_replicas=2)
+    ok = (
+        summary["identical"]
+        and all(r["identical"] for r in sweep)
+        and all(r["failovers"] >= 1 for r in sweep)
+        and summary["capacity_ratio"] >= 1.5
+    )
+    return rows + sweep, [
+        f"{'PASS' if ok else 'FAIL'}  3-replica fabric identical to the "
+        f"single-reader path across backends x shard counts "
+        f"(incl. {sum(r['failovers'] for r in sweep)} injected failovers) "
+        f"at {summary['capacity_ratio']:.2f}x single-replica capacity, "
+        f"p99 {summary['p99_ms']:.2f} ms"
+    ]
+
+
 def _bench_update_speed(scale):
     from benchmarks import update_speed
 
@@ -209,6 +236,49 @@ def _bench_kernels(scale):
     return kernel_bench.run(scale)
 
 
+def _append_trajectory(path, scale, all_rows, verdicts):
+    """Append one run record to the BENCH_search.json trajectory.
+
+    The artifact is a JSON list — one record per harness run — so
+    successive PRs accumulate a qps / read-bytes / p99 baseline per
+    search scenario instead of overwriting it.  Scalar perf fields are
+    harvested by name (qps, bytes, p99, ratios, speedups); everything
+    else stays in the per-run --json dump.
+    """
+    scenarios = {}
+    for r in all_rows:
+        bench = str(r.get("bench", ""))
+        if not bench.startswith(("search", "update")):
+            continue
+        scen = scenarios.setdefault(bench, {})
+        for k, v in r.items():
+            if isinstance(v, bool) or not isinstance(v, (int, float)):
+                continue
+            kl = k.lower()
+            if ("qps" in kl or "bytes" in kl or "p99" in kl
+                    or kl.endswith("_ratio") or "speedup" in kl):
+                scen[k] = round(v, 4) if isinstance(v, float) else v
+    scenarios = {k: v for k, v in scenarios.items() if v}
+    record = {
+        "ts": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "scale": scale,
+        "scenarios": scenarios,
+        "verdicts": [f"{name}: {v}" for name, v in verdicts],
+    }
+    try:
+        with open(path) as f:
+            history = json.load(f)
+        if not isinstance(history, list):
+            history = [history]
+    except (OSError, ValueError):
+        history = []
+    history.append(record)
+    with open(path, "w") as f:
+        json.dump(history, f, indent=1, default=str)
+        f.write("\n")
+    return record
+
+
 BENCHES = {
     "paper_tables": _bench_paper_tables,
     "chain_sweep": _bench_chain_sweep,
@@ -219,6 +289,7 @@ BENCHES = {
     "search_topk": _bench_search_topk,
     "search_ranked": _bench_search_ranked,
     "search_hot_traffic": _bench_search_hot_traffic,
+    "search_replicas": _bench_search_replicas,
     "update_speed": _bench_update_speed,
     "durability": _bench_durability,
     "paged_kv": _bench_paged_kv,
@@ -231,6 +302,9 @@ def main() -> int:
     ap.add_argument("--scale", type=float, default=1.0)
     ap.add_argument("--only", type=str, default="")
     ap.add_argument("--json", type=str, default="")
+    ap.add_argument("--trajectory", type=str, default="BENCH_search.json",
+                    help="perf-trajectory artifact to append to "
+                         "('' disables)")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(BENCHES)
 
@@ -265,6 +339,11 @@ def main() -> int:
     n_fail = len(failed) + sum(1 for _, v in verdicts if v.startswith("FAIL"))
     print(f"\n{len(verdicts)} claims checked, {n_fail} failures"
           + (f" (errored: {failed})" if failed else ""))
+    if args.trajectory:
+        rec = _append_trajectory(args.trajectory, args.scale,
+                                 all_rows, verdicts)
+        print(f"trajectory: appended {len(rec['scenarios'])} scenario(s) "
+              f"to {args.trajectory}")
     if args.json:
         with open(args.json, "w") as f:
             json.dump(all_rows, f, default=str, indent=1)

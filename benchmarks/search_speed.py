@@ -856,6 +856,210 @@ def main_sharded(scale: float = 0.5, n_queries: int = 64,
           "without inflating read bytes")
 
 
+# ------------------------------------------------------ replica fabric --
+def _fault_after(n: int):
+    """One-shot injected fault: the replica serves ``n`` more ops, then
+    dies mid-batch (the fabric must fail the batch over to a sibling)."""
+    from repro.search import ReplicaDeadError
+
+    served = [0]
+
+    def fault(rep, op):
+        served[0] += 1
+        if served[0] > n:
+            raise ReplicaDeadError(f"injected after {n} serves")
+
+    return fault
+
+
+def run_replicas(
+    scale: float = 0.5,
+    world: World = None,
+    n_replicas: int = 3,
+    n_queries: int = 64,
+    backend: str = "numpy",
+    repeats: int = 3,
+) -> List[Dict]:
+    """Replica read tier: N replicas per shard behind the fabric scatter.
+
+    Capacity model: every replica accumulates the REAL seconds it spends
+    serving (``busy_s``); with the writer's work fixed, the serving
+    capacity of the tier is ``queries / max-per-replica busy`` — the
+    slowest replica is the bottleneck, so balanced routing over N
+    replicas multiplies capacity by ~N.  Caches are off so the charge
+    model is deterministic and every replica pays its own device reads
+    (the bytes-balance secondary signal).
+
+    Identity: the fabric batch — including a replica killed mid-batch by
+    an injected fault — must stay element-wise identical to the plain
+    single-reader path.
+    """
+    from repro.search import ReplicaSetReader
+
+    if n_replicas < 1:
+        raise ValueError(f"--replicas must be >= 1, got {n_replicas}")
+    world = world or make_world(scale)
+    ts = build_index_set(world, "set2", multi_k=None)
+    queries = _mixed_stream(world.lexicon, n_queries,
+                            np.random.RandomState(7))
+    ref = SearchService(ts, window=3, backend="numpy",
+                        cache_bytes=0).search_batch(queries)
+
+    def identical(got):
+        return all(
+            np.array_equal(r.docs, g.docs)
+            and np.array_equal(r.witnesses, g.witnesses)
+            and r.postings_scanned == g.postings_scanned
+            for r, g in zip(ref, got)
+        )
+
+    rows: List[Dict] = []
+    capacity: Dict[int, float] = {}
+    for n in sorted({1, n_replicas}):
+        fab = ReplicaSetReader(ts, n_replicas=n, cache_bytes=0)
+        svc = SearchService(fab, window=3, backend=backend, cache_bytes=0)
+        ok = identical(svc.search_batch(queries))  # also warms jit
+        for row in fab.replicas:
+            for rep in row:
+                rep.busy_s = 0.0
+        t_wall = 0.0
+        for _ in range(repeats):
+            t_wall += _timed(lambda: svc.search_batch(queries))
+        busy = [rep.busy_s for row in fab.replicas for rep in row]
+        cap = repeats * len(queries) / max(1e-9, max(busy))
+        capacity[n] = cap
+        per_rep_bytes = [b for row in fab.read_bytes_per_replica()
+                         for b in row]
+        rows.append({
+            "bench": "search_speed_replicas",
+            "n_replicas": n,
+            "queries": len(queries),
+            "capacity_qps": cap,
+            "wall_qps": repeats * len(queries) / t_wall,
+            "busy_s_per_replica": [round(b, 4) for b in busy],
+            "read_bytes_per_replica": per_rep_bytes,
+            "bytes_balance": max(per_rep_bytes) / max(1.0, (
+                sum(per_rep_bytes) / len(per_rep_bytes)
+            )),
+            "failovers": fab.failovers,
+            "identical": ok,
+        })
+
+    # per-query latency distribution through the full fabric (p99 is the
+    # serving-tier health number the trajectory artifact tracks)
+    fab = ReplicaSetReader(ts, n_replicas=n_replicas, cache_bytes=0)
+    svc = SearchService(fab, window=3, backend=backend, cache_bytes=0)
+    svc.search_batch(queries)
+    lat = sorted(_timed(lambda q=q: svc.search_batch([q])) for q in queries)
+    p99 = lat[min(len(lat) - 1, int(0.99 * len(lat)))]
+
+    summary = {
+        "bench": "search_speed_replicas",
+        "n_replicas": "summary",
+        "queries": len(queries),
+        "capacity_qps_1": capacity[1],
+        "capacity_qps_n": capacity[n_replicas],
+        "capacity_ratio": capacity[n_replicas] / max(1e-9, capacity[1]),
+        "p99_ms": p99 * 1e3,
+        "identical": all(r["identical"] for r in rows),
+    }
+    rows.append(summary)
+    return rows
+
+
+def run_replica_identity_sweep(
+    scale: float = 0.5,
+    world: World = None,
+    n_queries: int = 16,
+    n_replicas: int = 2,
+    backends=("numpy", "jax", "pallas"),
+    shard_counts=(1, 2, 4),
+) -> List[Dict]:
+    """The failover oracle sweep: every backend × shard count serves the
+    same stream through the fabric WITH one replica killed mid-batch —
+    results must stay element-wise identical to the unsharded numpy
+    single-reader reference."""
+    from repro.search import ReplicaSetReader
+
+    world = world or make_world(scale)
+    queries = _mixed_stream(world.lexicon, n_queries,
+                            np.random.RandomState(11))
+    ts = build_index_set(world, "set2", multi_k=None)
+    ref = SearchService(ts, window=3, backend="numpy",
+                        cache_bytes=0).search_batch(queries)
+    subs = {1: ts}
+    for n in shard_counts:
+        if n > 1:
+            subs[n] = build_sharded_index_set(world, "set2", n_shards=n,
+                                              multi_k=None)
+    rows: List[Dict] = []
+    for n_shards in shard_counts:
+        for backend in backends:
+            fab = ReplicaSetReader(subs[n_shards], n_replicas=n_replicas,
+                                   cache_bytes=0)
+            svc = SearchService(fab, window=3, backend=backend,
+                                cache_bytes=0)
+            fab.replicas[0][0].fault = _fault_after(3)
+            got = svc.search_batch(queries)
+            ok = all(
+                np.array_equal(r.docs, g.docs)
+                and np.array_equal(r.witnesses, g.witnesses)
+                for r, g in zip(ref, got)
+            )
+            rows.append({
+                "bench": "search_speed_replica_sweep",
+                "n_shards": n_shards,
+                "backend": backend,
+                "failovers": fab.failovers,
+                "dead": sum(not rep.live for row in fab.replicas
+                            for rep in row),
+                "identical": ok,
+            })
+    return rows
+
+
+def main_replicas(scale: float = 0.5, n_queries: int = 64,
+                  n_replicas: int = 3, backend: str = "numpy") -> None:
+    world = make_world(scale)
+    rows = run_replicas(scale, world=world, n_replicas=n_replicas,
+                        n_queries=n_queries, backend=backend)
+    summary = rows[-1]
+    print(f"{'replicas':>8s} {'capacity_qps':>13s} {'wall_qps':>10s} "
+          f"{'bytes_bal':>9s} {'identical':>9s}")
+    for r in rows[:-1]:
+        print(f"{r['n_replicas']:>8d} {r['capacity_qps']:>13,.0f} "
+              f"{r['wall_qps']:>10,.0f} {r['bytes_balance']:>9.2f} "
+              f"{str(r['identical']):>9s}")
+    print(f"capacity ratio x{n_replicas}/x1: "
+          f"{summary['capacity_ratio']:.2f} "
+          f"(p99 {summary['p99_ms']:.2f} ms)")
+
+    sweep = run_replica_identity_sweep(scale, world=world,
+                                       n_replicas=max(2, n_replicas // 2 + 1))
+    for r in sweep:
+        print(f"  sweep shards={r['n_shards']} backend={r['backend']:6s} "
+              f"failovers={r['failovers']} identical={r['identical']}")
+
+    assert summary["identical"], "fabric results diverged from single-reader"
+    assert all(r["identical"] for r in sweep), (
+        "failover sweep diverged from the reference"
+    )
+    assert all(r["failovers"] >= 1 for r in sweep), (
+        "the injected fault must actually force a failover"
+    )
+    # capacity gate: balanced routing over N replicas must multiply the
+    # serving capacity — >= 1.5x at N=3 (the acceptance gate), and at
+    # least a clear win for any N > 1
+    gate = 1.5 if n_replicas >= 3 else 1.2
+    assert summary["capacity_ratio"] >= gate, (
+        f"capacity ratio {summary['capacity_ratio']:.2f} < {gate} "
+        f"at {n_replicas} replicas"
+    )
+    print(f"PASS  {n_replicas}-replica fabric serves identical results "
+          f"(incl. mid-batch failover) at {summary['capacity_ratio']:.2f}x "
+          f"the single-replica capacity")
+
+
 def main_batched(scale: float = 0.5, n_queries: int = 64) -> None:
     rows = run_batched(scale, n_queries=n_queries)
     print(f"{'backend':8s} {'queries':>8s} {'loop_qps':>10s} {'batch_qps':>10s} "
@@ -924,11 +1128,20 @@ if __name__ == "__main__":
                          "unsharded set, both through search_batch; "
                          "composes with --batched (the sharded bench IS "
                          "the batched comparison)")
+    ap.add_argument("--replicas", type=int, default=0,
+                    help="N: N-replica read fabric vs a single reader — "
+                         "per-replica busy-seconds capacity model, "
+                         "bytes-balance, p99, and the failover oracle "
+                         "sweep (every backend × shard count with one "
+                         "replica killed mid-batch)")
     ap.add_argument("--backend", default="jax",
                     help="join backend for --shards (numpy/jax/pallas)")
     ap.add_argument("--queries", type=int, default=64)
     args = ap.parse_args()
-    if args.shards:
+    if args.replicas:
+        main_replicas(args.scale, n_queries=args.queries,
+                      n_replicas=args.replicas, backend=args.backend)
+    elif args.shards:
         # --shards compares batched serving on both substrates, so
         # `--shards N --batched` is the canonical spelling; --batched
         # alone keeps its loop-vs-batch meaning below

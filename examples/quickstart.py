@@ -4,8 +4,9 @@ a time through ``ProximityEngine``, then as a planned batch through
 ``SearchService`` (the multi-user serving path), then over a 4-shard
 ``ShardedTextIndexSet`` through the scatter/gather pipeline — then land
 another collection part through the per-shard update streams WHILE the
-same service keeps serving, and finally persist the collection behind
-the durable WAL-fed store, crash it mid-part, and recover.
+same service keeps serving, scale reads across a replica fabric that
+survives a replica killed mid-batch, and finally persist the collection
+behind the durable WAL-fed store, crash it mid-part, and recover.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -206,6 +207,50 @@ def main():
           f"{stats.invalidations - inv0} cache entries invalidated "
           f"(targeted; {stats.full_drops} namespace sweeps), answers "
           f"identical to a cold reader over the updated collection")
+
+    # replica read tier: N replica readers per shard — each with its OWN
+    # posting cache and devices — behind the same single-owner writers,
+    # kept current off the writers' touched-key digest stream.  Fetch
+    # waves route to the least-loaded live replica; killing one
+    # MID-BATCH fails its waves over to a sibling with answers
+    # unchanged, and a revived replica catches up (targeted
+    # invalidations, never a rebuild) before re-entering rotation.
+    from repro.search import ReplicaSetReader
+
+    fab = ReplicaSetReader(sts, n_replicas=3)
+    svc_fab = SearchService(fab, window=3, backend="jax")
+    for a, b in zip(live, svc_fab.search_batch(stream)):
+        assert np.array_equal(a.docs, b.docs)
+
+    victim = fab.replicas[0][0]
+    served = [0]
+
+    def die_soon(rep, op):  # the injectable fault seam
+        served[0] += 1
+        if served[0] > 2:
+            rep.kill()
+
+    victim.fault = die_soon
+    failed_over = svc_fab.search_batch(stream)
+    rb = svc_fab.last_trace["replicas"]
+    for a, b in zip(live, failed_over):
+        assert np.array_equal(a.docs, b.docs)
+        assert np.array_equal(a.witnesses, b.witnesses)
+    print(f"replica fabric ({rb['n_replicas']} per shard): replica s0r0 "
+          f"killed mid-batch, {rb['failovers_batch']} failover(s) to live "
+          f"siblings, answers unchanged")
+
+    part4 = generate_part(lex, n_docs=100, avg_doc_len=250, doc0=750,
+                          seed=13)
+    sts.add_documents(*part4, 750)  # the dead replica misses this part
+    lag = victim.lag()
+    modes = victim.revive()  # catch up on the digest stream, then serve
+    for a, b in zip(svc_fab.search_batch(stream),
+                    SearchService(sts, window=3).search_batch(stream)):
+        assert np.array_equal(a.docs, b.docs)
+    print(f"revived s0r0 from {lag} generation(s) behind via modes "
+          f"{sorted(set(modes))}; fabric answers match a cold reader "
+          f"over the updated collection")
 
     # persist -> crash -> recover: the same substrate behind the durable
     # on-disk store (repro.store).  Every part is in the write-ahead log

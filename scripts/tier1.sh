@@ -36,6 +36,13 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.search_speed \
 # whole-namespace baseline
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.update_speed \
   --scale 0.05 --queries 12 --parts 3 --shards 2
+# tiny-corpus smoke of the replica serving tier: a 2-replica fabric
+# must serve results element-wise identical to the single-reader path
+# (across backends and shard counts, including one replica killed
+# mid-batch by an injected fault, which must force a real failover)
+# with balanced routing lifting serving capacity >= 1.2x
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.search_speed \
+  --replicas 2 --scale 0.05 --queries 12 --backend numpy
 # tiny-corpus smoke of the durable on-disk backend: the WAL-fed store
 # must charge the simulated devices exactly like the in-memory
 # substrate, recover to element-wise identical results (replay and

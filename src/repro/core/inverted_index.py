@@ -21,8 +21,8 @@ consequence of indexing a growing collection.
 from __future__ import annotations
 
 import dataclasses
-from collections import defaultdict, deque
-from typing import Callable, Deque, Dict, Hashable, Iterable, List, Optional, Tuple
+from collections import defaultdict
+from typing import Callable, Dict, Hashable, Iterable, List, Optional, Tuple
 
 import numpy as np
 
@@ -44,7 +44,7 @@ from repro.core.postings import (
     max_doc_run,
 )
 from repro.core.strategies import StrategyConfig
-from repro.core.stream import StreamManager
+from repro.core.stream import DigestLog, StreamManager
 
 _EMPTY = np.zeros((0, 2), dtype=np.int64)
 
@@ -173,6 +173,16 @@ class PostingCursor:
         return float(self.last_doc)
 
     @property
+    def prepaid(self) -> bool:
+        """True while the next chunk costs zero device bytes to deliver —
+        a resumed settled prefix or pre-decoded cache-hit rows.  The
+        streaming executor drains prepaid chunks eagerly at open so their
+        rows seed ``settled_bound`` before the first fetch round; the
+        bound stays delivery-based (seeding an *undelivered* bound would
+        let a region cut lose rows)."""
+        return self._i < len(self._thunks) and self._thunks[self._i][0] == 0
+
+    @property
     def chunks_skipped(self) -> int:
         return self.chunks_total - self.chunks_fetched
 
@@ -268,13 +278,19 @@ class InvertedIndex:
         self._open_bucket: Dict[int, int] = {}
         self.n_extractions = 0
         self.n_parts = 0
+        # published snapshot generation.  Decoupled from the physical part
+        # counter ``n_parts``: a checkpoint reopen bulk-applies collapsed
+        # state (one part standing in for many), so counting parts would
+        # alias a reopened replica's position against the writer's.  The
+        # published counter is monotone, advances with every part/compact
+        # publication, and is *restored* (never rewound) from a durable
+        # manifest via :meth:`restore_generation`.
+        self.generation = 0
         # live-update observability: per-part touched-key digests, keyed by
-        # the generation (n_parts value) the part produced.  Bounded: a
-        # reader further behind than the history falls back to a full
-        # namespace drop (see repro.search.reader.IndexReader.refresh).
-        self._part_digests: Deque[Tuple[int, Optional[frozenset]]] = deque(
-            maxlen=max(1, int(digest_history))
-        )
+        # the published generation the part produced.  Bounded: a reader
+        # further behind than the history falls back to a full namespace
+        # drop (see repro.search.reader.IndexReader.refresh).
+        self._part_digests = DigestLog(digest_history)
         self._digest_max_keys = int(digest_max_keys)
         # background-compaction observability (repro.store rides on these)
         self.n_compactions = 0
@@ -304,6 +320,7 @@ class InvertedIndex:
         for group in sorted(by_group):
             self._run_phase(group, by_group[group])
         self.n_parts += 1
+        self.generation += 1
         digest = frozenset(
             key for items in by_group.values() for key, _ in items
         )
@@ -311,10 +328,10 @@ class InvertedIndex:
         # this part take the whole-namespace fallback instead of a
         # vocabulary-sized targeted scan, and the retained history stays
         # bounded in bytes, not just in parts
-        self._part_digests.append((
-            self.n_parts,
+        self._part_digests.publish(
+            self.generation,
             digest if len(digest) <= self._digest_max_keys else None,
-        ))
+        )
         return digest
 
     def digests_since(self, generation: int) -> Optional[List[frozenset]]:
@@ -322,17 +339,31 @@ class InvertedIndex:
 
         Returns one frozenset per part, oldest first — their union is the
         complete set of keys whose posting lists changed since the caller
-        snapshotted ``n_parts`` — or ``None`` when the bounded digest
-        history no longer reaches back that far, or some covered part's
-        digest was too large to retain (the caller must then treat EVERY
-        key as potentially stale)."""
-        missing = self.n_parts - generation
-        if missing <= 0:
-            return []
-        out = [d for g, d in self._part_digests if g > generation]
-        if len(out) != missing or any(d is None for d in out):
-            return None
-        return out
+        snapshotted :attr:`generation` — or ``None`` when the bounded
+        digest history no longer reaches back that far, or some covered
+        part's digest was too large to retain (the caller must then
+        treat EVERY key as potentially stale)."""
+        return self._part_digests.since(generation, self.generation)
+
+    def restore_generation(self, generation: int) -> None:
+        """Restore the *published* generation counter from a durable
+        manifest after bulk-applying checkpointed state.
+
+        Forward-only: the published counter is monotone, so restoring
+        below the current value is a protocol violation.  Jumping
+        forward clears the digest history — the bulk-applied state has
+        no per-generation digests for the span the checkpoint collapsed,
+        so readers behind the restore point must take the
+        whole-namespace fallback rather than get a false "current"."""
+        generation = int(generation)
+        if generation < self.generation:
+            raise ValueError(
+                f"generation restore moves backwards "
+                f"({self.generation} -> {generation})"
+            )
+        if generation > self.generation:
+            self.generation = generation
+            self._part_digests.clear()
 
     def compact(self) -> Optional[frozenset]:
         """Background compaction: fold every dedicated stream whose
@@ -358,11 +389,12 @@ class InvertedIndex:
         self.n_compactions += 1
         self.compacted_streams += len(touched)
         self.n_parts += 1
+        self.generation += 1
         digest = frozenset(touched)
-        self._part_digests.append((
-            self.n_parts,
+        self._part_digests.publish(
+            self.generation,
             digest if len(digest) <= self._digest_max_keys else None,
-        ))
+        )
         return digest
 
     def _run_phase(self, group: int, items: List[Tuple[Hashable, np.ndarray]]) -> None:

@@ -28,7 +28,7 @@ plan → scatter-fetch → join → gather pipeline).
 
 from __future__ import annotations
 
-from typing import Dict, Hashable, List
+from typing import Dict, Hashable, List, Optional
 
 import numpy as np
 
@@ -143,9 +143,37 @@ class UpdateStream:
 
     @property
     def generation(self) -> int:
-        """This shard's snapshot generation (see
+        """This shard's scalar snapshot generation (see
         :attr:`~repro.core.text_index.TextIndexSet.generation`)."""
         return self.index_set.generation
+
+    def generation_vector(self) -> List[int]:
+        """This shard's per-index published generation vector — the
+        alias-free snapshot coordinate replicas subscribe against."""
+        return self.index_set.generation_vector()
+
+    def digests_since(
+        self, generation_vector: List[int]
+    ) -> Optional[Dict[str, List[frozenset]]]:
+        """Shard-level digest-stream subscription: the touched-key
+        digests every index published after the subscriber's pinned
+        per-index ``generation_vector``, as ``{index_name: [digest,
+        ...]}`` (current indexes omitted).  ``None`` when ANY index's
+        bounded history no longer reaches back that far — the subscriber
+        must then take the whole-namespace catch-up path for the shard.
+        This is the writer-side surface :class:`repro.search.replica.
+        ReplicaReader` consumes."""
+        names = list(self.index_set.indexes)
+        if len(generation_vector) != len(names):
+            return None
+        out: Dict[str, List[frozenset]] = {}
+        for name, gen in zip(names, generation_vector):
+            digests = self.index_set.indexes[name].digests_since(gen)
+            if digests is None:
+                return None
+            if digests:
+                out[name] = digests
+        return out
 
     def apply(self, maps) -> Dict[str, frozenset]:
         """Apply one scattered part to this shard; returns its
@@ -270,10 +298,14 @@ class ShardedTextIndexSet(IndexSetLike):
                 agg[k] += v
         return agg
 
-    def generation_vector(self) -> List[int]:
-        """Per-shard snapshot generations — what a snapshot-consistent
-        batch pins (see ``SearchService.last_trace['snapshot']``)."""
-        return [shard.generation for shard in self.shards]
+    def generation_vector(self) -> List[List[int]]:
+        """Per-shard *per-index* published generations — what a
+        snapshot-consistent batch pins (see
+        ``SearchService.last_trace['snapshot']``).  Nested rather than
+        summed per shard: a sum aliases (one index advancing while
+        another folds/restores can leave it unchanged), the vector
+        cannot."""
+        return [shard.generation_vector() for shard in self.shards]
 
     # -------------------------------------------------------------- queries --
     def lookup(self, index_name: str, key: Hashable) -> np.ndarray:

@@ -44,7 +44,8 @@ against a posting-level oracle in the tests.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Iterable, List, Optional, Tuple
+from collections import deque
+from typing import Callable, Deque, Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
 
@@ -60,6 +61,56 @@ CH = "ch"      # backward-linked bounded chain of segments
 S = "s"        # power-of-two contiguous segments
 
 ALL_STATES = (EM, SR0, PART, CH, S)
+
+
+class DigestLog:
+    """Bounded, generation-keyed history of touched-key digests.
+
+    The writer-side publication surface of the live-update protocol:
+    every published generation advance (update part, compaction fold)
+    appends its touched-key digest here, and readers — local or replica
+    — catch up with :meth:`since`.  The history is bounded in *entries*
+    (``maxlen``) and implicitly in bytes (oversized digests are stored
+    as ``None`` sentinels by the caller), so a subscriber further behind
+    than the retained window gets ``None`` back and must fall back to
+    the whole-namespace drop path.
+
+    ``clear()`` exists for checkpoint restore: a reopened replica's
+    bulk-applied state has no per-generation digests for the span the
+    checkpoint collapsed, so the log must not answer for generations it
+    cannot attribute."""
+
+    def __init__(self, history: int):
+        self._log: Deque[Tuple[int, Optional[frozenset]]] = deque(
+            maxlen=max(1, int(history))
+        )
+
+    def publish(self, generation: int, digest: Optional[frozenset]) -> None:
+        self._log.append((int(generation), digest))
+
+    def since(
+        self, generation: int, current: int
+    ) -> Optional[List[frozenset]]:
+        """Digests of every generation in ``(generation, current]`` —
+        oldest first — or ``None`` when the bounded history no longer
+        covers that span (or a covered digest was an oversized
+        sentinel)."""
+        missing = int(current) - int(generation)
+        if missing <= 0:
+            return []
+        out = [d for g, d in self._log if g > generation]
+        if len(out) != missing or any(d is None for d in out):
+            return None
+        return out
+
+    def clear(self) -> None:
+        self._log.clear()
+
+    def __iter__(self):
+        return iter(self._log)
+
+    def __len__(self) -> int:
+        return len(self._log)
 
 
 @dataclasses.dataclass

@@ -28,7 +28,7 @@ from __future__ import annotations
 
 import abc
 import dataclasses
-from typing import Dict, Hashable, Optional
+from typing import Dict, Hashable, List, Optional
 
 import numpy as np
 
@@ -232,11 +232,21 @@ class TextIndexSet(IndexSetLike):
 
     @property
     def generation(self) -> int:
-        """Monotone snapshot counter: the sum of every index's applied
-        part count.  Moves exactly when some reader's view of this set
-        could have changed — the per-shard entry of the serving
-        snapshot's generation vector."""
-        return sum(idx.n_parts for idx in self.indexes.values())
+        """Monotone scalar snapshot counter: the sum of every index's
+        *published* generation.  Moves exactly when some reader's view
+        of this set could have changed.  Sums alias (two different
+        per-index states can share one sum), so snapshot pinning and the
+        replica catch-up protocol use :meth:`generation_vector`; the
+        scalar survives as a cheap change signal."""
+        return sum(idx.generation for idx in self.indexes.values())
+
+    def generation_vector(self) -> List[int]:
+        """Per-index published generations, in index declaration order —
+        the alias-free form of :attr:`generation`.  One index advancing
+        while another restores/folds can leave the *sum* unchanged; the
+        vector distinguishes which index moved, so readers pin batches
+        and replicas negotiate catch-up against it."""
+        return [idx.generation for idx in self.indexes.values()]
 
     # -------------------------------------------------------------- queries --
     def lookup(self, index_name: str, key: Hashable) -> np.ndarray:

@@ -11,6 +11,9 @@ Layering (DESIGN_SEARCH.md):
     plan → scatter-fetch → join → gather pipeline (pipelined reader
     prefetch, bucketed JAX/Pallas window joins, lossless per-shard
     gather over a sharded substrate),
+  * :mod:`repro.search.replica` — the replica read fabric: N replica
+    readers per shard subscribing to the writer's touched-key digest
+    stream, with least-loaded wave routing and mid-batch failover,
   * :mod:`repro.search.join`    — the interchangeable join backends,
   * :mod:`repro.search.scoring` — the ranked-retrieval score (proximity
     weights × saturating tf) shared by the streaming executor's
@@ -58,6 +61,12 @@ from repro.search.reader import (
     ReaderCursor,
     ShardedIndexSetReader,
 )
+from repro.search.replica import (
+    AllReplicasDeadError,
+    ReplicaDeadError,
+    ReplicaReader,
+    ReplicaSetReader,
+)
 from repro.search.service import (
     SearchService,
     SnapshotViolationError,
@@ -98,6 +107,10 @@ __all__ = [
     "PostingCache",
     "ReaderCursor",
     "ShardedIndexSetReader",
+    "AllReplicasDeadError",
+    "ReplicaDeadError",
+    "ReplicaReader",
+    "ReplicaSetReader",
     "SearchService",
     "SnapshotViolationError",
     "TraceIncompleteError",

@@ -109,6 +109,30 @@ class PooledCursor:
         return float(self.last_doc)
 
     @property
+    def resumed(self) -> bool:
+        """Whether the shared physical cursor resumed a settled prefix
+        (``CursorResume`` from the cache's partial tier)."""
+        return bool(getattr(self._stream.inner, "resumed", False))
+
+    @property
+    def prepaid(self) -> bool:
+        """True while this view's next chunk costs zero device bytes:
+        a replay of an already-logged chunk (the fetching view paid), or
+        the inner cursor's own next chunk is prepaid (a resumed settled
+        prefix / cache-hit rows).  Without this, a view over a warm
+        resumed stream reports ``settled_bound == -inf`` until the
+        executor happens to poll it — the executor instead drains
+        prepaid chunks at open, seeding ``last_doc`` from the resumed
+        prefix exactly like a private ``ReaderCursor`` gets seeded.
+        Replays of chunks another view PAID for stay lazy (zero marginal
+        cost, but they are real fetch-frontier data — the executor's
+        bound loop decides if they are needed at all)."""
+        if self._pos < len(self._stream.chunks):
+            return self._stream.chunks[self._pos][1] == 0
+        inner = self._stream.inner
+        return not inner.exhausted and bool(getattr(inner, "prepaid", False))
+
+    @property
     def chunks_skipped(self) -> int:
         return self.chunks_total - self.chunks_fetched - self.chunks_shared
 

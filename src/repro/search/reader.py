@@ -440,11 +440,17 @@ class IndexReader:
         # touched-key digests name; False forces the whole-namespace drop
         # (the pre-digest behaviour, kept as the benchmark baseline)
         self.targeted = targeted
-        self._generation = index.n_parts
+        # the writer's PUBLISHED generation counter — NOT the physical
+        # part counter ``n_parts``: checkpoint reopens bulk-apply
+        # collapsed state (one part standing in for many), so a reader
+        # tracking parts could believe itself current across a fold that
+        # rewrote every list and skip both the targeted drop and the
+        # behind-history namespace-drop fallback
+        self._generation = index.generation
 
     # ------------------------------------------------------------ lookups --
     def lookup(self, key: Hashable) -> np.ndarray:
-        if self.index.n_parts != self._generation:
+        if self.index.generation != self._generation:
             self.refresh()
         if self.cache is not None:
             hit = self.cache.get(self.cache_ns, key)
@@ -479,7 +485,7 @@ class IndexReader:
         OWN-stream decoder (e.g. the device-backed one); a full drain
         additionally pins the rows on device when ``device_tier`` is set
         and the values fit the device integer."""
-        if self.index.n_parts != self._generation:
+        if self.index.generation != self._generation:
             self.refresh()
         gen = self._generation
         if self.cache is not None:
@@ -525,7 +531,7 @@ class IndexReader:
                 # would poison every later lookup of the key.  The check
                 # at open time alone cannot see an update that landed
                 # mid-drain.
-                if self.index.n_parts != gen:
+                if self.index.generation != gen:
                     return
                 self.cache.put(self.cache_ns, key, full)
                 if device_tier:
@@ -537,7 +543,7 @@ class IndexReader:
 
             def on_partial(prefix, resume, key=key, gen=gen):
                 # same mid-drain staleness rule as full admission
-                if self.index.n_parts != gen:
+                if self.index.generation != gen:
                     return
                 self.cache.put_partial(self.cache_ns, key, prefix, resume)
         return ReaderCursor(inner, on_complete, generation=gen,
@@ -551,12 +557,14 @@ class IndexReader:
         return self.index.dict.group_of(key)
 
     # ------------------------------------------------------------- state --
-    def refresh(self) -> None:
-        """Re-snapshot after the writer indexed more parts.
+    def refresh(self) -> str:
+        """Re-snapshot after the writer published more generations.
 
-        A no-op when the writer's generation is unchanged: cached postings
-        are still valid, and dropping them would turn every periodic
-        refresh sweep into a full cold restart of the posting cache.
+        A no-op when the writer's *published* generation is unchanged:
+        cached postings are still valid, and dropping them would turn
+        every periodic refresh sweep into a full cold restart of the
+        posting cache.  (Published generation, not ``n_parts``: physical
+        part counts alias across checkpoint reopens and folds.)
 
         When the writer DID advance, the writer's per-part touched-key
         digests (``InvertedIndex.digests_since``) name exactly the keys
@@ -564,9 +572,14 @@ class IndexReader:
         entries are invalidated — every untouched hot key stays warm.
         The whole-namespace drop survives as the fallback for a reader so
         far behind that the bounded digest history no longer covers its
-        snapshot (and as the explicit ``targeted=False`` baseline)."""
-        if self.index.n_parts == self._generation:
-            return
+        snapshot (and as the explicit ``targeted=False`` baseline).
+
+        Returns the catch-up mode taken — ``"current"``, ``"targeted"``
+        or ``"full_drop"`` — which the replica fabric ledgers per
+        replica."""
+        if self.index.generation == self._generation:
+            return "current"
+        mode = "targeted"
         if self.cache is not None:
             digests = (
                 self.index.digests_since(self._generation)
@@ -574,9 +587,11 @@ class IndexReader:
             )
             if digests is None:
                 self.cache.drop_index(self.cache_ns)
+                mode = "full_drop"
             else:
                 self.cache.drop_touched(self.cache_ns, digests)
-        self._generation = self.index.n_parts
+        self._generation = self.index.generation
+        return mode
 
     def io_stats(self) -> IOStats:
         return self.device.stats.snapshot()
@@ -634,11 +649,16 @@ class IndexSetReader:
         for r in self.readers.values():
             r.refresh()
 
-    def generation_vector(self) -> List[int]:
-        """Per-shard snapshot generations (one entry: the unsharded set
-        is the 1-shard degenerate case) — derived from the writers' part
-        counters, so a direct ``add_part`` is never missed."""
-        return [sum(r.index.n_parts for r in self.readers.values())]
+    def generation_vector(self) -> List[List[int]]:
+        """Per-shard, per-index published generations (one shard entry:
+        the unsharded set is the 1-shard degenerate case).  Per-index
+        vectors, never a sum: summed counters alias — one index
+        advancing while another folds/restores can leave the sum
+        unchanged, letting a mid-batch write dodge
+        ``SnapshotViolationError`` and a refresh no-op on a changed
+        set.  Derived from the writers' published counters, so a direct
+        ``add_part`` is never missed."""
+        return [[r.index.generation for r in self.readers.values()]]
 
     def io_stats(self) -> Dict[str, IOStats]:
         return {name: r.io_stats() for name, r in self.readers.items()}
@@ -723,12 +743,15 @@ class ShardedIndexSetReader:
             for r in readers.values():
                 r.refresh()
 
-    def generation_vector(self) -> List[int]:
-        """Per-shard snapshot generations: entry ``s`` moves exactly when
-        shard ``s``'s update stream applied a part that touched it —
-        what a snapshot-consistent batch pins in ``last_trace``."""
+    def generation_vector(self) -> List[List[int]]:
+        """Per-shard, per-index published generations: row ``s`` moves
+        exactly when shard ``s``'s update stream applied a part that
+        touched it — what a snapshot-consistent batch pins in
+        ``last_trace``.  Per-index vectors, never per-shard sums, for
+        the aliasing reason documented on
+        :meth:`IndexSetReader.generation_vector`."""
         return [
-            sum(r.index.n_parts for r in readers.values())
+            [r.index.generation for r in readers.values()]
             for readers in self.shard_readers
         ]
 

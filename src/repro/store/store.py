@@ -98,6 +98,7 @@ class DurableIndexStore:
         seed: int = 0,
         fsync: bool = True,
         recovery: str = "checkpoint",
+        replica: bool = False,
     ):
         if recovery not in ("checkpoint", "replay"):
             raise ValueError(f"unknown recovery mode {recovery!r}")
@@ -106,14 +107,32 @@ class DurableIndexStore:
         self.lexicon = lexicon
         self.n_shards = int(n_shards)
         self.seed = int(seed)
+        # replica mode: a READ-ONLY reopen of a (possibly live) primary's
+        # directory — mutations raise, recovery never truncates the
+        # primary's WAL, and ``poll()`` tails records the primary appends
+        self.replica = bool(replica)
         (self.path / "segments").mkdir(parents=True, exist_ok=True)
         self.set = self._fresh_set()
-        self.wal = WriteAheadLog(self.path / "wal.log", fsync=fsync)
+        self.wal = WriteAheadLog(self.path / "wal.log",
+                                 fsync=fsync and not self.replica)
         self.n_checkpoints = 0
         self._parts_since_ckpt = 0
         self._ckpt_seq = 0
+        self._wal_pos = 0
         self.recovery_info: Dict[str, object] = {}
         self._recover(recovery)
+
+    @classmethod
+    def open_replica(cls, path, cfg, lexicon, n_shards: int = 1,
+                     seed: int = 0) -> "DurableIndexStore":
+        """Reopen a primary's directory as a read replica: bulk-load the
+        checkpoint, restore the manifest's published generation vector
+        (so the replica's snapshot coordinates align with the primary's
+        — physical part counts collapse across the bulk apply and would
+        alias), then tail the WAL.  ``poll()`` catches up with whatever
+        the primary appended since."""
+        return cls(path, cfg, lexicon, n_shards=n_shards, seed=seed,
+                   fsync=False, recovery="checkpoint", replica=True)
 
     def _fresh_set(self) -> ShardedTextIndexSet:
         return ShardedTextIndexSet(
@@ -146,6 +165,12 @@ class DurableIndexStore:
                 for s, shard_state in enumerate(state):
                     if shard_state:
                         self.set.shards[s].apply_part_maps(shard_state)
+                # the bulk apply collapsed many published parts into one
+                # physical part per index — restore the manifest's
+                # PUBLISHED generation vector so this store's snapshot
+                # coordinates (and digest-stream positions) stay aligned
+                # with the writer that produced the checkpoint
+                self._restore_generations(manifest.get("generation_vector"))
                 start = int(manifest["wal_offset"])
                 self._ckpt_seq = int(manifest["seq"])
                 info["from_checkpoint"] = True
@@ -155,19 +180,51 @@ class DurableIndexStore:
                 start = 0
                 info["checkpoint_fallback"] = True
         size_before = self.wal.size()
-        records, _good, torn = self.wal.recover(start)
+        if self.replica:
+            # never truncate a live primary's log from a replica
+            records, good, torn = self.wal.read_from(start)
+        else:
+            records, good, torn = self.wal.recover(start)
         for rec_type, payload in records:
             self._apply_record(rec_type, payload)
+        self._wal_pos = good
         info["wal_records"] = len(records)
         info["torn"] = torn
         info["truncated_bytes"] = max(0, size_before - self.wal.size())
         self.recovery_info = info
-        if mode == "checkpoint" and (
+        if mode == "checkpoint" and not self.replica and (
             info["checkpoint_fallback"] or start > size_before
         ):
             # the published (manifest, WAL) pair was inconsistent —
             # re-publish a checkpoint of the recovered state
             self._checkpoint()
+
+    def _restore_generations(self, gens) -> None:
+        """Forward the per-index published generation counters to the
+        manifest's recorded vector (nested ``[shard][index]``)."""
+        if not gens:
+            return
+        for shard, row in zip(self.set.shards, gens):
+            if not isinstance(row, (list, tuple)):
+                return  # pre-vector manifest: nothing restorable
+            for idx, g in zip(shard.indexes.values(), row):
+                idx.restore_generation(int(g))
+
+    # ------------------------------------------------------- replica tail --
+    def poll(self) -> int:
+        """Replica catch-up: apply every WAL record the primary appended
+        since this replica's position; returns how many were applied.
+        The applied parts republish their touched-key digests locally,
+        so the replica's own readers take the same targeted-invalidation
+        path the primary's do."""
+        if not self.replica:
+            raise RuntimeError("poll() is the replica tailing surface; "
+                               "the primary applies writes directly")
+        records, good, _torn = self.wal.read_from(self._wal_pos)
+        for rec_type, payload in records:
+            self._apply_record(rec_type, payload)
+        self._wal_pos = good
+        return len(records)
 
     def _apply_record(self, rec_type: int, payload: bytes) -> None:
         if rec_type == REC_PART_TOKENS:
@@ -186,6 +243,7 @@ class DurableIndexStore:
         """Index one collection part, durably: the raw token stream is
         in the WAL (fsynced when enabled) before any index generation
         advances."""
+        self._require_primary()
         tokens = np.ascontiguousarray(tokens, dtype=np.int64)
         offsets = np.ascontiguousarray(offsets, dtype=np.int64)
         self.wal.append(REC_PART_TOKENS, encode_part_tokens(doc0, tokens, offsets))
@@ -197,6 +255,7 @@ class DurableIndexStore:
     ) -> List[Dict[str, frozenset]]:
         """Durably apply one pre-extracted part map (the per-shard
         update-queue shape); WAL first, substrate second."""
+        self._require_primary()
         self.wal.append(REC_PART_MAPS, encode_part_maps(maps))
         self._parts_since_ckpt += 1
         return self.set.apply_part_maps(maps)
@@ -207,6 +266,7 @@ class DurableIndexStore:
         By default a cycle that changed anything — or that has parts
         pending since the last checkpoint — also publishes a fresh
         segment + manifest, folding the WAL prefix into the checkpoint."""
+        self._require_primary()
         self.wal.append(REC_COMPACT, b"")
         digests = self.set.compact()
         rewrote = any(bool(d) for d in digests)
@@ -216,7 +276,13 @@ class DurableIndexStore:
 
     def checkpoint(self) -> None:
         """Publish the current state as a segment + manifest."""
+        self._require_primary()
         self._checkpoint()
+
+    def _require_primary(self) -> None:
+        if self.replica:
+            raise RuntimeError("read replica: single-owner writes happen "
+                               "on the primary; replicas only poll()")
 
     def _checkpoint(self) -> None:
         self._ckpt_seq += 1
@@ -263,7 +329,7 @@ class DurableIndexStore:
     def reader(self, cache_bytes: int = 8 << 20, targeted: bool = True):
         return self.set.reader(cache_bytes=cache_bytes, targeted=targeted)
 
-    def generation_vector(self) -> List[int]:
+    def generation_vector(self) -> List[List[int]]:
         return self.set.generation_vector()
 
     def build_io(self) -> Dict[str, IOStats]:

@@ -89,13 +89,29 @@ class WriteAheadLog:
         lost bytes a checkpoint already folded — e.g. an external
         truncation) yields no records and reports ``torn`` so the owner
         can re-publish a consistent checkpoint."""
+        records, off, torn = self.read_from(start)
+        if torn and off < self.size():
+            # drop the tear: O_APPEND writes land at the new end, so the
+            # already-open append handle stays valid
+            with open(self.path, "rb+") as fh:
+                fh.truncate(off)
+        self._end = off
+        return records, off, torn
+
+    def read_from(self, start: int = 0) -> Tuple[List[Tuple[int, bytes]], int, bool]:
+        """Non-destructive scan: the intact records from ``start`` and the
+        offset after the last one, WITHOUT truncating a torn tail.
+
+        This is the replica polling surface — a read replica tails a
+        LIVE primary's log, where an apparent tear may simply be a frame
+        the primary is mid-append on; truncating would corrupt the
+        owner.  The owner's :meth:`recover` is the destructive variant."""
         try:
             data = self.path.read_bytes()
         except OSError:
             data = b""
         size = len(data)
         if start > size:
-            self._end = size
             return [], size, True
         records: List[Tuple[int, bytes]] = []
         off = start
@@ -110,14 +126,7 @@ class WriteAheadLog:
                 break
             records.append((rtype, payload))
             off += HEADER_BYTES + ln
-        torn = off < size
-        if torn:
-            # drop the tear: O_APPEND writes land at the new end, so the
-            # already-open append handle stays valid
-            with open(self.path, "rb+") as fh:
-                fh.truncate(off)
-        self._end = off
-        return records, off, torn
+        return records, off, off < size
 
     def close(self) -> None:
         self._f.close()

@@ -297,3 +297,80 @@ def test_writer_update_invalidates_partial_and_device_tiers():
     got = ir.open_cursor(keys[1]).read_all()
     assert not got.flags.writeable
     assert (got == fresh).all()
+
+
+# ------------------------------------------- pool over resumed streams --
+def test_pooled_view_prepays_resumed_prefix(hot_world):
+    """Satellite regression (pool-over-resume bound seeding): a pooled
+    view over a warm RESUMED stream must not sit at ``settled_bound ==
+    -inf`` until the executor happens to poll it — the resumed prefix
+    replays as prepaid (zero-device-byte) chunks, so draining while
+    ``prepaid`` seeds ``last_doc`` from the prefix at zero I/O, exactly
+    like a private ReaderCursor gets seeded.  The bound itself stays
+    delivery-based: only delivered rows back it."""
+    lex, parts, ts = hot_world
+    key = _stream_keys(lex, parts[0][0], ts, n=4)[3]
+    reader = ts.reader(cache_bytes=1 << 20)
+    ir = reader.readers["multi"]
+    cold = ir.open_cursor(key).read_all()  # admits the full list…
+    reader.cache._map.clear()              # …forget it again
+
+    # settle a genuine partial: one chunk in, early stop
+    cur = ir.open_cursor(key)
+    head = cur.next_chunk()
+    assert head is not None and not cur.exhausted
+    assert cur.settle()
+
+    pool = ChunkPool()
+    view = pool.cursor((0, "multi", key), lambda: ir.open_cursor(key))
+    assert view.resumed
+    assert view.prepaid                      # the prefix costs nothing
+    assert view.settled_bound == float("-inf")  # …but is NOT yet a bound
+
+    b0 = _read_bytes(ts)
+    while not view.exhausted and view.prepaid:
+        view.next_chunk()
+    assert _read_bytes(ts) - b0 == 0
+    assert view.bytes_fetched == 0           # prepaid drain is free
+    assert view.last_doc is not None
+    assert view.settled_bound > float("-inf")  # seeded through delivery
+    assert view.settled_bound == float(head[-1, 0])
+
+    # a second view of the same stream replays the prefix prepaid too
+    view2 = pool.cursor((0, "multi", key), lambda: ir.open_cursor(key))
+    assert view2.prepaid
+    while not view2.exhausted and view2.prepaid:
+        view2.next_chunk()
+    assert view2.bytes_fetched == 0
+    assert view2.settled_bound == view.settled_bound
+
+    # drained to the end, the pooled view reproduces the cold drain
+    rest = view.read_all()
+    assert (np.concatenate([head, rest]) == cold).all()
+
+
+def test_pooled_warm_batch_parity_and_fewer_bytes(hot_world):
+    """Pool over resume at the service level: the SAME pooled batch
+    repeated back-to-back — pass 2 rides resumed prefixes through
+    prepaid pre-pull — stays element-wise identical and reads no more
+    device bytes than pass 1."""
+    lex, parts, ts = hot_world
+    phrases = _hot_phrases(lex, parts[0][0], n=5, ts=ts)
+    queries = [
+        Query(phrases[i % len(phrases)], phrase=True, top_k=2)
+        for i in range(10)
+    ]
+    svc = SearchService(ts, window=3, cache_bytes=1 << 20,
+                        share_chunks=True, device_decode=False)
+    b0 = _read_bytes(ts)
+    r1 = svc.search_batch(queries)
+    pass1 = _read_bytes(ts) - b0
+    assert svc.reader.cache.stats.partial_admits > 0
+
+    b0 = _read_bytes(ts)
+    r2 = svc.search_batch(queries)
+    pass2 = _read_bytes(ts) - b0
+    for q, a, b in zip(queries, r1, r2):
+        assert_results_identical(a, b, ctx=q)
+    assert pass2 < pass1, (pass2, pass1)
+    svc.check_trace_complete()

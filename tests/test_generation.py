@@ -1,0 +1,223 @@
+"""Published-generation accounting: the aliasing regressions.
+
+The snapshot coordinate every reader, cursor, trace and manifest pins
+used to be the physical part counter ``n_parts`` — which ALIASES: a
+checkpoint reopen bulk-applies collapsed state (one physical part
+standing in for the whole checkpointed history), so a reopened
+substrate reported generation coordinates that collided with ancient
+pre-checkpoint ones.  These tests pin the fixed contract:
+
+  * ``generation`` is a PUBLISHED monotone counter decoupled from
+    ``n_parts`` — a checkpoint reopen restores it from the manifest, so
+    snapshot coordinates survive close/reopen exactly;
+  * ``generation_vector`` is per-index (and per-shard per-index on a
+    sharded set): a summed scalar cannot distinguish WHICH index moved,
+    the vector can;
+  * a mid-batch advance — an update or a single index's background
+    compaction — trips ``SnapshotViolationError``;
+  * ``IndexReader.refresh()`` keyed on the published generation stays
+    targeted across compact-then-update sequences (each advance's
+    digest lands in the same history, so the reader invalidates exactly
+    the touched keys twice instead of falling back);
+  * ``restore_generation`` is forward-only and clears the digest
+    history (the collapsed span has no per-generation digests), so the
+    first refresh across a restore is the namespace drop — never a
+    bogus targeted pass against mismatched digests.
+"""
+
+import functools
+
+import numpy as np
+import pytest
+
+from repro.core.lexicon import make_lexicon
+from repro.core.sharded_set import ShardedTextIndexSet
+from repro.core.strategies import StrategyConfig
+from repro.core.text_index import IndexSetConfig, TextIndexSet
+from repro.data.corpus import generate_part
+from repro.search import SearchService, SnapshotViolationError
+from repro.search.join import numpy_window_join
+from repro.store import DurableIndexStore
+from tests.oracles import assert_results_identical, class_pools, core_queries
+
+
+def _cfg():
+    return IndexSetConfig(
+        strategy=StrategyConfig.set2(cluster_size=1024,
+                                     tag_extract_bytes=512),
+        fl_area_clusters=64,
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _world():
+    lex = make_lexicon(
+        n_words=3000, n_lemmas=1300, n_stop=20, n_frequent=120, seed=53
+    )
+    parts = [
+        generate_part(lex, n_docs=40, avg_doc_len=110, doc0=0, seed=70),
+        generate_part(lex, n_docs=40, avg_doc_len=110, doc0=40, seed=71),
+        generate_part(lex, n_docs=40, avg_doc_len=110, doc0=80, seed=72),
+    ]
+    queries = core_queries(parts[0][0], class_pools(lex))
+    return lex, parts, queries
+
+
+# --------------------------------------------------- reopen restoration --
+@pytest.mark.parametrize("n_shards", (1, 2))
+def test_reopen_restores_published_generation_vector(tmp_path, n_shards):
+    """THE aliasing regression: a checkpoint reopen collapses physical
+    part counts (the bulk apply is one part), but the PUBLISHED
+    generation vector must come back from the manifest exactly — a
+    reader or replica holding pre-close snapshot coordinates would
+    otherwise observe colliding generations."""
+    lex, parts, _ = _world()
+    store = DurableIndexStore(tmp_path / "s", _cfg(), lex,
+                              n_shards=n_shards, fsync=False)
+    store.add_documents(*parts[0], 0)
+    store.add_documents(*parts[1], 40)
+    store.compact()
+    store.add_documents(*parts[2], 80)
+    gens = store.generation_vector()
+    # several generations published per index by now
+    assert all(g >= 3 for row in gens for g in row)
+    store.checkpoint()
+    store.close()
+
+    reopened = DurableIndexStore(tmp_path / "s", _cfg(), lex,
+                                 n_shards=n_shards, fsync=False,
+                                 recovery="checkpoint")
+    assert reopened.generation_vector() == gens
+    # the physical counter really did collapse — the published counter
+    # is the thing doing the work here, not an n_parts mirror
+    for shard in getattr(reopened.set, "shards", [reopened.set]):
+        for idx in shard.indexes.values():
+            assert idx.n_parts < idx.generation
+    # and publication continues monotonically past the restored point
+    reopened.add_documents(*parts[0], 120)
+    after = reopened.generation_vector()
+    assert all(
+        a == g + 1 for row_a, row_g in zip(after, gens)
+        for a, g in zip(row_a, row_g)
+    )
+    reopened.close()
+
+
+def test_restore_generation_is_forward_only_and_clears_digests():
+    lex, parts, _ = _world()
+    ts = TextIndexSet(_cfg(), lex, seed=0)
+    ts.add_documents(*parts[0], 0)
+    idx = next(iter(ts.indexes.values()))
+    g = idx.generation
+    with pytest.raises(ValueError, match="backwards"):
+        idx.restore_generation(g - 1)
+    idx.restore_generation(g)  # no-op restore keeps the digest history
+    assert idx.digests_since(g - 1) is not None
+    idx.restore_generation(g + 5)  # a jump clears it: the collapsed
+    assert idx.generation == g + 5  # span has no per-generation digests
+    assert idx.digests_since(g) is None
+    assert idx.digests_since(g + 5) == []
+
+
+# ------------------------------------------------------ per-index vector --
+def test_vector_distinguishes_which_index_moved():
+    """A summed scalar says only THAT something advanced; the per-index
+    vector says WHICH index — the difference between dropping one cache
+    namespace and guessing."""
+    lex, parts, _ = _world()
+    ts = TextIndexSet(_cfg(), lex, seed=0)
+    ts.add_documents(*parts[0], 0)
+    ts.add_documents(*parts[1], 40)
+    names = list(ts.indexes.keys())
+    v0 = ts.generation_vector()
+    assert len(v0) == len(names)
+
+    # advance exactly ONE index: a part carrying rows for it alone (the
+    # live-update primitive — indexes with empty maps are never touched)
+    moved = 0
+    idx = ts.indexes[names[moved]]
+    key = next(iter(idx.dict.entries))
+    rows = np.array([[100_000, 1], [100_000, 5]], dtype=np.int64)
+    assert idx.add_part({key: rows}) == frozenset([key])
+    v1 = ts.generation_vector()
+    assert v1[moved] == v0[moved] + 1
+    assert [g for i, g in enumerate(v1) if i != moved] == [
+        g for i, g in enumerate(v0) if i != moved
+    ]
+    # the scalar sum sees +1 and cannot name the index
+    assert sum(v1) == sum(v0) + 1
+
+
+@pytest.mark.parametrize("n_shards", (1, 2))
+def test_mid_batch_advance_raises_snapshot_violation(n_shards):
+    """A writer advancing ANY index of ANY shard while a batch executes
+    against its pinned snapshot must refuse to return torn results."""
+    lex, parts, queries = _world()
+    if n_shards == 1:
+        sub = TextIndexSet(_cfg(), lex, seed=0)
+    else:
+        sub = ShardedTextIndexSet(_cfg(), lex, n_shards=n_shards, seed=0)
+    sub.add_documents(*parts[0], 0)
+
+    fired = [False]
+
+    def mutating_join(a, b, w):
+        if not fired[0]:
+            fired[0] = True
+            # concurrent advance + compact across two indexes: the sum
+            # moves, the vector names both moved indexes
+            sub.add_documents(*parts[1], 40)
+            for shard in getattr(sub, "shards", [sub]):
+                for idx in shard.indexes.values():
+                    idx.compact()
+        return numpy_window_join(a, b, w)
+
+    svc = SearchService(sub, window=3, backend=mutating_join)
+    with pytest.raises(SnapshotViolationError):
+        svc.search_batch(queries)
+    assert fired[0]
+
+
+# ------------------------------------------- refresh stays targeted --
+def test_compact_then_update_refresh_stays_targeted():
+    """Two advances between refreshes — a compaction cycle, then an
+    update part — must both resolve through the digest history: the
+    reader invalidates exactly the touched keys (twice), never the
+    whole namespace, and serves the post-update truth."""
+    lex, parts, queries = _world()
+    ts = TextIndexSet(_cfg(), lex, seed=0)
+    ts.add_documents(*parts[0], 0)
+    svc = SearchService(ts, window=3, backend="numpy")
+    svc.search_batch(queries)  # warm the cache at generation v0
+
+    ts.compact()
+    ts.add_documents(*parts[1], 40)
+
+    reader = svc.reader
+    cs = reader.cache_stats
+    drops0, inv0 = cs.full_drops, cs.invalidations
+    modes = [r.refresh() for r in reader.readers.values()]
+    assert set(modes) == {"targeted"}, modes
+    assert cs.full_drops == drops0
+    assert cs.invalidations > inv0  # touched keys really were dropped
+
+    got = svc.search_batch(queries)
+    ref = SearchService(ts, window=3, backend="numpy").search_batch(queries)
+    for qi, (a, b) in enumerate(zip(ref, got)):
+        assert_results_identical(a, b, ctx=("compact-then-update", qi),
+                                 check_scanned=False)
+
+
+def test_refresh_across_generation_restore_is_full_drop():
+    """A reader pinned BELOW a restored generation has no digest
+    coverage (the restore cleared the history): refresh must take the
+    namespace drop, not a bogus targeted pass."""
+    lex, parts, queries = _world()
+    ts = TextIndexSet(_cfg(), lex, seed=0)
+    ts.add_documents(*parts[0], 0)
+    svc = SearchService(ts, window=3, backend="numpy")
+    svc.search_batch(queries)
+    for idx in ts.indexes.values():
+        idx.restore_generation(idx.generation + 3)
+    modes = [r.refresh() for r in svc.reader.readers.values()]
+    assert set(modes) == {"full_drop"}, modes

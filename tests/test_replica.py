@@ -1,0 +1,437 @@
+"""Replica read fabric: digest-stream catch-up, routing, failover.
+
+Pins the tentpole contract from every side:
+
+  * identity: serving a batch through a :class:`ReplicaSetReader` is
+    element-wise identical to the single-reader path — at every replica
+    count, across backends, WITH a replica killed mid-batch (the
+    failover oracle);
+  * routing: fetch waves pin the least-loaded live replica per shard,
+    so a multi-wave batch spreads across all replicas and the in-flight
+    counters return to zero;
+  * catch-up: a replica consumes the writer's touched-key digest stream
+    — targeted invalidation within the bounded history, the
+    whole-namespace drop fallback behind it — and a revived replica
+    catches up before serving again;
+  * staleness: ``check_trace_complete`` refuses a trace where any
+    replica ran ahead of the batch's pinned snapshot or a LIVE replica
+    lagged it;
+  * the store tier: ``DurableIndexStore.open_replica`` reopens a
+    primary's directory read-only at the primary's published generation
+    vector (the manifest restore — physical part counts collapse across
+    the checkpoint bulk-apply and would alias), ``poll()`` tails the
+    live WAL non-destructively, and every mutation raises;
+  * the cache substrate: a property test that ``drop_touched`` reclaims
+    exactly the admitted charge across all three tiers (host, partial,
+    device).
+"""
+
+import functools
+
+import numpy as np
+import pytest
+
+from tests._hypothesis_compat import given, settings, strategies as st
+
+from repro.core.inverted_index import CursorResume
+from repro.core.lexicon import make_lexicon
+from repro.core.sharded_set import ShardedTextIndexSet
+from repro.core.strategies import StrategyConfig
+from repro.core.text_index import IndexSetConfig, TextIndexSet
+from repro.data.corpus import generate_part
+from repro.search import (
+    AllReplicasDeadError,
+    Query,
+    ReplicaDeadError,
+    ReplicaSetReader,
+    SearchService,
+    TraceIncompleteError,
+)
+from repro.search.reader import PostingCache
+from repro.store import DurableIndexStore
+from tests.oracles import (
+    assert_results_identical,
+    class_pools,
+    core_queries,
+)
+
+SHARD_COUNTS = (1, 2)
+
+
+def _cfg():
+    return IndexSetConfig(
+        strategy=StrategyConfig.set2(cluster_size=1024),
+        fl_area_clusters=64,
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _world():
+    lex = make_lexicon(
+        n_words=3000, n_lemmas=1300, n_stop=20, n_frequent=120, seed=47
+    )
+    parts = [
+        generate_part(lex, n_docs=40, avg_doc_len=110, doc0=0, seed=90),
+        generate_part(lex, n_docs=40, avg_doc_len=110, doc0=40, seed=91),
+        generate_part(lex, n_docs=40, avg_doc_len=110, doc0=80, seed=92),
+    ]
+    pools = class_pools(lex)
+    queries = core_queries(parts[0][0], pools) + [
+        Query(core_queries(parts[0][0], pools)[0].words, top_k=3),
+    ]
+    return lex, parts, queries
+
+
+def _build(n_shards, n_parts=2):
+    lex, parts, queries = _world()
+    if n_shards == 1:
+        sub = TextIndexSet(_cfg(), lex, seed=0)
+    else:
+        sub = ShardedTextIndexSet(_cfg(), lex, n_shards=n_shards, seed=0)
+    doc0 = 0
+    for toks, bounds in parts[:n_parts]:
+        sub.add_documents(toks, bounds, doc0)
+        doc0 += bounds.shape[0]
+    return sub, parts, queries
+
+
+def _kill_after(n):
+    """A one-shot injected fault: the replica serves ``n`` more ops, then
+    dies mid-batch."""
+    served = [0]
+
+    def fault(rep, op):
+        served[0] += 1
+        if served[0] > n:
+            raise ReplicaDeadError(f"injected after {n} serves ({op})")
+
+    return fault
+
+
+# ------------------------------------------------------------- identity --
+@pytest.mark.parametrize("n_shards", SHARD_COUNTS)
+@pytest.mark.parametrize("n_replicas", (1, 3))
+def test_fabric_identity(n_shards, n_replicas):
+    sub, _, queries = _build(n_shards)
+    ref = SearchService(sub, window=3, backend="numpy").search_batch(queries)
+    fab = ReplicaSetReader(sub, n_replicas=n_replicas)
+    svc = SearchService(fab, window=3, backend="numpy")
+    got = svc.search_batch(queries)
+    for qi, (a, b) in enumerate(zip(ref, got)):
+        assert_results_identical(a, b, ctx=("fabric", n_shards, qi),
+                                 check_scanned=queries[qi].top_k is None)
+    rb = svc.last_trace["replicas"]
+    assert rb["n_replicas"] == n_replicas
+    assert rb["failovers"] == 0
+    assert all(all(row) for row in rb["live"])
+
+
+@pytest.mark.parametrize("backend", ("jax", "pallas"))
+def test_fabric_identity_device_backends(backend):
+    sub, _, queries = _build(2)
+    ref = SearchService(sub, window=3, backend="numpy").search_batch(queries)
+    fab = ReplicaSetReader(sub, n_replicas=2)
+    got = SearchService(fab, window=3, backend=backend).search_batch(queries)
+    for qi, (a, b) in enumerate(zip(ref, got)):
+        assert_results_identical(a, b, ctx=(backend, qi), check_route=False,
+                                 check_scanned=queries[qi].top_k is None)
+
+
+# -------------------------------------------------------------- routing --
+def test_wave_routing_balances_and_unwinds():
+    sub, _, queries = _build(2)
+    fab = ReplicaSetReader(sub, n_replicas=2)
+    svc = SearchService(fab, window=3, backend="numpy")
+    svc.search_batch(queries)
+    for row in fab.replicas:
+        # a multi-wave batch reaches every live replica of every shard
+        assert all(rep.waves_served > 0 for rep in row), [
+            rep.waves_served for rep in row
+        ]
+        # and the in-flight pin always unwinds
+        assert all(rep.inflight == 0 for rep in row)
+    # least-loaded (cumulative read bytes) routing keeps I/O balanced:
+    # the bottleneck replica carries well under the whole shard's load
+    for row in fab.replicas:
+        total = sum(rep.read_bytes() for rep in row)
+        assert max(rep.read_bytes() for rep in row) < total, [
+            rep.read_bytes() for rep in row
+        ]
+
+
+# ------------------------------------------------------------- failover --
+@pytest.mark.parametrize("n_shards", SHARD_COUNTS)
+def test_failover_mid_batch_is_element_wise_identical(n_shards):
+    """THE failover oracle: kill one replica partway through a batch —
+    the batch completes on the sibling with results element-wise
+    identical to the healthy run, and the trace ledgers the failover."""
+    sub, _, queries = _build(n_shards)
+    ref = SearchService(sub, window=3, backend="numpy").search_batch(queries)
+    fab = ReplicaSetReader(sub, n_replicas=2)
+    svc = SearchService(fab, window=3, backend="numpy")
+    fab.replicas[0][0].fault = _kill_after(2)
+    got = svc.search_batch(queries)
+    for qi, (a, b) in enumerate(zip(ref, got)):
+        assert_results_identical(a, b, ctx=("failover", n_shards, qi),
+                                 check_scanned=queries[qi].top_k is None)
+    rb = svc.last_trace["replicas"]
+    assert rb["failovers_batch"] >= 1
+    assert not fab.replicas[0][0].live
+    assert rb["live"][0] == [False, True]
+    # the dead replica stays dead for the next batch; results still match
+    got2 = svc.search_batch(queries)
+    for qi, (a, b) in enumerate(zip(ref, got2)):
+        assert_results_identical(a, b, ctx=("post-failover", n_shards, qi),
+                                 check_scanned=queries[qi].top_k is None)
+    assert svc.last_trace["replicas"]["failovers_batch"] == 0
+
+
+def test_all_replicas_dead_raises():
+    sub, _, queries = _build(1)
+    fab = ReplicaSetReader(sub, n_replicas=2)
+    svc = SearchService(fab, window=3, backend="numpy")
+    for rep in fab.replicas[0]:
+        rep.kill()
+    with pytest.raises(AllReplicasDeadError):
+        svc.search_batch(queries[:2])
+
+
+def test_single_replica_is_plain_reader_with_failover_floor():
+    sub, _, queries = _build(1)
+    fab = ReplicaSetReader(sub, n_replicas=1)
+    svc = SearchService(fab, window=3, backend="numpy")
+    svc.search_batch(queries)
+    fab.replicas[0][0].fault = _kill_after(1)
+    with pytest.raises(AllReplicasDeadError):
+        svc.search_batch(queries)
+
+
+# ------------------------------------------------------------- catch-up --
+def test_update_catch_up_is_targeted_and_revive_catches_up():
+    sub, parts, queries = _build(2, n_parts=1)
+    ref_svc = SearchService(sub, window=3, backend="numpy")
+    fab = ReplicaSetReader(sub, n_replicas=2)
+    svc = SearchService(fab, window=3, backend="numpy")
+    svc.search_batch(queries)  # warm every replica's cache
+
+    dead = fab.replicas[0][0]
+    dead.kill()
+    toks, bounds = parts[1]
+    sub.add_documents(toks, bounds, 40)
+
+    got = svc.search_batch(queries)  # live replicas catch up targeted
+    ref = ref_svc.search_batch(queries)
+    for qi, (a, b) in enumerate(zip(ref, got)):
+        assert_results_identical(a, b, ctx=("catch-up", qi),
+                                 check_scanned=queries[qi].top_k is None)
+    live = fab.replicas[0][1]
+    assert live.catch_ups["targeted"] > 0
+    assert live.catch_ups["full_drop"] == 0
+    # the dead replica lagged the writer the whole time
+    assert dead.lag() > 0
+
+    modes = dead.revive()
+    assert set(modes) <= {"targeted", "full_drop"}
+    assert dead.lag() == 0
+    got2 = svc.search_batch(queries)
+    for qi, (a, b) in enumerate(zip(ref, got2)):
+        assert_results_identical(a, b, ctx=("post-revive", qi),
+                                 check_scanned=queries[qi].top_k is None)
+
+
+def test_behind_history_catch_up_falls_back_to_full_drop():
+    """A replica whose pinned generation the bounded digest history no
+    longer covers must take the namespace-drop path — and ledger it."""
+    sub, parts, queries = _build(1, n_parts=1)
+    fab = ReplicaSetReader(sub, n_replicas=1)
+    svc = SearchService(fab, window=3, backend="numpy")
+    svc.search_batch(queries)
+    rep = fab.replicas[0][0]
+    toks, bounds = parts[1]
+    sub.add_documents(toks, bounds, 40)
+    # simulate history loss (equivalent to > DIGEST_HISTORY parts landing
+    # while the replica was away): the digest log no longer reaches back
+    for idx in sub.indexes.values():
+        idx._part_digests.clear()
+    modes = rep.catch_up()
+    assert "full_drop" in modes
+    assert rep.catch_ups["full_drop"] > 0
+    assert rep.lag() == 0
+    # and the namespace drop is ledgered on the replica's own cache
+    assert rep.cache.stats.full_drops > 0
+    ref = SearchService(sub, window=3, backend="numpy").search_batch(queries)
+    got = svc.search_batch(queries)
+    for qi, (a, b) in enumerate(zip(ref, got)):
+        assert_results_identical(a, b, ctx=("full-drop", qi),
+                                 check_scanned=queries[qi].top_k is None)
+
+
+# ------------------------------------------------------------ staleness --
+def test_stale_or_ahead_replica_trips_trace_guard():
+    sub, _, queries = _build(2)
+    fab = ReplicaSetReader(sub, n_replicas=2)
+    svc = SearchService(fab, window=3, backend="numpy")
+    svc.search_batch(queries)
+    svc.check_trace_complete()  # healthy trace passes
+
+    healthy = [
+        [list(gv) for gv in row]
+        for row in svc.last_trace["replicas"]["snapshot"]
+    ]
+    # a LIVE replica lagging the pinned snapshot is a staleness violation
+    svc.last_trace["replicas"]["snapshot"][0][0] = [
+        g - 1 for g in healthy[0][0]
+    ]
+    with pytest.raises(TraceIncompleteError, match="stale"):
+        svc.check_trace_complete()
+    # a replica AHEAD of the snapshot served a newer collection state
+    svc.last_trace["replicas"]["snapshot"][0][0] = [
+        g + 1 for g in healthy[0][0]
+    ]
+    with pytest.raises(TraceIncompleteError, match="AHEAD"):
+        svc.check_trace_complete()
+    # a DEAD replica may lag without tripping the guard
+    svc.last_trace["replicas"]["snapshot"][0][0] = [
+        g - 1 for g in healthy[0][0]
+    ]
+    svc.last_trace["replicas"]["live"][0][0] = False
+    svc.check_trace_complete()
+
+
+def test_fabric_generation_vector_is_writer_truth():
+    sub, parts, _ = _build(2, n_parts=1)
+    fab = ReplicaSetReader(sub, n_replicas=2)
+    assert fab.generation_vector() == sub.generation_vector()
+    toks, bounds = parts[1]
+    sub.add_documents(toks, bounds, 40)
+    # writer truth moves immediately; replica positions move on catch-up
+    assert fab.generation_vector() == sub.generation_vector()
+    for row in fab.replica_generations():
+        for gv in row:
+            assert gv != sub.generation_vector()[0] or fab.n_shards > 1
+    fab.refresh()
+    assert fab.replica_generations() == [
+        [shard_gv] * fab.n_replicas
+        for shard_gv in sub.generation_vector()
+    ]
+
+
+# ---------------------------------------------------------- store replica --
+def test_store_replica_opens_at_primary_generation_and_polls(tmp_path):
+    lex, parts, queries = _world()
+    cfg = _cfg()
+    primary = DurableIndexStore(tmp_path / "store", cfg, lex,
+                                n_shards=2, fsync=False)
+    toks, bounds = parts[0]
+    primary.add_documents(toks, bounds, 0)
+    primary.compact()
+    primary.checkpoint()
+
+    replica = DurableIndexStore.open_replica(tmp_path / "store", cfg, lex,
+                                             n_shards=2)
+    # the manifest restore: physical part counts collapsed across the
+    # bulk apply, but the PUBLISHED generation vector aligns exactly
+    assert replica.generation_vector() == primary.generation_vector()
+
+    ref = SearchService(primary, window=3, backend="numpy")
+    fab = ReplicaSetReader(replica, n_replicas=2)
+    svc = SearchService(fab, window=3, backend="numpy")
+    r0 = ref.search_batch(queries)
+    r1 = svc.search_batch(queries)
+    for qi, (a, b) in enumerate(zip(r0, r1)):
+        assert_results_identical(a, b, ctx=("store-replica", qi),
+                                 check_scanned=queries[qi].top_k is None)
+
+    # the primary keeps writing; the replica tails the LIVE WAL
+    toks, bounds = parts[1]
+    primary.add_documents(toks, bounds, 40)
+    assert replica.poll() > 0
+    assert replica.generation_vector() == primary.generation_vector()
+    assert replica.poll() == 0  # idempotent at the tail
+    r2 = ref.search_batch(queries)
+    r3 = svc.search_batch(queries)
+    for qi, (a, b) in enumerate(zip(r2, r3)):
+        assert_results_identical(a, b, ctx=("store-replica-polled", qi),
+                                 check_scanned=queries[qi].top_k is None)
+    # tailing never truncated the primary's log
+    assert replica.wal.size() == primary.wal.tell()
+
+    primary.close()
+    replica.close()
+
+
+def test_store_replica_mutations_raise(tmp_path):
+    lex, parts, _ = _world()
+    cfg = _cfg()
+    primary = DurableIndexStore(tmp_path / "store", cfg, lex, fsync=False)
+    toks, bounds = parts[0]
+    primary.add_documents(toks, bounds, 0)
+    primary.checkpoint()
+    replica = DurableIndexStore.open_replica(tmp_path / "store", cfg, lex)
+    toks, bounds = parts[1]
+    with pytest.raises(RuntimeError, match="replica"):
+        replica.add_documents(toks, bounds, 40)
+    with pytest.raises(RuntimeError, match="replica"):
+        replica.compact()
+    with pytest.raises(RuntimeError, match="replica"):
+        replica.checkpoint()
+    primary.close()
+    replica.close()
+
+
+# -------------------------------------- drop_touched across cache tiers --
+def _resume(blob=b"xy"):
+    return CursorResume(chunk_clusters=1, units_consumed=1,
+                        payload_consumed=len(blob),
+                        decoder_state=(blob, 0, 0, False))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.lists(
+        st.tuples(
+            st.integers(0, 11),   # key
+            st.integers(0, 2),    # tier: host / partial / device
+            st.integers(1, 64),   # rows
+        ),
+        min_size=1, max_size=16,
+    ),
+    st.lists(st.integers(0, 11), min_size=0, max_size=6),  # touched keys
+)
+def test_drop_touched_reclaims_exact_charge_across_tiers(entries, touched):
+    """Property: targeted invalidation reclaims EXACTLY the admitted
+    charge of the touched slots in every tier — ``bytes_used`` returns
+    to its pre-admission level when everything admitted is touched, and
+    per-tier invalidation counts match the touched slot census."""
+    cache = PostingCache(budget_bytes=1 << 24)  # no eviction pressure
+    admitted = {}  # (tier, key) -> True, last admission wins per tier
+    for key, tier, rows in entries:
+        arr = np.arange(rows * 2, dtype=np.int64).reshape(rows, 2)
+        if tier == 0:
+            cache.put("ix", key, arr)
+        elif tier == 1:
+            if ("ix", key) in cache._map:
+                continue  # a full list supersedes partial admits
+            cache.put_partial("ix", key, arr, _resume())
+        else:
+            cache.put_device("ix", key, arr.astype(np.int32))
+        admitted[(tier, key)] = True
+    base = cache.stats.bytes_used
+    assert base > 0
+
+    digest = frozenset(touched)
+    inv0 = cache.stats.invalidations
+    n_touched = (
+        sum(1 for k in cache._map if k[1] in digest)
+        + sum(1 for k in cache._partials if k[1] in digest)
+        + sum(1 for k in cache._device if k[1] in digest)
+    )
+    dropped = cache.drop_touched("ix", [digest])
+    assert dropped == n_touched
+    assert cache.stats.invalidations - inv0 == n_touched
+
+    # dropping the remainder returns bytes_used EXACTLY to pre-admission
+    all_keys = frozenset(key for key, _, _ in entries)
+    cache.drop_touched("ix", [all_keys])
+    assert cache.stats.bytes_used == 0
+    assert len(cache._map) == len(cache._partials) == len(cache._device) == 0
