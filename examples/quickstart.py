@@ -9,6 +9,13 @@ survives a replica killed mid-batch, and finally persist the collection
 behind the durable WAL-fed store, crash it mid-part, and recover.
 
     PYTHONPATH=src python examples/quickstart.py
+
+Before sending a change, run the invariant linter (it is also the first
+step of ``scripts/tier1.sh``): ``scripts/lint.sh`` checks charge
+accounting, trace schema, generation discipline, cache-tier
+encapsulation and kernel purity over ``src/``; ``scripts/lint.sh
+--changed-only`` lints just the files your working tree touches.  See
+DESIGN_SEARCH.md §12.
 """
 
 import numpy as np

@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# Invariant lint gate: runs the repro.analysis passes over src/ (or,
+# with --changed-only, just the .py files the working tree touches
+# relative to HEAD — the fast pre-commit mode).  Non-zero exit on any
+# finding; wired into scripts/tier1.sh ahead of pytest because a lint
+# failure is cheaper to surface than a test failure.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+targets=(src)
+if [[ "${1:-}" == "--changed-only" ]]; then
+    shift
+    mapfile -t changed < <(
+        { git diff --name-only HEAD; git ls-files --others --exclude-standard; } \
+            | sort -u | grep '^src/.*\.py$' || true
+    )
+    if [[ ${#changed[@]} -eq 0 ]]; then
+        echo "lint: no changed src/*.py files"
+        exit 0
+    fi
+    targets=("${changed[@]}")
+fi
+
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    exec python -m repro.analysis "${targets[@]}" "$@"

@@ -3,6 +3,10 @@
 # Keep in sync with ROADMAP.md ("Tier-1 verify").
 set -euo pipefail
 cd "$(dirname "$0")/.."
+# invariant lint gate first: the repro.analysis passes (charge
+# accounting, trace schema, generation discipline, cache tiers, kernel
+# purity) fail in milliseconds, before any benchmark or test runs
+scripts/lint.sh
 # tiny-corpus smoke of the sharded scatter/gather serving path (--shards
 # composes with --batched: both substrates run through search_batch):
 # asserts sharded results stay identical to unsharded and read I/O does
@@ -49,4 +53,7 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.search_speed \
 # checkpoint paths), and fold streams without ever reading more bytes
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.durability \
   --scale 0.05 --queries 12 --parts 3 --shards 2
-PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -x -q "$@"
+# dev mode + DeprecationWarning-as-error: deprecations surface as
+# failures here, not as breakage on the next interpreter upgrade
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -X dev \
+  -W error::DeprecationWarning -m pytest -x -q "$@"

@@ -1,0 +1,30 @@
+"""``repro.analysis`` — AST-based invariant linter for the repo's own
+contracts: charge accounting, trace schema, generation discipline,
+cache-tier encapsulation, kernel purity.
+
+Run as ``python -m repro.analysis [paths...]`` (or ``scripts/lint.sh``);
+exits non-zero when any finding survives pragma suppression.  See
+DESIGN_SEARCH.md §12 for what each pass guards and why.
+"""
+
+from __future__ import annotations
+
+from repro.analysis.engine import (
+    LintPass,
+    lint_file,
+    lint_paths,
+    lint_source,
+)
+from repro.analysis.passes import all_passes
+from repro.analysis.schema import Finding, render_json, render_text
+
+__all__ = [
+    "Finding",
+    "LintPass",
+    "all_passes",
+    "lint_file",
+    "lint_paths",
+    "lint_source",
+    "render_json",
+    "render_text",
+]

@@ -1,0 +1,43 @@
+"""CLI: ``python -m repro.analysis [paths...] [--json]``.
+
+Exit status 0 = clean, 1 = findings, 2 = usage error.  Text output is
+one finding per line in the stable ``file:line pass-id message`` form.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional
+
+from repro.analysis.engine import lint_paths
+from repro.analysis.passes import all_passes
+from repro.analysis.schema import render_json, render_text
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="invariant linter (charge / trace / generation / "
+        "cache / kernel passes)",
+    )
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files or directories to lint (default: src)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit findings as a JSON array")
+    ap.add_argument("--list-passes", action="store_true",
+                    help="print registered pass ids and exit")
+    ns = ap.parse_args(argv)
+    if ns.list_passes:
+        for p in all_passes():
+            print(p.id)
+        return 0
+    findings = lint_paths(ns.paths or ["src"])
+    if findings:
+        print(render_json(findings) if ns.json else render_text(findings))
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

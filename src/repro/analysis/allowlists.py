@@ -1,0 +1,86 @@
+"""Module allowlists the invariant passes key off — data, not code.
+
+A new chokepoint (say, a PR 11 multi-process fetch worker that charges
+its own device reads) opts in by adding its module path HERE, in review,
+rather than by editing pass logic.  Paths are repo-relative with forward
+slashes; membership is tested by suffix so the linter works from any
+checkout root.
+"""
+
+from __future__ import annotations
+
+from typing import FrozenSet
+
+# Modules allowed to call BlockDevice read/write methods or mutate
+# IOStats directly.  Everything else must go through StreamManager /
+# IndexReader / the store so every byte lands in one charge ledger.
+CHARGE_CHOKEPOINT_MODULES: FrozenSet[str] = frozenset({
+    "repro/core/io_sim.py",          # the device simulator itself
+    "repro/core/stream.py",          # StreamManager: cluster/packed I/O
+    "repro/core/inverted_index.py",  # dictionary-group + entry charges
+})
+
+# Method names on the simulated devices whose call sites are charged
+# I/O.  Kept with the allowlist (same review surface) because adding a
+# device method and adding a chokepoint tend to happen together.
+DEVICE_METHODS: FrozenSet[str] = frozenset({
+    "read_clusters", "write_clusters",
+    "read_small", "write_small",
+    "read_sequential", "write_sequential",
+})
+
+# Fields of IOStats; assignment/augassign to these on a non-self base
+# outside the chokepoints is a charge bypass.
+IOSTATS_FIELDS: FrozenSet[str] = frozenset({
+    "read_ops", "write_ops", "read_bytes", "write_bytes",
+})
+
+# Modules allowed to touch PostingCache internal tier dicts and to
+# admit entries (put/put_partial/put_device).  reader.py owns the cache;
+# pool.py settles pooled cursors into the partial tier.
+CACHE_TIER_MODULES: FrozenSet[str] = frozenset({
+    "repro/search/reader.py",
+    "repro/search/pool.py",
+})
+
+# PostingCache internal tier attributes (host map, partial-prefix tier,
+# device-resident tier).
+CACHE_TIER_ATTRS: FrozenSet[str] = frozenset({
+    "_map", "_partials", "_device",
+})
+
+# Modules allowed to write ``.generation`` — InvertedIndex publishes it,
+# restore_generation replays it from the manifest.
+GENERATION_WRITER_MODULES: FrozenSet[str] = frozenset({
+    "repro/core/inverted_index.py",
+})
+
+# Module prefixes whose every function is held to kernel purity even
+# without a jit decorator (trailing slash = package).
+KERNEL_MODULE_PREFIXES: FrozenSet[str] = frozenset({
+    "repro/kernels/",
+})
+
+
+def module_path(path: str) -> str:
+    """Normalise ``path`` to the repo-relative form the allowlists use
+    (forward slashes, ``src/``-relative when under ``src/``)."""
+    p = path.replace("\\", "/")
+    if "/src/" in p:
+        p = p.split("/src/", 1)[1]
+    elif p.startswith("src/"):
+        p = p[len("src/"):]
+    return p
+
+
+def in_allowlist(path: str, allowlist: FrozenSet[str]) -> bool:
+    p = module_path(path)
+    return any(p == m or p.endswith("/" + m) for m in allowlist)
+
+
+def in_kernel_scope(path: str) -> bool:
+    p = module_path(path)
+    return any(
+        p.startswith(pref) or ("/" + pref) in p
+        for pref in KERNEL_MODULE_PREFIXES
+    )

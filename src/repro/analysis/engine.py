@@ -1,0 +1,114 @@
+"""Shared visitor engine for the ``repro.analysis`` invariant passes.
+
+Each pass is a small class with a stable ``id`` and a ``run(tree, path,
+src)`` method returning :class:`~repro.analysis.schema.Finding` records.
+The engine parses every file once, hands the same AST to every pass,
+and applies pragma suppression afterwards so passes never need to know
+about escape hatches.
+
+Pragma form, on (or immediately above) the offending line::
+
+    dev.read_small(n)  # repro-lint: allow(charge-accounting) why it's ok
+
+``allow(*)`` suppresses every pass on that line.  Pragmas are *scoped*:
+an ``allow(charge-accounting)`` does not silence a generation finding on
+the same line, so escape hatches stay auditable per invariant.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set
+
+from repro.analysis.schema import Finding
+
+_PRAGMA_RE = re.compile(r"#\s*repro-lint:\s*allow\(([^)]*)\)")
+
+
+class LintPass:
+    """Base class: subclasses set ``id`` and implement :meth:`run`."""
+
+    id: str = ""
+
+    def run(self, tree: ast.AST, path: str, src: str) -> List[Finding]:
+        raise NotImplementedError
+
+    # -- shared helpers -------------------------------------------------
+    def finding(self, path: str, node: ast.AST, message: str) -> Finding:
+        return Finding(
+            file=path,
+            line=getattr(node, "lineno", 0),
+            pass_id=self.id,
+            message=message,
+        )
+
+
+def parse_pragmas(src: str) -> Dict[int, Set[str]]:
+    """Map 1-based line number -> set of allowed pass ids ("*" = all)."""
+    pragmas: Dict[int, Set[str]] = {}
+    for i, line in enumerate(src.splitlines(), start=1):
+        m = _PRAGMA_RE.search(line)
+        if m:
+            ids = {p.strip() for p in m.group(1).split(",") if p.strip()}
+            pragmas[i] = ids
+    return pragmas
+
+
+def _suppressed(f: Finding, pragmas: Dict[int, Set[str]]) -> bool:
+    # a pragma covers its own line and the line below it, so long calls
+    # can carry the pragma on the opening line while the finding anchors
+    # to a continuation (and vice versa)
+    for line in (f.line, f.line - 1):
+        ids = pragmas.get(line)
+        if ids and ("*" in ids or f.pass_id in ids):
+            return True
+    return False
+
+
+def lint_source(
+    src: str, path: str, passes: Sequence[LintPass]
+) -> List[Finding]:
+    """Lint one already-read source string (testing seam: fixtures lint
+    without touching the filesystem)."""
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as exc:
+        return [Finding(path, exc.lineno or 0, "parse-error", str(exc.msg))]
+    pragmas = parse_pragmas(src)
+    out: List[Finding] = []
+    for p in passes:
+        for f in p.run(tree, path, src):
+            if not _suppressed(f, pragmas):
+                out.append(f)
+    return out
+
+
+def lint_file(path: str, passes: Sequence[LintPass]) -> List[Finding]:
+    src = Path(path).read_text(encoding="utf-8")
+    return lint_source(src, path, passes)
+
+
+def iter_python_files(paths: Iterable[str]) -> List[str]:
+    out: List[str] = []
+    for p in paths:
+        pp = Path(p)
+        if pp.is_dir():
+            out.extend(str(f) for f in sorted(pp.rglob("*.py")))
+        elif pp.suffix == ".py" and pp.exists():
+            out.append(str(pp))
+    return out
+
+
+def lint_paths(
+    paths: Iterable[str], passes: Optional[Sequence[LintPass]] = None
+) -> List[Finding]:
+    if passes is None:
+        from repro.analysis.passes import all_passes
+
+        passes = all_passes()
+    findings: List[Finding] = []
+    for f in iter_python_files(paths):
+        findings.extend(lint_file(f, passes))
+    return sorted(findings)

@@ -1,0 +1,35 @@
+"""Pass registry for ``repro.analysis``.
+
+Order is stable (it is the order findings tie-break in) and additive:
+new invariant passes register here and nowhere else.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.analysis.engine import LintPass
+from repro.analysis.passes.cache import CacheTierPass
+from repro.analysis.passes.charge import ChargeAccountingPass
+from repro.analysis.passes.generation import GenerationDisciplinePass
+from repro.analysis.passes.kernel import KernelPurityPass
+from repro.analysis.passes.trace import TraceSchemaPass
+
+__all__ = [
+    "CacheTierPass",
+    "ChargeAccountingPass",
+    "GenerationDisciplinePass",
+    "KernelPurityPass",
+    "TraceSchemaPass",
+    "all_passes",
+]
+
+
+def all_passes() -> List[LintPass]:
+    return [
+        ChargeAccountingPass(),
+        TraceSchemaPass(),
+        GenerationDisciplinePass(),
+        CacheTierPass(),
+        KernelPurityPass(),
+    ]

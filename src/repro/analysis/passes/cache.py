@@ -1,0 +1,159 @@
+"""cache-tier: PostingCache tier dicts are touched only by their owner.
+
+The three tiers (``_map`` host entries, ``_partials`` prefix+resume,
+``_device`` decoded rows) share one byte budget, one eviction clock and
+one invalidation path; an outside writer that pokes a tier dict skips
+the charge/evict/freeze bookkeeping, and an admit of a still-writeable
+array lets the caller mutate bytes other queries will later be served
+(the stale-cache-admit bug class of PR 5/8).  Admission goes through
+``put``/``put_partial``/``put_device`` inside the cache modules, and
+every host-tier value is detached via ``_frozen``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from repro.analysis.allowlists import (
+    CACHE_TIER_ATTRS,
+    CACHE_TIER_MODULES,
+    in_allowlist,
+)
+from repro.analysis.engine import LintPass
+from repro.analysis.schema import Finding
+
+_HOST_TIERS = ("_map", "_partials")
+
+
+def _contains_frozen_call(node: ast.AST) -> bool:
+    return any(
+        isinstance(n, ast.Call)
+        and (
+            (isinstance(n.func, ast.Name) and n.func.id == "_frozen")
+            or (isinstance(n.func, ast.Attribute) and n.func.attr == "_frozen")
+        )
+        for n in ast.walk(node)
+    )
+
+
+def _receiver_text(node: ast.AST) -> str:
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return ""
+
+
+class CacheTierPass(LintPass):
+    id = "cache-tier"
+
+    def run(self, tree: ast.AST, path: str, src: str) -> List[Finding]:
+        inside = in_allowlist(path, CACHE_TIER_MODULES)
+        out: List[Finding] = []
+        if not inside:
+            out.extend(self._check_outside(tree, path))
+        out.extend(self._check_admits(tree, path, inside))
+        return out
+
+    # ------------------------------------------------- encapsulation ------
+    def _check_outside(self, tree: ast.AST, path: str) -> List[Finding]:
+        """Outside the cache modules, any access to a tier dict on a
+        non-self base is a breach (self is exempt so unrelated classes
+        may use the same private names for their own state)."""
+        out: List[Finding] = []
+        for node in ast.walk(tree):
+            if (
+                isinstance(node, ast.Attribute)
+                and node.attr in CACHE_TIER_ATTRS
+                and not (
+                    isinstance(node.value, ast.Name)
+                    and node.value.id in ("self", "cls")
+                )
+            ):
+                out.append(self.finding(
+                    path, node,
+                    f"access to PostingCache tier `.{node.attr}` outside "
+                    f"{', '.join(sorted(CACHE_TIER_MODULES))}; tiers share "
+                    f"one budget/eviction/freeze path — go through "
+                    f"get/put/drop",
+                ))
+            if (
+                isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in ("put_partial", "put_device")
+            ):
+                out.append(self.finding(
+                    path, node,
+                    f"`{node.func.attr}(...)` called outside the cache "
+                    f"modules; partial/device admission is the reader's "
+                    f"settle/refresh path, not a public API",
+                ))
+            if (
+                isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "put"
+                and "cache" in _receiver_text(node.func.value).lower()
+            ):
+                out.append(self.finding(
+                    path, node,
+                    "cache `.put(...)` outside the cache modules; only the "
+                    "reader admits (admit-time generation re-checks live "
+                    "there)",
+                ))
+        return out
+
+    # ------------------------------------------------ frozen admission ----
+    def _check_admits(
+        self, tree: ast.AST, path: str, inside: bool
+    ) -> List[Finding]:
+        """Host-tier assignments must store ``_frozen(...)`` values — the
+        value expression contains the call, or the assigned name's most
+        recent binding does."""
+        if not inside:
+            return []
+        out: List[Finding] = []
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Assign):
+                continue
+            for t in node.targets:
+                if not (
+                    isinstance(t, ast.Subscript)
+                    and isinstance(t.value, ast.Attribute)
+                    and t.value.attr in _HOST_TIERS
+                ):
+                    continue
+                if _contains_frozen_call(node.value):
+                    continue
+                name = (
+                    node.value.id
+                    if isinstance(node.value, ast.Name)
+                    else None
+                )
+                if name and self._name_frozen_before(tree, name, node.lineno):
+                    continue
+                out.append(self.finding(
+                    path, t,
+                    f"tier `.{t.value.attr}` stores a value not detached "
+                    f"via `_frozen(...)`; a writeable admit lets the "
+                    f"caller mutate cached bytes",
+                ))
+        return out
+
+    @staticmethod
+    def _name_frozen_before(
+        tree: ast.AST, name: str, line: int
+    ) -> bool:
+        best: Optional[ast.Assign] = None
+        for node in ast.walk(tree):
+            if (
+                isinstance(node, ast.Assign)
+                and node.lineno < line
+                and any(
+                    isinstance(t, ast.Name) and t.id == name
+                    for t in node.targets
+                )
+            ):
+                if best is None or node.lineno > best.lineno:
+                    best = node
+        return best is not None and _contains_frozen_call(best.value)

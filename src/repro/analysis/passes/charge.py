@@ -1,0 +1,58 @@
+"""charge-accounting: every device byte is charged at a chokepoint.
+
+The paper's cost model only means anything because every read/write
+against the simulated :class:`BlockDevice` flows through StreamManager /
+InvertedIndex / the store, where ``IOStats`` charges it.  A module that
+calls a device method directly (or pokes an ``IOStats`` field) creates
+I/O the benchmarks never see — the silent-uncharged-read bug class.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.analysis.allowlists import (
+    CHARGE_CHOKEPOINT_MODULES,
+    DEVICE_METHODS,
+    IOSTATS_FIELDS,
+    in_allowlist,
+)
+from repro.analysis.engine import LintPass
+from repro.analysis.schema import Finding
+
+
+class ChargeAccountingPass(LintPass):
+    id = "charge-accounting"
+
+    def run(self, tree: ast.AST, path: str, src: str) -> List[Finding]:
+        if in_allowlist(path, CHARGE_CHOKEPOINT_MODULES):
+            return []
+        out: List[Finding] = []
+        for node in ast.walk(tree):
+            if (
+                isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in DEVICE_METHODS
+            ):
+                out.append(self.finding(
+                    path, node,
+                    f"direct device I/O `{node.func.attr}(...)` outside the "
+                    f"charge chokepoints "
+                    f"({', '.join(sorted(CHARGE_CHOKEPOINT_MODULES))}); "
+                    f"route the read through StreamManager/IndexReader so "
+                    f"it is charged",
+                ))
+            targets = ()
+            if isinstance(node, ast.Assign):
+                targets = node.targets
+            elif isinstance(node, ast.AugAssign):
+                targets = (node.target,)
+            for t in targets:
+                if isinstance(t, ast.Attribute) and t.attr in IOSTATS_FIELDS:
+                    out.append(self.finding(
+                        path, t,
+                        f"write to IOStats field `.{t.attr}` outside the "
+                        f"charge chokepoints bypasses the I/O ledger",
+                    ))
+        return out

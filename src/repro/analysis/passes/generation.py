@@ -1,0 +1,130 @@
+"""generation-discipline: ``n_parts`` is not a snapshot coordinate.
+
+PR 9's aliasing bug: readers tracked the physical part counter
+``n_parts`` as if it were the published generation, and a checkpoint
+reopen that collapses many parts into one left ``n_parts`` equal while
+every posting list had been rewritten — caches served stale bytes with
+no invalidation.  ``InvertedIndex.generation`` is the only publication
+coordinate; only the index itself (and ``restore_generation``, replaying
+a manifest) may advance it.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.analysis.allowlists import (
+    GENERATION_WRITER_MODULES,
+    in_allowlist,
+)
+from repro.analysis.engine import LintPass
+from repro.analysis.schema import Finding
+
+_SNAPSHOTTY = ("generation", "snapshot")
+
+
+def _mentions_n_parts(node: ast.AST) -> bool:
+    return any(
+        isinstance(n, ast.Attribute) and n.attr == "n_parts"
+        for n in ast.walk(node)
+    )
+
+
+def _snapshotty_name(node: ast.AST) -> bool:
+    """Whether an expression's identifiers suggest a generation/snapshot
+    coordinate (``gen``, ``generation``, ``snapshot``, ...)."""
+    for n in ast.walk(node):
+        text = ""
+        if isinstance(n, ast.Name):
+            text = n.id
+        elif isinstance(n, ast.Attribute):
+            text = n.attr
+        low = text.lower()
+        if (
+            low.startswith("gen")
+            or "_gen" in low
+            or "snap" in low
+            or any(s in low for s in _SNAPSHOTTY)
+        ):
+            return True
+    return False
+
+
+class GenerationDisciplinePass(LintPass):
+    id = "generation-discipline"
+
+    def run(self, tree: ast.AST, path: str, src: str) -> List[Finding]:
+        out: List[Finding] = []
+        gen_writer = in_allowlist(path, GENERATION_WRITER_MODULES)
+        for node in ast.walk(tree):
+            targets = ()
+            value = None
+            if isinstance(node, ast.Assign):
+                targets, value = node.targets, node.value
+            elif isinstance(node, ast.AugAssign):
+                targets, value = (node.target,), node.value
+            for t in targets:
+                if (
+                    isinstance(t, ast.Attribute)
+                    and t.attr == "generation"
+                    and not gen_writer
+                ):
+                    out.append(self.finding(
+                        path, t,
+                        "write to `.generation` outside InvertedIndex / "
+                        "restore_generation; the published generation is "
+                        "the index's to advance",
+                    ))
+                # snapshot-named target fed from n_parts
+                if (
+                    _snapshotty_name(t)
+                    and value is not None
+                    and _mentions_n_parts(value)
+                ):
+                    out.append(self.finding(
+                        path, t,
+                        "generation/snapshot coordinate derived from "
+                        "`.n_parts`; use the published `.generation` "
+                        "(checkpoint reopens collapse parts — the PR 9 "
+                        "aliasing class)",
+                    ))
+            if isinstance(node, ast.Compare):
+                operands = [node.left] + list(node.comparators)
+                if any(_mentions_n_parts(o) for o in operands) and any(
+                    _snapshotty_name(o) for o in operands
+                ):
+                    out.append(self.finding(
+                        path, node,
+                        "`.n_parts` compared against a generation/snapshot "
+                        "coordinate; part counts alias across checkpoint "
+                        "reopens (PR 9)",
+                    ))
+            if (
+                isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "restore_generation"
+                and any(_mentions_n_parts(a) for a in node.args)
+            ):
+                out.append(self.finding(
+                    path, node,
+                    "restore_generation() fed from `.n_parts`; persist and "
+                    "replay the published generation vector instead",
+                ))
+            # dict-literal persistence: {"generation...": <n_parts expr>}
+            if isinstance(node, ast.Dict):
+                for k, v in zip(node.keys, node.values):
+                    if (
+                        isinstance(k, ast.Constant)
+                        and isinstance(k.value, str)
+                        and any(s in k.value.lower() for s in _SNAPSHOTTY)
+                        and v is not None
+                        and _mentions_n_parts(v)
+                    ):
+                        out.append(self.finding(
+                            path, k,
+                            f"persisting `.n_parts` under key {k.value!r}; "
+                            f"a part count is not a snapshot coordinate "
+                            f"(PR 9)",
+                        ))
+        return out

@@ -1,0 +1,254 @@
+"""kernel-purity: kernels and jitted functions stay deterministic.
+
+The cross-backend identity tests (numpy == jax == pallas) are the
+repo's ground truth; they only hold if kernel code has no Python-level
+nondeterminism (wall clock, ``random``, dict-ordering iteration) and no
+data-dependent Python branching on traced values — a branch on a traced
+operand either crashes under ``jit`` or, worse, bakes one trace-time
+path into the compiled function.  Static arguments (declared via
+``static_argnames``/``static_argnums``) are concrete at trace time and
+exempt, as are shape/dtype attributes.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from repro.analysis.allowlists import in_kernel_scope
+from repro.analysis.engine import LintPass
+from repro.analysis.schema import Finding
+
+_SHAPE_ATTRS = {"shape", "ndim", "dtype", "size"}
+_NONDET_MODULES = {"time", "random"}
+
+
+def _ends_with_jit(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Name) and node.id == "jit") or (
+        isinstance(node, ast.Attribute) and node.attr == "jit"
+    )
+
+
+def _const_strs(node: ast.AST) -> List[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return [
+            e.value for e in node.elts
+            if isinstance(e, ast.Constant) and isinstance(e.value, str)
+        ]
+    return []
+
+
+def _const_ints(node: ast.AST) -> List[int]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return [
+            e.value for e in node.elts
+            if isinstance(e, ast.Constant) and isinstance(e.value, int)
+        ]
+    return []
+
+
+def _statics_from_jit_kwargs(
+    kwargs: List[ast.keyword], params: List[str]
+) -> Set[str]:
+    statics: Set[str] = set()
+    for kw in kwargs:
+        if kw.arg == "static_argnames":
+            statics.update(_const_strs(kw.value))
+        elif kw.arg == "static_argnums":
+            for i in _const_ints(kw.value):
+                if 0 <= i < len(params):
+                    statics.add(params[i])
+    return statics
+
+
+class KernelPurityPass(LintPass):
+    id = "kernel-purity"
+
+    def run(self, tree: ast.AST, path: str, src: str) -> List[Finding]:
+        out: List[Finding] = []
+        kernel_mod = in_kernel_scope(path)
+        if kernel_mod:
+            out.extend(self._check_imports(tree, path))
+        # names wrapped with jax.jit(f) as an expression (not a decorator)
+        wrapped: Dict[str, List[ast.keyword]] = {}
+        for node in ast.walk(tree):
+            if (
+                isinstance(node, ast.Call)
+                and _ends_with_jit(node.func)
+                and node.args
+                and isinstance(node.args[0], ast.Name)
+            ):
+                wrapped[node.args[0].id] = node.keywords
+        for node in ast.walk(tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            statics = self._jit_statics(node, wrapped)
+            jitted = statics is not None
+            if not (jitted or kernel_mod):
+                continue
+            out.extend(self._check_dict_iteration(node, path))
+            if not kernel_mod:
+                out.extend(self._check_nondet_calls(node, path))
+            if jitted:
+                out.extend(self._check_branches(node, path, statics))
+        return out
+
+    # -------------------------------------------------------------------
+    def _check_imports(self, tree: ast.AST, path: str) -> List[Finding]:
+        out: List[Finding] = []
+        for node in ast.walk(tree):
+            names: List[str] = []
+            if isinstance(node, ast.Import):
+                names = [a.name.split(".")[0] for a in node.names]
+            elif isinstance(node, ast.ImportFrom):
+                names = [(node.module or "").split(".")[0]]
+            for n in names:
+                if n in _NONDET_MODULES:
+                    out.append(self.finding(
+                        path, node,
+                        f"kernel module imports `{n}`; kernels must be "
+                        f"deterministic (cross-backend identity depends "
+                        f"on it)",
+                    ))
+            if (
+                isinstance(node, ast.Attribute)
+                and node.attr == "random"
+                and isinstance(node.value, ast.Name)
+                and node.value.id in ("np", "numpy", "jnp")
+            ):
+                out.append(self.finding(
+                    path, node,
+                    "numpy/jax `random` used in a kernel module; seed-free "
+                    "randomness breaks cross-backend identity",
+                ))
+        return out
+
+    def _check_nondet_calls(
+        self, fn: ast.AST, path: str
+    ) -> List[Finding]:
+        out: List[Finding] = []
+        for node in ast.walk(fn):
+            if (
+                isinstance(node, ast.Attribute)
+                and isinstance(node.value, ast.Name)
+                and (
+                    node.value.id in _NONDET_MODULES
+                    or (
+                        node.attr == "random"
+                        and node.value.id in ("np", "numpy", "jnp")
+                    )
+                )
+            ):
+                out.append(self.finding(
+                    path, node,
+                    f"nondeterministic `{node.value.id}.{node.attr}` inside "
+                    f"a jitted function",
+                ))
+        return out
+
+    def _check_dict_iteration(
+        self, fn: ast.AST, path: str
+    ) -> List[Finding]:
+        out: List[Finding] = []
+        iters: List[ast.AST] = []
+        for node in ast.walk(fn):
+            if isinstance(node, ast.For):
+                iters.append(node.iter)
+            elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                                   ast.GeneratorExp)):
+                iters.extend(gen.iter for gen in node.generators)
+        for it in iters:
+            if (
+                isinstance(it, ast.Call)
+                and isinstance(it.func, ast.Attribute)
+                and it.func.attr in ("keys", "items", "values")
+            ):
+                out.append(self.finding(
+                    path, it,
+                    f"iteration over dict `.{it.func.attr}()` without "
+                    f"`sorted(...)`; dict order is insertion order, not a "
+                    f"deterministic function of the contents",
+                ))
+        return out
+
+    def _jit_statics(
+        self,
+        fn: ast.AST,
+        wrapped: Dict[str, List[ast.keyword]],
+    ) -> Optional[Set[str]]:
+        """The set of static parameter names if ``fn`` is jitted (via a
+        decorator or a ``jax.jit(fn)`` wrap in the same module), else
+        ``None``."""
+        params = [
+            a.arg for a in fn.args.posonlyargs + fn.args.args
+        ]
+        for dec in fn.decorator_list:
+            if _ends_with_jit(dec):
+                return set()
+            if isinstance(dec, ast.Call):
+                if _ends_with_jit(dec.func):
+                    return _statics_from_jit_kwargs(dec.keywords, params)
+                # functools.partial(jax.jit, static_argnames=...)
+                if (
+                    (
+                        isinstance(dec.func, ast.Name)
+                        and dec.func.id == "partial"
+                    )
+                    or (
+                        isinstance(dec.func, ast.Attribute)
+                        and dec.func.attr == "partial"
+                    )
+                ) and dec.args and _ends_with_jit(dec.args[0]):
+                    return _statics_from_jit_kwargs(dec.keywords, params)
+        if fn.name in wrapped:
+            return _statics_from_jit_kwargs(wrapped[fn.name], params)
+        return None
+
+    def _check_branches(
+        self, fn: ast.AST, path: str, statics: Set[str]
+    ) -> List[Finding]:
+        params = {
+            a.arg for a in fn.args.posonlyargs + fn.args.args
+            + fn.args.kwonlyargs
+        }
+        params.discard("self")
+        traced = params - statics
+        out: List[Finding] = []
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.If, ast.While)):
+                name = self._traced_ref(node.test, traced)
+                if name:
+                    out.append(self.finding(
+                        path, node,
+                        f"Python branch on traced value `{name}` inside a "
+                        f"jitted function; use jnp.where/lax.cond or "
+                        f"declare the argument static",
+                    ))
+        return out
+
+    @classmethod
+    def _traced_ref(
+        cls, node: ast.AST, traced: Set[str]
+    ) -> Optional[str]:
+        """First traced parameter referenced by ``node`` outside a
+        shape/dtype attribute or ``len(...)`` (both concrete at trace
+        time)."""
+        if isinstance(node, ast.Attribute) and node.attr in _SHAPE_ATTRS:
+            return None  # q.shape[0] etc: static under jit
+        if (
+            isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Name)
+            and node.func.id == "len"
+        ):
+            return None
+        if isinstance(node, ast.Name) and node.id in traced:
+            return node.id
+        for child in ast.iter_child_nodes(node):
+            hit = cls._traced_ref(child, traced)
+            if hit:
+                return hit
+        return None

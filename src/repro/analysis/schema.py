@@ -1,0 +1,44 @@
+"""Finding model and output formats for ``repro.analysis``.
+
+A finding is one violation at one source line.  The text format is the
+stable machine interface (``file:line pass-id message``, one per line);
+``--json`` emits the same records as a JSON array for tooling that wants
+structure without parsing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    """One lint violation, ordered (file, line, pass) for stable output."""
+
+    file: str
+    line: int
+    pass_id: str
+    message: str
+
+    def render(self) -> str:
+        return f"{self.file}:{self.line} {self.pass_id} {self.message}"
+
+    def to_dict(self) -> Dict[str, object]:
+        return {
+            "file": self.file,
+            "line": self.line,
+            "pass": self.pass_id,
+            "message": self.message,
+        }
+
+
+def render_text(findings: List[Finding]) -> str:
+    return "\n".join(f.render() for f in sorted(findings))
+
+
+def render_json(findings: List[Finding]) -> str:
+    return json.dumps(
+        [f.to_dict() for f in sorted(findings)], indent=2, sort_keys=True
+    )

@@ -153,15 +153,10 @@ class PostingCache:
         part = self._partials.pop(slot, None)
         if part is not None:
             self.stats.bytes_used -= self._partial_charge(*part)
-        owner = arr if arr.base is None else arr.base
-        if not isinstance(owner, np.ndarray) or owner.flags.writeable:
-            # an entry whose BUFFER is still writeable is not immutable:
-            # the caller can mutate through the owner it still holds, or
-            # flip a view's writeable flag back on (numpy allows that
-            # while the base is writeable) — detach the cache's copy
-            arr = arr.copy()
-        arr = arr.view()
-        arr.flags.writeable = False
+        # detach through a view so _frozen can never flip the CALLER's
+        # handle read-only: put() borrows the array, it does not take
+        # ownership (a writeable owner forces _frozen to copy instead)
+        arr = _frozen(arr.view())
         self._map[slot] = arr
         self.stats.bytes_used += self._charge(arr)
         self._evict()
@@ -325,7 +320,8 @@ class ReaderCursor:
         self._on_partial = on_partial
         self._parts: List[np.ndarray] = []
         self._completed = False
-        self.generation = generation
+        # open-time snapshot pin, read-only record — not an advance
+        self.generation = generation  # repro-lint: allow(generation-discipline)
 
     def next_chunk(self) -> Optional[np.ndarray]:
         chunk = self._inner.next_chunk()

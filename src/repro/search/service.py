@@ -69,6 +69,7 @@ from repro.core.inverted_index import PostingCursor
 from repro.kernels.posting_decode.ops import DeviceDecoder
 from repro.search.pool import ChunkPool
 from repro.search.reader import IndexSetReader, ShardedIndexSetReader
+from repro.search.schema import validate_trace
 from repro.search.replica import ReplicaSetReader
 from repro.search.scoring import (
     doc_counts,
@@ -888,6 +889,12 @@ class SearchService:
         edit that drops a wave without accounting for it fails loudly
         instead of masquerading as saved I/O."""
         tr = self.last_trace
+        # schema gate first: the runtime trace and the static registry in
+        # repro.search.schema must agree on the key set, so an undeclared
+        # key fails here even when no completeness partition involves it
+        msg = validate_trace(tr)
+        if msg:
+            raise TraceIncompleteError(msg)
         if "snapshot" not in tr:
             raise TraceIncompleteError(
                 "trace carries no pinned snapshot generation vector"

@@ -317,4 +317,13 @@ def run_live_update_rounds(
                     ctx=(ctx, "backend", b, "part", i, "query", qi),
                     check_scanned=queries[qi].top_k is None,
                 )
+        # durable substrates hold a WAL file open; release each round's
+        # throwaway rebuild (and the live one below) so dev-mode runs
+        # stay ResourceWarning-clean
+        closer = getattr(fresh, "close", None)
+        if closer is not None:
+            closer()
+    closer = getattr(live, "close", None)
+    if closer is not None:
+        closer()
     return svcs

@@ -137,13 +137,23 @@ def test_part_codecs_roundtrip():
 
 
 # ------------------------------------------------------------------- the WAL --
+def _recover(path, start=0):
+    """Open a throwaway WAL, recover, and CLOSE it (dev-mode runs treat
+    a leaked BufferedWriter as a ResourceWarning)."""
+    w = WriteAheadLog(path, fsync=False)
+    try:
+        return w.recover(start)
+    finally:
+        w.close()
+
+
 def test_wal_torn_tail_truncated_and_appendable(tmp_path):
     path = tmp_path / "wal.log"
     w = WriteAheadLog(path, fsync=False)
     offs = [w.append(1, bytes([i]) * (20 + 7 * i)) for i in range(5)]
     w.close()
 
-    recs, good, torn = WriteAheadLog(path, fsync=False).recover(0)
+    recs, good, torn = _recover(path)
     assert len(recs) == 5 and not torn and good == offs[-1]
 
     # crash tore the last record: every cut inside it yields the same
@@ -159,11 +169,11 @@ def test_wal_torn_tail_truncated_and_appendable(tmp_path):
     end = w3.append(2, b"after")
     assert end == offs[3] + HEADER_BYTES + 5 == w3.tell()
     w3.close()
-    recs, _, torn = WriteAheadLog(path, fsync=False).recover(0)
+    recs, _, torn = _recover(path)
     assert [t for t, _ in recs] == [1, 1, 1, 1, 2] and not torn
 
     # a start offset beyond the physical end reports torn, yields nothing
-    recs, good, torn = WriteAheadLog(path, fsync=False).recover(end + 100)
+    recs, good, torn = _recover(path, end + 100)
     assert recs == [] and good == end and torn
 
 
@@ -179,7 +189,7 @@ def test_wal_rejects_corrupted_payload(tmp_path):
     with open(path, "rb+") as fh:
         fh.seek(mid - 10)
         fh.write(b"X")
-    recs, good, torn = WriteAheadLog(path, fsync=False).recover(0)
+    recs, good, torn = _recover(path)
     assert [p for _, p in recs] == [b"a" * 50] and torn
     assert good == path.stat().st_size
 
